@@ -1,0 +1,50 @@
+"""Shared benchmark utilities.
+
+CPU-container caveat (DESIGN.md §8): absolute Top/s are meaningless here;
+what transfers to hardware is (a) the *relative* fused-vs-naive structure
+gap (kernel-launch count + INT32 materialization), (b) the measured
+effective precision, and (c) the analytical traffic/intensity columns
+from the paper's Eqs. 9/10/14/15/17/18 — all of which these benchmarks
+report side by side.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds of fn(*args) (blocked until ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def effective_tflops(n: int, seconds: float) -> float:
+    """Paper Sec. V-B: 2N^3 reference workload / runtime."""
+    return 2.0 * n ** 3 / seconds / 1e12
+
+
+def bits_of_precision(out: np.ndarray, ref: np.ndarray) -> float:
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    return float(-np.log2(rel)) if rel > 0 else 60.0
+
+
+def conditioned(rng, shape, phi=4.0, dtype=np.float32):
+    """Paper Eq. 19 inputs with the paper's phi=4.0 conditioning."""
+    return ((rng.random(shape) - 0.5)
+            * np.exp(phi * rng.standard_normal(shape))).astype(dtype)
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

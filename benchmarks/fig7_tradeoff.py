@@ -1,0 +1,66 @@
+"""Paper Fig. 7: precision–throughput–memory trade-off at one size.
+
+Projects native baselines, Scheme I (p=1..8) and Scheme II (p=8..15) onto
+(bits, effective Tflop/s, workspace bytes); the derived column carries the
+workspace from the paper's Sec. V-F accounting, which must show Scheme II
+above Scheme I at matched p.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheme1, scheme2, traffic
+from repro.core.precision import EmulationConfig, plan_precision
+from repro.core.traffic import GemmShape
+
+from benchmarks.common import (bits_of_precision, conditioned, csv_row,
+                               effective_tflops, time_fn)
+
+
+def main(quick: bool = True):
+    rng = np.random.default_rng(3)
+    n = 512 if quick else 1024
+    s = GemmShape(n, n, n)
+    a = conditioned(rng, (n, n))
+    b = conditioned(rng, (n, n))
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    rows = []
+
+    for p in (1, 2, 4, 8):
+        cfg = EmulationConfig(scheme="ozaki1", p=p)
+        f = jax.jit(lambda x, y, cfg=cfg: scheme1.matmul(x, y, cfg,
+                                                         jnp.float32))
+        t = time_fn(f, aj, bj)
+        bits = bits_of_precision(np.asarray(f(aj, bj)), ref)
+        ws = traffic.scheme1_workspace_bytes(s, p)
+        csv_row(f"fig7_emu1_p{p}", t * 1e6,
+                f"bits={bits:.1f};tflops={effective_tflops(n, t):.3f};"
+                f"workspace_mb={ws / 1e6:.1f}")
+        rows.append(("emu1", p, bits, ws))
+
+    for p in (8, 10, 12, 15):
+        cfg = EmulationConfig(scheme="ozaki2", p=p)
+        f = jax.jit(lambda x, y, cfg=cfg: scheme2.matmul(x, y, cfg,
+                                                         jnp.float32))
+        t = time_fn(f, aj, bj)
+        bits = bits_of_precision(np.asarray(f(aj, bj)), ref)
+        ws = traffic.scheme2_workspace_bytes(s, p)
+        csv_row(f"fig7_emu2_p{p}", t * 1e6,
+                f"bits={bits:.1f};tflops={effective_tflops(n, t):.3f};"
+                f"workspace_mb={ws / 1e6:.1f}")
+        rows.append(("emu2", p, bits, ws))
+
+    # the planner = the paper's crossover, automated
+    for target in (20, 45):
+        cfg = plan_precision(target, n)
+        csv_row(f"fig7_planner_{target}bits", 0.0,
+                f"scheme={cfg.scheme};p={cfg.p}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows. --full sweeps the paper's
+larger sizes (slow on CPU); default is the quick grid.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="fig4|fig5|fig6|fig7|tab2")
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_intensity, fig5_grid, fig6_scheme2,
+                            fig7_tradeoff, tab2_counts)
+    modules = {"fig4": fig4_intensity, "fig5": fig5_grid,
+               "fig6": fig6_scheme2, "fig7": fig7_tradeoff,
+               "tab2": tab2_counts}
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        mod.main(quick=not args.full)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

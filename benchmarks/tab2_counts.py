@@ -1,0 +1,31 @@
+"""Paper Table II: scheme comparison — GEMM counts, scaling, precision."""
+
+from __future__ import annotations
+
+from repro.core import complex3m
+from repro.core.precision import EmulationConfig, default_moduli, \
+    scheme2_bits, safe_beta
+
+from benchmarks.common import csv_row
+
+
+def main(quick: bool = True):
+    k = 4096
+    beta = safe_beta(k)
+    rows = []
+    for p in (2, 4, 8, 15):
+        c1 = EmulationConfig(scheme="ozaki1", p=p)
+        c2 = EmulationConfig(scheme="ozaki2", p=p)
+        csv_row(f"tab2_p{p}", 0.0,
+                f"s1_gemms={c1.gemm_count()};s2_gemms={c2.gemm_count()};"
+                f"s1_bits~{p * beta};s2_bits~"
+                f"{scheme2_bits(default_moduli(p), k)};"
+                f"s2_3m_gemms={complex3m.gemm_count(c2)}")
+        rows.append((p, c1.gemm_count(), c2.gemm_count()))
+    assert all(r[1] == r[0] * (r[0] + 1) // 2 for r in rows)
+    assert all(r[2] == r[0] for r in rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,47 @@
+"""Scientific-computing scenario: FP64-grade GEMM on int8 hardware.
+
+TPUs have NO native FP64 matrix units at all — the precision-throughput
+gap the paper worries about is strictly worse than on GPUs. This example
+emulates double-precision GEMM from int8 products (Scheme II, p=15) and
+compares its accuracy against a true float64 matmul on ill-conditioned
+inputs.
+
+  PYTHONPATH=src python examples/scientific_dgemm.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import scheme2
+from repro.core.precision import EmulationConfig
+
+
+def main():
+    rng = np.random.default_rng(7)
+    n = 512
+    with jax.experimental.enable_x64():
+        a = ((rng.random((n, n)) - 0.5)
+             * np.exp(4.0 * rng.standard_normal((n, n))))
+        b = ((rng.random((n, n)) - 0.5)
+             * np.exp(4.0 * rng.standard_normal((n, n))))
+        ref = a.astype(np.longdouble) @ b.astype(np.longdouble)
+
+        f64 = np.asarray(jnp.asarray(a) @ jnp.asarray(b))
+        for p in (9, 12, 15):
+            cfg = EmulationConfig(scheme="ozaki2", p=p)
+            emu = np.asarray(scheme2.matmul(jnp.asarray(a), jnp.asarray(b),
+                                            cfg, jnp.float64))
+            for name, c in (("native f64", f64), (f"Ozaki-II p={p}", emu)):
+                rel = float(np.abs(c.astype(np.longdouble) - ref).max()
+                            / np.abs(ref).max())
+                print(f"{name:16s}: {-np.log2(rel):5.1f} effective bits "
+                      f"({cfg.gemm_count() if 'Ozaki' in name else 1} GEMMs)")
+            print()
+    print("On TPU v5e the int8 path peaks at 394 Top/s vs no FP64 MXU at "
+          "all;\n15 int8 GEMMs at ~50 effective bits is the only "
+          "double-precision-class\nmatmul the hardware offers.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-parameter LM with every dense
+projection running on the paper's emulated int8 GEMM path.
+
+  PYTHONPATH=src python examples/train_emulated_lm.py --steps 300
+
+(Use --small for a quick CPU demo; the 100M config at the default
+300 steps takes a while on CPU, the point is that the full pipeline —
+data, sharded step, emulated matmuls, checkpoints, resume — is exercised
+by one command.)
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ArchConfig, ModelConfig, ShapeSpec, TrainPolicy
+from repro.data import make_batch_iterator
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.optim import make_optimizer
+from repro.runtime import Trainer
+
+LM_100M = ArchConfig(
+    model=ModelConfig(
+        name="lm-100m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        d_ff=3072, vocab=32768, norm="rms", act="swiglu",
+        tie_embeddings=True, q_chunk=256, kv_chunk=256),
+    train=TrainPolicy(microbatches=1, learning_rate=3e-4),
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--gemm", default="ozaki1-p3",
+                    help="every dense projection runs through this")
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args(argv)
+
+    arch = LM_100M
+    if args.small:
+        arch = dataclasses.replace(arch, model=dataclasses.replace(
+            arch.model, n_layers=4, d_model=256, n_heads=4, n_kv_heads=4,
+            d_ff=1024, vocab=4096))
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    mesh = make_host_mesh()
+    policy = GemmPolicy(default=parse_gemm_spec(args.gemm))
+    opt_init, _ = make_optimizer(arch.train.optimizer)
+
+    def init_state():
+        params = M.init_params(jax.random.PRNGKey(0), arch.model)
+        print(f"[100m] {M.param_count(params) / 1e6:.1f}M parameters, "
+              f"gemm backend = {args.gemm}")
+        return {"params": params, "opt": opt_init(params)}
+
+    with mesh:
+        trainer = Trainer(
+            step_fn=S.make_train_step(arch, mesh, shape, policy,
+                                      donate=False),
+            init_state_fn=init_state,
+            batch_iterator=make_batch_iterator(arch, shape),
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=50)
+        log = trainer.run(args.steps)
+        trainer.close()
+    print(f"[100m] loss {log[0]['loss']:.4f} -> {log[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: EmuGEMM (Ozaki Scheme I/II precision emulation) on TPU in JAX."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,113 @@
+"""Atomic, shardable, mesh-elastic checkpoints.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json   (+ tmp dirs during
+writes, renamed atomically on completion). Arrays are stored *logically*
+(unsharded) keyed by their pytree path, so a checkpoint written on a
+(16,16) mesh restores onto (2,16,16) — or a single CPU — unchanged:
+``restore`` re-device_puts every leaf under the target sharding
+(elastic re-mesh). Saves can run on a background thread off the step
+path (async checkpointing); the previous save is joined before a new one
+starts and on ``close``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        out[key] = leaf
+    return out, flat[1]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, state) -> None:
+        self.wait()
+        flat, _ = _flatten(state)
+        # Snapshot to host memory synchronously (cheap vs the write), so
+        # the training step can continue while the file IO happens async.
+        arrays = {k: np.asarray(v) for k, v in flat.items()}
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "keys": sorted(arrays)}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)   # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like, shardings=None):
+        """Restore into the structure of ``like`` (arrays or
+        ShapeDtypeStructs); ``shardings`` optionally re-shards every leaf
+        onto a (possibly different) mesh — the elastic path."""
+        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
+        data = np.load(path)
+        flat, treedef = _flatten(like)
+        sflat = _flatten(shardings)[0] if shardings is not None else {}
+        leaves = []
+        for key in flat:
+            arr = data[key]
+            if key in sflat:
+                arr = jax.device_put(arr, sflat[key])
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def close(self) -> None:
+        self.wait()

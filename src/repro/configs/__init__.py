@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig.
+
+Each assigned architecture lives in its own module with the exact
+published configuration plus a reduced ``smoke()`` variant for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ALL_SHAPES, ArchConfig, ModelConfig,  # noqa
+                                ShapeSpec, TrainPolicy)
+
+ARCH_IDS = (
+    "hubert-xlarge",
+    "granite-3-8b",
+    "deepseek-coder-33b",
+    "olmo-1b",
+    "qwen1.5-32b",
+    "internvl2-1b",
+    "qwen2-moe-a2.7b",
+    "deepseek-v3-671b",
+    "recurrentgemma-2b",
+    "mamba2-780m",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ArchConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ArchConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).smoke()

@@ -1,0 +1,12 @@
+"""EmuGEMM core: Ozaki Scheme I/II precision-emulated GEMM in JAX."""
+
+from repro.core.precision import (  # noqa: F401
+    DEFAULT_MODULI,
+    EmulationConfig,
+    NATIVE,
+    default_moduli,
+    plan_precision,
+    safe_beta,
+    scheme2_budget,
+)
+from repro.core.emulated import emulated_dot  # noqa: F401

@@ -1,0 +1,157 @@
+"""Precision planning for Ozaki-scheme emulated GEMM.
+
+This module owns the *numerical* side of the emulation configuration:
+
+* ``safe_beta(K)``       — largest per-slice bit-width such that a K-long
+  int8xint8 dot accumulates exactly in int32 (Scheme I).
+* ``default_moduli(p)``  — pairwise-coprime moduli <= 256 (Scheme II).
+* ``scheme2_budget``     — per-operand integer bit budget under the CRT
+  exactness bound 2 * K * max|A'| * max|B'| < P.
+* ``plan_precision``     — the Fig.-7 crossover automated: pick scheme + p
+  for a target precision (the cuBLAS-ADP analogue the paper lacks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+# Pairwise coprime moduli <= 256, descending. 256 = 2^8; 255 = 3*5*17;
+# 253 = 11*23; 247 = 13*19; the rest are primes. Pairwise coprimality is
+# asserted by tests/test_scheme2.py::test_moduli_coprime.
+DEFAULT_MODULI: tuple[int, ...] = (
+    256, 255, 253, 251, 247, 241, 239, 233, 229, 227, 223, 211, 199, 197, 193,
+    191,
+)
+
+Scheme = Literal["native", "ozaki1", "ozaki2"]
+
+
+def safe_beta(k_dim: int, max_beta: int = 7) -> int:
+    """Largest slice bit-width with exact int32 accumulation over ``k_dim``.
+
+    Each product of two beta-bit signed slices is bounded by (2^beta - 1)^2;
+    summing ``k_dim`` of them must stay below 2^31.
+    """
+    if k_dim <= 0:
+        raise ValueError(f"k_dim must be positive, got {k_dim}")
+    beta = int((31 - math.ceil(math.log2(k_dim))) // 2)
+    return max(1, min(max_beta, beta))
+
+
+def default_moduli(p: int) -> tuple[int, ...]:
+    if not 1 <= p <= len(DEFAULT_MODULI):
+        raise ValueError(f"p={p} out of range [1, {len(DEFAULT_MODULI)}]")
+    return DEFAULT_MODULI[:p]
+
+
+def scheme2_budget(moduli: Sequence[int], k_dim: int,
+                   complex_guard: bool = False) -> int:
+    """Per-operand magnitude bit budget for exact CRT reconstruction.
+
+    Bound: 2 * K * 2^bits_a * 2^bits_b < P  (one extra bit for the signed
+    range mapping; one more for 3M complex where C_im sums two products).
+    """
+    log2_p_prod = sum(math.log2(m) for m in moduli)
+    guard = 2 + (1 if complex_guard else 0)
+    total = int(log2_p_prod - guard - math.ceil(math.log2(max(2, k_dim))))
+    per_operand = total // 2
+    # float64 can only represent integers exactly up to 2^53; trunc happens
+    # in float, so cap the budget there.
+    return max(1, min(per_operand, 52))
+
+
+def scheme1_bits(p: int, beta: int) -> int:
+    """Approximate relative precision (bits) delivered by Scheme I."""
+    return p * beta
+
+
+def scheme2_bits(moduli: Sequence[int], k_dim: int) -> int:
+    """Approximate relative precision (bits) delivered by Scheme II."""
+    return scheme2_budget(moduli, k_dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmulationConfig:
+    """Configuration of one emulated GEMM call-site.
+
+    Attributes:
+      scheme:  'native' (plain dot), 'ozaki1' (mantissa slicing),
+               'ozaki2' (CRT modular).
+      p:       slice count (Scheme I) / modulus count (Scheme II).
+      beta:    Scheme-I per-slice bit-width; None = derive via safe_beta(K).
+      moduli:  Scheme-II moduli; None = default_moduli(p).
+      impl:    'xla' (jnp reference path), 'pallas' (fused TPU kernel),
+               'auto' (pallas where available, else xla).
+      fused:   if False, force the naive (unfused, materializing) path —
+               used by benchmarks to reproduce the paper's baselines.
+      out_dtype: output dtype; None = result dtype of the inputs.
+    """
+    scheme: Scheme = "native"
+    p: int = 4
+    beta: int | None = None
+    moduli: tuple[int, ...] | None = None
+    impl: Literal["auto", "xla", "pallas"] = "auto"
+    fused: bool = True
+    out_dtype: str | None = None
+    # Mixed-precision emulated training (beyond-paper): gradients tolerate
+    # fewer slices than the forward pass; 0 = same as forward.
+    bwd_p: int = 0
+
+    def resolved_beta(self, k_dim: int) -> int:
+        return self.beta if self.beta is not None else safe_beta(k_dim)
+
+    def resolved_moduli(self) -> tuple[int, ...]:
+        return self.moduli if self.moduli is not None else default_moduli(self.p)
+
+    def bits(self, k_dim: int) -> int:
+        if self.scheme == "ozaki1":
+            return scheme1_bits(self.p, self.resolved_beta(k_dim))
+        if self.scheme == "ozaki2":
+            return scheme2_bits(self.resolved_moduli(), k_dim)
+        return 24  # native fp32 mantissa
+
+    def gemm_count(self) -> int:
+        """Paper Table II: number of int8 GEMMs issued."""
+        if self.scheme == "ozaki1":
+            return self.p * (self.p + 1) // 2
+        if self.scheme == "ozaki2":
+            return self.p
+        return 1
+
+
+NATIVE = EmulationConfig(scheme="native")
+
+
+def plan_precision(target_bits: int, k_dim: int,
+                   prefer: Scheme | None = None) -> EmulationConfig:
+    """Pick the cheaper scheme for ``target_bits`` of relative precision.
+
+    Implements the paper's Fig.-7 crossover: Scheme I wins below ~FP32
+    precision (its GEMM count grows quadratically), Scheme II above.
+    """
+    beta = safe_beta(k_dim)
+    p1 = max(1, math.ceil(target_bits / beta))
+    # Smallest Scheme-II modulus count that meets the target.
+    p2 = None
+    for p in range(2, len(DEFAULT_MODULI) + 1):
+        if scheme2_bits(default_moduli(p), k_dim) >= target_bits:
+            p2 = p
+            break
+    cost1 = p1 * (p1 + 1) / 2 if p1 * beta >= target_bits else math.inf
+    # Scheme II pays residue generation + CRT reconstruction on top of its p
+    # GEMMs; empirically ~25% per-GEMM overhead (paper Fig. 7 crossover).
+    cost2 = 1.25 * p2 if p2 is not None else math.inf
+    if prefer == "ozaki1" and cost1 < math.inf:
+        return EmulationConfig(scheme="ozaki1", p=p1)
+    if prefer == "ozaki2" and cost2 < math.inf:
+        return EmulationConfig(scheme="ozaki2", p=p2)
+    if cost1 == math.inf and cost2 == math.inf:
+        raise ValueError(
+            f"target_bits={target_bits} unreachable at K={k_dim} "
+            f"(scheme1 max {len(DEFAULT_MODULI) * beta}, "
+            f"scheme2 max {scheme2_bits(DEFAULT_MODULI, k_dim)})")
+    if cost1 <= cost2:
+        return EmulationConfig(scheme="ozaki1", p=p1)
+    return EmulationConfig(scheme="ozaki2", p=p2)

@@ -1,0 +1,179 @@
+"""Ozaki Scheme I: mantissa-slice decomposition for emulated GEMM.
+
+Decomposition (paper Eq. 1):  A ~= diag(mu) * sum_i 2^{-beta(i+1)} A'_i with
+A'_i signed int8 slices extracted by iterated truncation; B analogously along
+columns.  The p(p+1)/2 exact int8 GEMMs are grouped by positional weight
+s = i + j into p int32 accumulators (Eq. 2) and merged by the shift-reduce
+(Eq. 3).
+
+This module is the *algorithmic* layer: slicing, interleaved layout
+(paper Eq. 11), reference (XLA) triangular contraction and reconstruction.
+The fused Pallas kernel lives in repro.kernels.ozaki1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import EmulationConfig, safe_beta
+
+
+def _pow2_row_scale(a: jax.Array, axis: int) -> jax.Array:
+    """Power-of-two scale mu with |a / mu| in [0, 1) along ``axis``.
+
+    mu = 2^e where frexp(max|a|) = (m, e), m in [0.5, 1).  Rows that are all
+    zero get mu = 1.
+    """
+    amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
+    _, exp = jnp.frexp(jnp.where(amax == 0, 1.0, amax))
+    return jnp.exp2(exp.astype(a.dtype))
+
+
+def split(a: jax.Array, p: int, beta: int, axis: int):
+    """Split ``a`` into p signed int8 slices of beta bits each.
+
+    Returns (slices, scale): slices has shape (p, *a.shape) int8; ``scale``
+    is the power-of-two row/col scale (broadcastable against ``a``) such that
+
+        a ~= scale * sum_i 2^{-beta (i+1)} slices[i]
+
+    with residual < scale * 2^{-beta p} elementwise. The iterated
+    truncate-and-subtract is exact in floating point (each step removes the
+    integer part after an exact power-of-two shift).
+    """
+    if not jnp.issubdtype(a.dtype, jnp.floating):
+        a = a.astype(jnp.float32)
+    scale = _pow2_row_scale(a, axis)
+    r = a / scale  # exact: power-of-two division
+    two_beta = float(2 ** beta)
+    slices = []
+    for _ in range(p):
+        shifted = r * two_beta          # exact
+        s = jnp.trunc(shifted)          # |s| <= 2^beta - 1  (beta <= 7)
+        slices.append(s.astype(jnp.int8))
+        r = shifted - s                 # exact (fractional part)
+    return jnp.stack(slices), scale
+
+
+def interleave_k(slices: jax.Array, operand: str, t_k: int) -> jax.Array:
+    """Paper Eq. 11: interleave p slices along K at ``t_k`` granularity.
+
+    For operand 'a' (slices: (p, M, K)) returns (M, p*K) with column groups
+    cycling A'_0 | A'_1 | ... | A'_{p-1} per K-chunk.  For operand 'b'
+    (slices: (p, K, N)) returns (p*K, N) analogously along rows.
+
+    The layout is what lets the fused kernel fetch *all* p slices of a
+    K-chunk with one contiguous block copy, and gives each slice a static
+    tile-aligned offset inside the fetched block.
+    """
+    p = slices.shape[0]
+    if operand == "a":
+        _, m, k = slices.shape
+        if k % t_k:
+            raise ValueError(f"K={k} not divisible by t_k={t_k}")
+        s = slices.reshape(p, m, k // t_k, t_k)
+        return s.transpose(1, 2, 0, 3).reshape(m, p * k)
+    elif operand == "b":
+        _, k, n = slices.shape
+        if k % t_k:
+            raise ValueError(f"K={k} not divisible by t_k={t_k}")
+        s = slices.reshape(p, k // t_k, t_k, n)
+        return s.transpose(1, 0, 2, 3).reshape(p * k, n)
+    raise ValueError(f"operand must be 'a' or 'b', got {operand!r}")
+
+
+def deinterleave_k(x: jax.Array, p: int, operand: str, t_k: int) -> jax.Array:
+    """Inverse of interleave_k — used by tests and the naive path."""
+    if operand == "a":
+        m, pk = x.shape
+        k = pk // p
+        s = x.reshape(m, k // t_k, p, t_k)
+        return s.transpose(2, 0, 1, 3).reshape(p, m, k)
+    elif operand == "b":
+        pk, n = x.shape
+        k = pk // p
+        s = x.reshape(k // t_k, p, t_k, n)
+        return s.transpose(1, 0, 2, 3).reshape(p, k, n)
+    raise ValueError(f"operand must be 'a' or 'b', got {operand!r}")
+
+
+def _int8_dot(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    """Exact int8 x int8 -> int32 GEMM (the MXU primitive)."""
+    return jax.lax.dot_general(
+        a8, b8, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def triangular_accumulators(a_slices: jax.Array, b_slices: jax.Array,
+                            p: int) -> jax.Array:
+    """Paper Eq. 2: C_s = sum_{i<=s} A'_i B'_{s-i}, s = 0..p-1.
+
+    Returns (p, M, N) int32. p(p+1)/2 exact int8 GEMMs.
+    """
+    accs = []
+    for s in range(p):
+        acc = _int8_dot(a_slices[0], b_slices[s])
+        for i in range(1, s + 1):
+            acc = acc + _int8_dot(a_slices[i], b_slices[s - i])
+        accs.append(acc)
+    return jnp.stack(accs)
+
+
+def shift_reduce(accs: jax.Array, beta: int, scale_a: jax.Array,
+                 scale_b: jax.Array, out_dtype) -> jax.Array:
+    """Paper Eq. 3: C = diag(mu) (sum_s 2^{-beta s} C_s) diag(nu).
+
+    Slices carry weight 2^{-beta(i+1)} so the pair (i, j=s-i) has weight
+    2^{-beta(s+2)}. Weights are exact powers of two — no rounding beyond the
+    decomposition residual. Summed highest-weight-first in ``out_dtype``.
+    """
+    p = accs.shape[0]
+    c = jnp.zeros(accs.shape[1:], dtype=out_dtype)
+    for s in range(p):
+        w = jnp.exp2(jnp.asarray(-beta * (s + 2), dtype=out_dtype))
+        c = c + w * accs[s].astype(out_dtype)
+    return c * scale_a.astype(out_dtype) * scale_b.astype(out_dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+           out_dtype=None) -> jax.Array:
+    """Emulated GEMM via Scheme I, XLA reference path (unfused math; XLA may
+    still fuse, but every slice product is an independent dot — this is the
+    'cuBLAS-backed naive emulation' analogue).
+
+    a: (M, K) float, b: (K, N) float.
+    """
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    out_dtype = jnp.dtype(out_dtype).type
+    k_dim = a.shape[-1]
+    beta = cfg.resolved_beta(k_dim)
+    a_sl, mu = split(a, cfg.p, beta, axis=1)    # mu: (M, 1)
+    b_sl, nu = split(b, cfg.p, beta, axis=0)    # nu: (1, N)
+    accs = triangular_accumulators(a_sl, b_sl, cfg.p)
+    return shift_reduce(accs, beta, mu, nu, out_dtype)
+
+
+def matmul_complex_4m(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                      out_dtype=None) -> jax.Array:
+    """Scheme-I complex GEMM via the 4M formulation (paper Sec. V-D:
+    'EmuGEMM-I uses the 4M formulation').
+
+    C_re = Ar Br - Ai Bi ; C_im = Ar Bi + Ai Br — four real emulated GEMMs.
+    """
+    if out_dtype is None:
+        out_dtype = jnp.float32 if a.dtype == jnp.complex64 else jnp.float64
+    ar, ai = jnp.real(a), jnp.imag(a)
+    br, bi = jnp.real(b), jnp.imag(b)
+    rr = matmul(ar, br, cfg, out_dtype)
+    ii = matmul(ai, bi, cfg, out_dtype)
+    ri = matmul(ar, bi, cfg, out_dtype)
+    ir = matmul(ai, br, cfg, out_dtype)
+    return jax.lax.complex(rr - ii, ri + ir)
+
+
+def decomposition_residual_bound(p: int, beta: int) -> float:
+    """Elementwise |a - reconstruction| <= scale * 2^{-beta p}."""
+    return float(2.0 ** (-beta * p))

@@ -1,0 +1,177 @@
+"""Ozaki Scheme II: CRT modular-arithmetic emulated GEMM.
+
+Pipeline (paper Sec. II-C2):
+  1. scale operands to integers A' = trunc(diag(mu) A) (power-of-two mu),
+  2. residues A'_l = A' mod m_l for p pairwise-coprime moduli m_l <= 256,
+  3. one exact int8 GEMM per modulus: ~C_l = A'_l B'_l (int32),
+  4. modular reduction C'_l = ~C_l mod m_l  (the paper fuses this into the
+     GEMM epilogue — here the XLA reference; Pallas kernel in kernels/ozaki2),
+  5. CRT reconstruction of C' = A'B' and inverse scaling.
+
+TPU adaptation (DESIGN.md Sec. 2): residues are stored in *balanced* form
+r_bal = ((r + m//2) mod m) - m//2 in [-128, 127] so they fit the signed-int8
+MXU path (TPU has no unsigned-int8 matmul). Congruence mod m is preserved, so
+the CRT is unchanged; |r_bal| <= 128 keeps K <= 2^31 / 2^14 = 131072 exact.
+
+CRT reconstruction uses Garner's mixed-radix algorithm: digits d_i < m_i are
+computed in exact int32 arithmetic (O(p^2) elementwise ops), then the
+mixed-radix polynomial x = d_1 + m_1 (d_2 + m_2 (...)) is evaluated in
+double-double (~106 mantissa bits) — enough to round a <=120-bit integer to
+FP64 — replacing the paper's multi-word-integer CRT kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import EmulationConfig, scheme2_budget
+from repro.core import dd
+
+
+def _pow2_int_scale(a: jax.Array, axis: int, budget_bits: int) -> jax.Array:
+    """Power-of-two mu per row/col s.t. |trunc(mu * a)| < 2^budget_bits."""
+    amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
+    _, exp = jnp.frexp(jnp.where(amax == 0, 1.0, amax))
+    # mu * amax in [2^(budget-1), 2^budget)
+    return jnp.exp2((budget_bits - exp).astype(a.dtype))
+
+
+def integerize(a: jax.Array, axis: int, budget_bits: int):
+    """A' = trunc(diag(mu) A). Returns (a_int (float, exact integer), mu)."""
+    mu = _pow2_int_scale(a, axis, budget_bits)
+    return jnp.trunc(a * mu), mu
+
+
+def balanced_residues(a_int: jax.Array, moduli) -> jax.Array:
+    """Residues of an exact-integer float array, balanced to [-m//2, ...].
+
+    Returns (p, *a.shape) int8. Works on float inputs holding exact integers
+    up to 2^52 (float64) / 2^23 (float32) by reducing via float remainder,
+    which is exact for power-of-2-scaled integers within the mantissa.
+    """
+    outs = []
+    # Use the widest available int type for the exact mod.
+    use_i64 = jax.config.jax_enable_x64 and a_int.dtype == jnp.float64
+    int_t = jnp.int64 if use_i64 else jnp.int32
+    ai = a_int.astype(int_t)
+    for m in moduli:
+        half = m // 2
+        r = jnp.remainder(ai + half, m) - half  # balanced, in [-half, m-1-half]
+        outs.append(r.astype(jnp.int8))
+    return jnp.stack(outs)
+
+
+def _int8_dot(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a8, b8, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def residue_gemms(a_res: jax.Array, b_res: jax.Array) -> jax.Array:
+    """Paper Eq. 6: ~C_l = A'_l B'_l, one exact int8 GEMM per modulus."""
+    return jax.vmap(_int8_dot)(a_res, b_res)
+
+
+def modular_reduce(acc: jax.Array, moduli) -> jax.Array:
+    """Paper Eq. 7: C'_l = ~C_l mod m_l, elementwise, into [0, m_l)."""
+    outs = []
+    for l, m in enumerate(moduli):
+        outs.append(jnp.remainder(acc[l], m).astype(jnp.int32))
+    return jnp.stack(outs)
+
+
+@lru_cache(maxsize=None)
+def garner_constants(moduli: tuple[int, ...]):
+    """inv[m_j mod m_i] table for Garner's algorithm (python ints)."""
+    p = len(moduli)
+    inv = np.zeros((p, p), dtype=np.int32)
+    for i in range(p):
+        for j in range(i):
+            inv[i, j] = pow(moduli[j], -1, moduli[i])
+    return inv
+
+
+def garner_digits(residues: jax.Array, moduli) -> list[jax.Array]:
+    """*Balanced* mixed-radix digits d_i in [-m_i/2, m_i/2] with
+    x = d_0 + m_0 (d_1 + m_1 (d_2 + ...)), all exact int32 arithmetic.
+    ``residues``: (p, M, N) int32 in [0, m_l).
+
+    Balanced digits make the mixed-radix value itself the *centered*
+    representative in (-P/2, P/2]: a small |x| has (near-)zero high digits,
+    so the downstream double-double Horner evaluation never sees magnitudes
+    near P and needs no final mod-P subtraction — the classic catastrophic
+    cancellation of 'evaluate then subtract P' disappears. This is the TPU
+    (no int128) analogue of the paper's multi-word CRT kernel.
+    """
+    moduli = tuple(int(m) for m in moduli)
+    inv = garner_constants(moduli)
+    p = len(moduli)
+    digits: list[jax.Array] = []
+    for i in range(p):
+        t = residues[i]
+        for j in range(i):
+            # t = (t - d_j) * inv(m_j, m_i) mod m_i; digits are balanced
+            # (|d_j| <= 128) so |t - d_j| * inv < 2^17 — exact in int32.
+            t = jnp.remainder((t - digits[j]) * int(inv[i, j]), moduli[i])
+        half = moduli[i] // 2
+        digits.append(jnp.where(t > half, t - moduli[i], t))
+    return digits
+
+
+def mixed_radix_to_dd(digits: list[jax.Array], moduli) -> tuple[jax.Array, jax.Array]:
+    """Evaluate the balanced mixed-radix polynomial in double-double (Horner).
+
+    With balanced digits the intermediate Horner values stay at the magnitude
+    of the final (centered) result, so ~2x-mantissa double-double precision is
+    what bounds the evaluation error — not log2(P).
+    """
+    p = len(digits)
+    hi = digits[p - 1].astype(jnp.float64 if jax.config.jax_enable_x64
+                              else jnp.float32)
+    lo = jnp.zeros_like(hi)
+    for i in range(p - 2, -1, -1):
+        hi, lo = dd.mul_scalar(hi, lo, float(moduli[i]))
+        hi, lo = dd.add_scalar_array(hi, lo, digits[i].astype(hi.dtype))
+    return hi, lo
+
+
+def crt_reconstruct(residues: jax.Array, moduli, out_dtype) -> jax.Array:
+    """Signed CRT via balanced Garner digits: returns the centered
+    representative in (-P/2, P/2] as ``out_dtype``.
+
+    Exact provided 2 sum_h |a'_ih||b'_hj| < P (paper Eq. 8 condition).
+    """
+    moduli = tuple(int(m) for m in moduli)
+    digits = garner_digits(residues, moduli)
+    hi, lo = mixed_radix_to_dd(digits, moduli)
+    return (hi.astype(out_dtype) + lo.astype(out_dtype)).astype(out_dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+           out_dtype=None) -> jax.Array:
+    """Emulated real GEMM via Scheme II (XLA reference path)."""
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    moduli = cfg.resolved_moduli()
+    k_dim = a.shape[-1]
+    budget = scheme2_budget(moduli, k_dim)
+    # Operand mantissa limits the useful budget (fp32 in -> 24 bits).
+    mant = jnp.finfo(a.dtype).nmant + 1
+    budget = min(budget, mant)
+    a_int, mu = integerize(a, axis=1, budget_bits=budget)
+    b_int, nu = integerize(b, axis=0, budget_bits=budget)
+    a_res = balanced_residues(a_int, moduli)
+    b_res = balanced_residues(b_int, moduli)
+    acc = residue_gemms(a_res, b_res)          # (p, M, N) int32, balanced
+    c_res = modular_reduce(acc, moduli)        # [0, m_l)
+    c_int = crt_reconstruct(c_res, moduli, out_dtype)
+    return c_int / (mu.astype(out_dtype) * nu.astype(out_dtype))
+
+
+def effective_bits(moduli, k_dim: int) -> int:
+    return scheme2_budget(moduli, k_dim)

@@ -1,0 +1,87 @@
+"""Analytical HBM-traffic models from the paper (Eqs. 9, 10, 14, 15, 17, 18).
+
+These drive the benchmarks' derived columns and the roofline memory terms for
+the emulated-GEMM cells, and are validated against operand shapes in
+tests/test_traffic.py. All results in bytes; ``out_bytes`` is the output
+element size (4 = FP32, 8 = FP64).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmShape:
+    m: int
+    n: int
+    k: int
+
+
+def scheme1_naive_bytes(s: GemmShape, p: int, out_bytes: int = 8) -> int:
+    """Paper Eq. 9: per-slice-pair kernel launches + INT32 round-trips."""
+    operand = p * (p + 1) // 2 * (s.m + s.n) * s.k
+    int32_traffic = 4 * p * (p + 1) * s.m * s.n
+    return operand + int32_traffic + out_bytes * s.m * s.n
+
+
+def scheme1_fused_bytes(s: GemmShape, p: int, out_bytes: int = 8) -> int:
+    """Paper Eq. 10: each slice loaded once; accumulators never leave chip."""
+    return p * (s.m + s.n) * s.k + out_bytes * s.m * s.n
+
+
+def scheme2_naive_bytes_per_modulus(s: GemmShape) -> int:
+    """Paper Eq. 14: INT32 write+read round-trip plus INT8 residue write."""
+    return (s.m + s.n) * s.k + 8 * s.m * s.n + s.m * s.n
+
+
+def scheme2_fused_bytes_per_modulus(s: GemmShape) -> int:
+    """Paper Eq. 15: in-epilogue mod reduce — only the INT8 residue leaves."""
+    return (s.m + s.n) * s.k + s.m * s.n
+
+
+def scheme2_3m_naive_bytes_per_modulus(s: GemmShape) -> int:
+    """Paper Eq. 17: three INT32 round-trips + two INT8 writes."""
+    return 3 * (s.m + s.n) * s.k + 24 * s.m * s.n + 2 * s.m * s.n
+
+
+def scheme2_3m_fused_bytes_per_modulus(s: GemmShape) -> int:
+    """Paper Eq. 18: the 24MN intermediate term vanishes."""
+    return 3 * (s.m + s.n) * s.k + 2 * s.m * s.n
+
+
+def int8_gemm_flops(s: GemmShape) -> int:
+    """MAC-pair ops of one int8 GEMM (2MNK)."""
+    return 2 * s.m * s.n * s.k
+
+
+def scheme1_flops(s: GemmShape, p: int) -> int:
+    return p * (p + 1) // 2 * int8_gemm_flops(s)
+
+
+def scheme2_flops(s: GemmShape, p: int, complex_3m: bool = False) -> int:
+    mult = 3 if complex_3m else 1
+    return mult * p * int8_gemm_flops(s)
+
+
+def arithmetic_intensity(flops: int, traffic_bytes: int) -> float:
+    return flops / max(1, traffic_bytes)
+
+
+def scheme1_intensity_gain(p: int) -> float:
+    """Fused/naive intensity ratio ~ (p+1)/2 for operand-dominated sizes."""
+    return (p + 1) / 2
+
+
+def scheme1_workspace_bytes(s: GemmShape, p: int) -> int:
+    """Interleaved Ahat (M, pK) + Bhat (pK, N), int8."""
+    return p * s.k * (s.m + s.n)
+
+
+def scheme2_workspace_bytes(s: GemmShape, p: int,
+                            complex_inputs: bool = False) -> int:
+    """p residue matrices per operand + p per-modulus output residues
+    (paper Sec. V-F: Scheme II workspace exceeds Scheme I at matched p)."""
+    operand_ws = p * s.k * (s.m + s.n) * (2 if complex_inputs else 1)
+    out_res = p * s.m * s.n * (2 if complex_inputs else 1)
+    return operand_ws + out_res

@@ -1,0 +1,84 @@
+"""Shared utilities for the EmuGEMM Pallas TPU kernels.
+
+Hardware model (TPU v5e target):
+  * MXU systolic array: 128x128, int8 x int8 -> int32 exact.
+  * VMEM ~16 MiB/core staging both operand blocks (double-buffered by the
+    Pallas pipeline) and the p int32 accumulators (Scheme I).
+  * int8 VMEM tiling (32, 128): block dims multiples of (32, 128)-friendly
+    sizes; we keep everything 128-aligned for the MXU.
+
+``choose_blocks`` is the TPU analogue of the paper's Eq. 12 resource budget:
+  Acc^(p) = 4 p bM bN     (int32 accumulators, VMEM scratch)
+  S_op    = 2 p (bM+bN) bK  (double-buffered int8 operand blocks)
+  S_epi   = out_bytes bM bN
+all of which must fit the per-core VMEM budget; larger tiles raise the
+MXU pipeline depth (the omega of Fig. 1(c)) until the budget binds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Blocks:
+    bm: int
+    bn: int
+    bk: int
+
+    def aligned(self, m: int, n: int, k: int) -> bool:
+        return m % self.bm == 0 and n % self.bn == 0 and k % self.bk == 0
+
+
+# Per-core VMEM we allow the kernel to claim (leave headroom of the 16 MiB).
+VMEM_BUDGET = 12 * 2**20
+
+
+def choose_blocks(m: int, n: int, k: int, p: int,
+                  out_bytes: int = 4,
+                  vmem_budget: int = VMEM_BUDGET) -> Blocks | None:
+    """Largest 128-aligned blocks whose working set fits VMEM.
+
+    Preference order: maximize bM*bN (accumulator tile = MXU work per
+    operand byte), then bK (pipeline depth). Mirrors paper Eq. 12's
+    alpha_max trade-off: higher p forces smaller tiles.
+    """
+    best: tuple[tuple[int, int], Blocks] | None = None
+    for bm in (512, 256, 128, 64, 32):
+        if m % bm:
+            continue
+        for bn in (512, 256, 128):
+            if n % bn:
+                continue
+            for bk in (512, 256, 128, 64, 32):
+                if k % bk:
+                    continue
+                acc = 4 * p * bm * bn
+                s_op = 2 * p * (bm + bn) * bk
+                s_epi = out_bytes * bm * bn
+                if acc + s_op + s_epi > vmem_budget:
+                    continue
+                key = (bm * bn, bk)
+                if best is None or key > best[0]:
+                    best = (key, Blocks(bm, bn, bk))
+    return best[1] if best else None
+
+
+@functools.cache
+def interpret() -> bool:
+    """Pallas interpret mode everywhere except on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def mma_pipeline_depth(blocks: Blocks, p: int, scheme: int) -> int:
+    """Effective MMA instructions per K-step (paper Eq. 13 analogue).
+
+    On TPU the '128x128x128 MXU pass' stands in for one MMA. Scheme I's
+    triangular schedule multiplies the per-K-step count by p(p+1)/2.
+    """
+    per_dot = (blocks.bm // 128) * (blocks.bn // 128) * max(1, blocks.bk // 128)
+    tri = p * (p + 1) // 2 if scheme == 1 else 1
+    return per_dot * tri

@@ -1,0 +1,58 @@
+"""Fused Scheme-I decomposition + interleave kernel (paper Sec. III-A).
+
+The paper's preprocessing pass: split the scaled operand into p signed
+β-bit slices by iterated truncate-and-subtract and write each slice's
+t_K-wide chunk *directly to its interleaved position* (Eq. 11) — one
+read of A and one write of Â, no intermediate (p, M, K) materialization.
+
+Interleave granularity equals the block's K width, so each grid cell
+(i, c) produces the full (bm, p*bk) interleaved column group of its
+K-chunk: Â[:, (c*p+j)*bk : (c*p+j+1)*bk] = slice_j of chunk c.
+
+Row scales mu (power-of-two, |a/mu| < 1) are computed by the caller —
+they need a full-K row reduction and are reused across operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret
+
+
+def _kernel(a_ref, mu_ref, out_ref, *, p: int, beta: int, bk: int):
+    r = a_ref[...] / mu_ref[...]          # exact: mu is a power of two
+    two_beta = float(2 ** beta)
+    for j in range(p):
+        shifted = r * two_beta            # exact shift
+        s = jnp.trunc(shifted)            # |s| <= 2^beta - 1
+        out_ref[:, j * bk:(j + 1) * bk] = s.astype(jnp.int8)
+        r = shifted - s                   # exact fractional remainder
+
+
+def decompose_interleave(a: jax.Array, mu: jax.Array, p: int, beta: int,
+                         bm: int = 256, bk: int = 256) -> jax.Array:
+    """a: (M, K) float; mu: (M, 1) power-of-two row scales.
+
+    Returns the interleaved slice matrix Â of shape (M, p*K) int8 with
+    interleave granularity ``bk`` (pass the matmul kernel's block K).
+    """
+    m, k = a.shape
+    bm = min(bm, m)
+    bk = min(bk, k)
+    assert m % bm == 0 and k % bk == 0, (m, k, bm, bk)
+    kernel = functools.partial(_kernel, p=p, beta=beta, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, c: (i, c)),
+                  pl.BlockSpec((bm, 1), lambda i, c: (i, 0))],
+        out_specs=pl.BlockSpec((bm, p * bk), lambda i, c: (i, c)),
+        out_shape=jax.ShapeDtypeStruct((m, p * k), jnp.int8),
+        interpret=interpret(),
+        name=f"decompose_interleave_p{p}",
+    )(a, mu)

@@ -1,0 +1,58 @@
+"""Plain tiled int8 GEMM Pallas kernel — the 'native INT8' baseline.
+
+This is what a *naive* emulation implementation composes p (or p(p+1)/2)
+launches of, each materializing its int32 output to HBM (paper Fig. 4's
+'cuBLAS native INT8' reference: the ceiling of any non-fused emulation).
+Used by the benchmarks' naive paths and as the simplest oracle-checked
+kernel of the suite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import Blocks, choose_blocks, interpret
+
+
+def _kernel(a_ref, b_ref, out_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _write():
+        out_ref[...] = acc_ref[...]
+
+
+def int8_matmul(a8: jax.Array, b8: jax.Array,
+                blocks: Blocks | None = None) -> jax.Array:
+    """(M, K) int8 @ (K, N) int8 -> (M, N) int32, exact."""
+    m, k = a8.shape
+    _, n = b8.shape
+    if blocks is None:
+        blocks = choose_blocks(m, n, k, p=1)
+    if blocks is None or not blocks.aligned(m, n, k):
+        raise ValueError(f"no aligned blocks for {(m, n, k)}")
+    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret(),
+        name="int8_gemm",
+    )(a8, b8)

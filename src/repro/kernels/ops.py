@@ -1,0 +1,143 @@
+"""jit'd end-to-end wrappers around the fused Pallas kernels.
+
+The full emulated-GEMM pipelines:
+
+  fused_scheme1_matmul : split -> interleave (Eq. 11) -> EmuGEMM-I kernel
+  fused_scheme2_matmul : integerize -> residues -> EmuGEMM-II kernel -> CRT
+  fused_3m_matmul      : complex residues -> fused-3M kernel -> 2x CRT
+
+Pre/post-processing (decomposition, CRT) are XLA ops — the paper likewise
+keeps decomposition and CRT as separate kernels; the *fusion claim* covers
+the GEMM-side INT32 traffic, which is exactly what the Pallas kernels
+eliminate.
+
+``maybe_fused_matmul`` is the dispatch hook used by repro.core.emulated:
+returns None when the problem does not fit the fused kernels (non-2D,
+unaligned, complex Scheme-I), letting the caller fall back to XLA.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import complex3m, scheme1, scheme2
+from repro.core.precision import EmulationConfig, scheme2_budget
+from repro.kernels import ozaki1, ozaki2, ozaki3m
+from repro.kernels.common import Blocks, choose_blocks
+from repro.kernels.matmul_int8 import int8_matmul  # noqa: F401  (re-export)
+
+
+@partial(jax.jit, static_argnames=("cfg", "out_dtype"))
+def fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                         out_dtype=jnp.float32) -> jax.Array:
+    """End-to-end EmuGEMM-I: (M,K) x (K,N) float -> (M,N) out_dtype."""
+    m, k = a.shape
+    _, n = b.shape
+    p = cfg.p
+    beta = cfg.resolved_beta(k)
+    blocks = choose_blocks(m, n, k, p)
+    if blocks is None or not blocks.aligned(m, n, k):
+        raise ValueError(f"shapes {(m, n, k)} not tile-aligned")
+    a_sl, mu = scheme1.split(a, p, beta, axis=1)
+    b_sl, nu = scheme1.split(b, p, beta, axis=0)
+    a_hat = scheme1.interleave_k(a_sl, "a", blocks.bk)
+    b_hat = scheme1.interleave_k(b_sl, "b", blocks.bk)
+    return ozaki1.fused_matmul_interleaved(
+        a_hat, b_hat, mu.astype(jnp.float32), nu.astype(jnp.float32),
+        p, beta, blocks, out_dtype=out_dtype)
+
+
+@partial(jax.jit, static_argnames=("cfg", "out_dtype"))
+def fused_scheme2_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                         out_dtype=jnp.float32) -> jax.Array:
+    """End-to-end EmuGEMM-II real GEMM."""
+    m, k = a.shape
+    _, n = b.shape
+    moduli = cfg.resolved_moduli()
+    budget = min(scheme2_budget(moduli, k), jnp.finfo(a.dtype).nmant + 1)
+    a_int, mu = scheme2.integerize(a, axis=1, budget_bits=budget)
+    b_int, nu = scheme2.integerize(b, axis=0, budget_bits=budget)
+    a_res = scheme2.balanced_residues(a_int, moduli)
+    b_res = scheme2.balanced_residues(b_int, moduli)
+    c_res8 = ozaki2.fused_residue_matmul(a_res, b_res, moduli)
+    # Balanced -> canonical [0, m) for Garner (exact int32 ops).
+    c_res = jnp.stack([jnp.remainder(c_res8[l].astype(jnp.int32), int(mm))
+                       for l, mm in enumerate(moduli)])
+    out_t = jnp.dtype(out_dtype).type
+    c_int = scheme2.crt_reconstruct(c_res, moduli, out_t)
+    return c_int / (mu.astype(out_t) * nu.astype(out_t))
+
+
+@partial(jax.jit, static_argnames=("cfg", "out_dtype"))
+def fused_3m_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                    out_dtype=None) -> jax.Array:
+    """End-to-end EmuGEMM-II complex GEMM via fused 3M."""
+    if out_dtype is None:
+        out_dtype = jnp.float64 if a.dtype == jnp.complex128 else jnp.float32
+    out_t = jnp.dtype(out_dtype).type
+    moduli = cfg.resolved_moduli()
+    k = a.shape[-1]
+    real_t = jnp.real(a).dtype
+    budget = min(scheme2_budget(moduli, k, complex_guard=True),
+                 jnp.finfo(real_t).nmant + 1)
+    ar, ai = jnp.real(a), jnp.imag(a)
+    br, bi = jnp.real(b), jnp.imag(b)
+    mu = scheme2._pow2_int_scale(jnp.maximum(jnp.abs(ar), jnp.abs(ai)),
+                                 axis=1, budget_bits=budget)
+    nu = scheme2._pow2_int_scale(jnp.maximum(jnp.abs(br), jnp.abs(bi)),
+                                 axis=0, budget_bits=budget)
+    ar_res = scheme2.balanced_residues(jnp.trunc(ar * mu), moduli)
+    ai_res = scheme2.balanced_residues(jnp.trunc(ai * mu), moduli)
+    br_res = scheme2.balanced_residues(jnp.trunc(br * nu), moduli)
+    bi_res = scheme2.balanced_residues(jnp.trunc(bi * nu), moduli)
+
+    def sum_res(x_res, y_res, mm):
+        return complex3m._balanced(
+            x_res.astype(jnp.int32) + y_res.astype(jnp.int32), mm)
+
+    a3 = jnp.stack([
+        jnp.stack([ar_res[l], ai_res[l],
+                   sum_res(ar_res[l], ai_res[l], int(mm))])
+        for l, mm in enumerate(moduli)])          # (p, 3, M, K)
+    b3 = jnp.stack([
+        jnp.stack([br_res[l], bi_res[l],
+                   sum_res(br_res[l], bi_res[l], int(mm))])
+        for l, mm in enumerate(moduli)])          # (p, 3, K, N)
+
+    c_re8, c_im8 = ozaki3m.fused_3m_residue_matmul(a3, b3, moduli)
+    c_re = jnp.stack([jnp.remainder(c_re8[l].astype(jnp.int32), int(mm))
+                      for l, mm in enumerate(moduli)])
+    c_im = jnp.stack([jnp.remainder(c_im8[l].astype(jnp.int32), int(mm))
+                      for l, mm in enumerate(moduli)])
+    cr = scheme2.crt_reconstruct(c_re, moduli, out_t)
+    ci = scheme2.crt_reconstruct(c_im, moduli, out_t)
+    inv = 1.0 / (mu.astype(out_t) * nu.astype(out_t))
+    return jax.lax.complex(cr * inv, ci * inv)
+
+
+def maybe_fused_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig):
+    """Dispatch hook for repro.core.emulated: fused kernel or None."""
+    if a.ndim != 2 or b.ndim != 2:
+        return None
+    m, k = a.shape
+    _, n = b.shape
+    is_cplx = jnp.issubdtype(a.dtype, jnp.complexfloating) or \
+        jnp.issubdtype(b.dtype, jnp.complexfloating)
+    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
+    blocks = choose_blocks(m, n, k, p_eff)
+    if blocks is None or not blocks.aligned(m, n, k):
+        return None
+    out_dtype = cfg.out_dtype or (
+        jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype))
+    if cfg.scheme == "ozaki1":
+        if is_cplx:
+            return None  # Scheme-I complex (4M) runs on the XLA path
+        return fused_scheme1_matmul(a, b, cfg, out_dtype=out_dtype)
+    if cfg.scheme == "ozaki2":
+        if is_cplx:
+            return fused_3m_matmul(a, b, cfg)
+        return fused_scheme2_matmul(a, b, cfg, out_dtype=out_dtype)
+    return None

@@ -1,0 +1,115 @@
+"""EmuGEMM-II complex: fused 3M Scheme-II Pallas TPU kernel (paper Sec. IV-B).
+
+For each modulus, three sequential K-loop passes compute T1 = Ar'Br',
+T2 = Ai'Bi', T3 = (Ar'+Ai')(Br'+Bi') reusing a *single* int32 VMEM
+accumulator (paper Fig. 3(b)): after each pass the accumulator is reduced
+mod m to a balanced-int8 tile kept in VMEM scratch (negligible next to the
+int32 accumulator it replaces). After the third pass the 3M combination
+
+    C'_re = T1 - T2 ,  C'_im = T3 - T1 - T2      (mod m, exact)
+
+is formed on-chip and only the two int8 residue tiles are written —
+Eq. 18's traffic; the naive Eq. 17's 24*MN int32 round-trip term vanishes.
+In modular arithmetic the 3M subtraction is exact: no catastrophic
+cancellation, so 3M is strictly better than 4M here.
+
+Operand layout: the wrapper stacks [re, im, re+im] residues on a phase axis,
+so the phase grid coordinate t selects the operand pair via the BlockSpec
+index map — no in-kernel data movement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import Blocks, choose_blocks, interpret
+
+
+def _kernel(mods_ref, a_ref, b_ref, out_re_ref, out_im_ref,
+            acc_ref, t1_ref, t2_ref):
+    t = pl.program_id(3)
+    k = pl.program_id(4)
+    m = mods_ref[pl.program_id(0)]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[0, 0], b_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(4) - 1)
+    def _end_of_pass():
+        half = m // 2
+
+        def bal(x):
+            return jnp.remainder(x + half, m) - half
+
+        @pl.when(t == 0)
+        def _t1():
+            t1_ref[...] = bal(acc_ref[...]).astype(jnp.int8)
+
+        @pl.when(t == 1)
+        def _t2():
+            t2_ref[...] = bal(acc_ref[...]).astype(jnp.int8)
+
+        @pl.when(t == 2)
+        def _combine():
+            t3 = bal(acc_ref[...])
+            t1 = t1_ref[...].astype(jnp.int32)
+            t2 = t2_ref[...].astype(jnp.int32)
+            out_re_ref[0] = bal(t1 - t2).astype(jnp.int8)
+            out_im_ref[0] = bal(t3 - t1 - t2).astype(jnp.int8)
+
+
+def fused_3m_residue_matmul(a3: jax.Array, b3: jax.Array, moduli,
+                            blocks: Blocks | None = None):
+    """Fused complex 3M residue GEMMs.
+
+    a3: (p, 3, M, K) int8 — phases [re, im, re+im] balanced residues;
+    b3: (p, 3, K, N). Returns (c_re, c_im), each (p, M, N) balanced int8.
+    """
+    p, three, m, k = a3.shape
+    assert three == 3
+    _, _, _, n = b3.shape
+    if blocks is None:
+        blocks = choose_blocks(m, n, k, p=1)
+    if blocks is None or not blocks.aligned(m, n, k):
+        raise ValueError(f"no aligned blocks for {(m, n, k)}")
+    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    mods = jnp.asarray(moduli, dtype=jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(p, m // bm, n // bn, 3, k // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda l, i, j, t, kk, mods: (l, t, i, kk)),
+            pl.BlockSpec((1, 1, bk, bn),
+                         lambda l, i, j, t, kk, mods: (l, t, kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda l, i, j, t, kk, mods: (l, i, j)),
+            pl.BlockSpec((1, bm, bn), lambda l, i, j, t, kk, mods: (l, i, j)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),  # the single live accumulator
+            pltpu.VMEM((bm, bn), jnp.int8),   # T1 residue (on-chip retain)
+            pltpu.VMEM((bm, bn), jnp.int8),   # T2 residue
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((p, m, n), jnp.int8),
+                   jax.ShapeDtypeStruct((p, m, n), jnp.int8)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+        interpret=interpret(),
+        name=f"emugemm2_3m_p{p}",
+    )(mods, a3, b3)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle mirrors the corresponding kernel *at the same granularity*
+(same operand layout, same reduction order where it matters) so that
+tests/test_kernels_*.py can assert exact or allclose agreement in
+interpret mode across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scheme1, scheme2
+
+
+def int8_matmul(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul_int8.int8_matmul (exact int32)."""
+    return jax.lax.dot_general(a8, b8, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def scheme1_interleaved(a_hat: jax.Array, b_hat: jax.Array,
+                        mu: jax.Array, nu: jax.Array,
+                        p: int, beta: int, t_k: int,
+                        out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for kernels.ozaki1.fused_matmul_interleaved.
+
+    De-interleaves, runs the triangular contraction (Eq. 2) and the
+    shift-reduce (Eq. 3) with the same s-ascending summation order as the
+    kernel epilogue.
+    """
+    a_sl = scheme1.deinterleave_k(a_hat, p, "a", t_k)
+    b_sl = scheme1.deinterleave_k(b_hat, p, "b", t_k)
+    accs = scheme1.triangular_accumulators(a_sl, b_sl, p)
+    return scheme1.shift_reduce(accs, beta, mu, nu, jnp.dtype(out_dtype).type)
+
+
+def _balanced(x_int32: jax.Array, m: int) -> jax.Array:
+    half = m // 2
+    return (jnp.remainder(x_int32 + half, m) - half).astype(jnp.int8)
+
+
+def scheme2_residues(a_res: jax.Array, b_res: jax.Array, moduli) -> jax.Array:
+    """Oracle for kernels.ozaki2.fused_residue_matmul.
+
+    Returns (p, M, N) *balanced* int8 residues of A'B' mod m_l.
+    """
+    acc = scheme2.residue_gemms(a_res, b_res)  # (p, M, N) int32
+    return jnp.stack([_balanced(acc[l], int(m)) for l, m in enumerate(moduli)])
+
+
+def flash_attention(q, k, v, causal=True, window=None, softmax_scale=None):
+    """Oracle for kernels.flash_attn.flash_attention.
+
+    q: (B, H, Sq, D); k/v: (B, KVH, Sk, D). Plain softmax attention with
+    GQA head grouping and causal/local masking.
+    """
+    import math
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = softmax_scale or 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, sq, d)
+    s = jnp.einsum("bkgqd,bkjd->bkgqj", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rel = jnp.arange(sq)[:, None] - jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqj,bkjd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def scheme2_3m(a3: jax.Array, b3: jax.Array, moduli):
+    """Oracle for kernels.ozaki3m.fused_3m_residue_matmul.
+
+    a3/b3: (p, 3, M/K, K/N) int8 phases [re, im, re+im].
+    Returns (c_re, c_im) balanced int8 (p, M, N).
+    """
+    c_re, c_im = [], []
+    for l, m in enumerate(moduli):
+        m = int(m)
+        t1 = int8_matmul(a3[l, 0], b3[l, 0])
+        t2 = int8_matmul(a3[l, 1], b3[l, 1])
+        t3 = int8_matmul(a3[l, 2], b3[l, 2])
+        t1b = _balanced(t1, m).astype(jnp.int32)
+        t2b = _balanced(t2, m).astype(jnp.int32)
+        t3b = _balanced(t3, m).astype(jnp.int32)
+        c_re.append(_balanced(t1b - t2b, m))
+        c_im.append(_balanced(t3b - t1b - t2b, m))
+    return jnp.stack(c_re), jnp.stack(c_im)

@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production meshes, with no real allocation.
+
+For each live cell this script:
+  1. builds the (16,16) single-pod or (2,16,16) multi-pod mesh,
+  2. lowers the exact train_step / prefill / decode functions from
+     launch/steps.py against ShapeDtypeStruct inputs,
+  3. compiles, records memory_analysis() and cost_analysis(),
+  4. re-derives trip-count-correct FLOPs / HBM bytes / collective bytes
+     from the compiled HLO (utils/roofline), and
+  5. appends the cell record to --out (JSON), consumed by EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.utils import roofline
+
+
+def run_cell(arch_id: str, shape: ShapeSpec, multi_pod: bool,
+             gemm: str = "native") -> dict:
+    arch = configs.get_config(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    policy = GemmPolicy(default=parse_gemm_spec(gemm))
+    rec = {"arch": arch_id, "shape": shape.name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "gemm": gemm,
+           "kind": shape.kind}
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            step = S.make_train_step(arch, mesh, shape, policy, donate=False)
+            state = {"params": S.abstract_params(arch), "opt": None}
+            state["opt"] = S.abstract_opt(arch, state["params"])
+            batch = arch.input_specs(shape)
+            lowered = step.lower(state, batch)
+        elif shape.kind == "prefill":
+            step = S.make_prefill_step(arch, shape, mesh, policy)
+            lowered = step.lower(S.abstract_params(arch),
+                                 arch.input_specs(shape))
+        else:  # decode
+            step = S.make_decode_step(arch, shape, mesh, policy,
+                                      donate=False)
+            cache = S.abstract_cache(arch, shape.global_batch, shape.seq_len)
+            batch = arch.input_specs(shape)
+            lowered = step.lower(S.abstract_params(arch), cache,
+                                 batch["tokens"], 0)
+        rec["lower_s"] = round(time.time() - t0, 1)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                        None),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {"flops": ca.get("flops"),
+                            "bytes_accessed": ca.get("bytes accessed")}
+
+    hlo = analyze_compiled(compiled)
+    rec["hlo"] = hlo
+    terms = roofline.roofline_terms(hlo["flops"], hlo["mem_bytes"],
+                                    hlo["coll_bytes"])
+    rec["roofline"] = terms
+
+    params = S.abstract_params(arch)
+    n_params = sum(int(jax_size(p)) for p in jax.tree.leaves(params))
+    n_routed = roofline.routed_param_count(params)
+    mf = roofline.model_flops(arch, shape, n_params, n_routed)
+    rec["model_flops_global"] = mf
+    hlo_global = hlo["flops"] * n_chips
+    rec["useful_flops_ratio"] = mf / hlo_global if hlo_global else None
+    rec["params"] = n_params
+    return rec
+
+
+def jax_size(p):
+    import math
+    return math.prod(p.shape) if p.shape else 1
+
+
+def analyze_compiled(compiled) -> dict:
+    return roofline.analyze_hlo(compiled.as_text())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--gemm", default="native",
+                    help="native | ozaki1-pN | ozaki2-pN")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    arch_ids = configs.ARCH_IDS if args.arch == "all" else (args.arch,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    try:
+        with open(args.out) as f:
+            results = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        results = []
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("gemm", "native"))
+            for r in results}
+
+    failures = 0
+    for arch_id in arch_ids:
+        arch = configs.get_config(arch_id)
+        shapes = arch.shapes()
+        if args.shape != "all":
+            shapes = [s for s in shapes if s.name == args.shape]
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                key = (arch_id, shape.name, mesh_name, args.gemm)
+                if args.skip_existing and key in done:
+                    print(f"skip {key}")
+                    continue
+                print(f"=== {arch_id} x {shape.name} x {mesh_name} "
+                      f"(gemm={args.gemm}) ===", flush=True)
+                try:
+                    rec = run_cell(arch_id, shape, multi, args.gemm)
+                    r = rec["roofline"]
+                    print(f"  lower {rec['lower_s']}s compile "
+                          f"{rec['compile_s']}s | compute {r['compute_s']:.4f}s "
+                          f"memory {r['memory_s']:.4f}s coll "
+                          f"{r['collective_s']:.4f}s -> {r['bottleneck']}",
+                          flush=True)
+                    results = [x for x in results
+                               if (x["arch"], x["shape"], x["mesh"],
+                                   x.get("gemm", "native")) != key]
+                    results.append(rec)
+                except Exception as e:
+                    failures += 1
+                    print(f"  FAILED: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"done; {failures} failures; results in {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

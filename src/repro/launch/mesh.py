@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state. Single-pod: (data=16, model=16) = 256 chips
+(TPU v5e pod). Multi-pod: (pod=2, data=16, model=16) = 512 chips; the
+'pod' axis joins 'data' for batch/FSDP sharding and carries the slower
+inter-pod (DCN) collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever fits the local devices — used by examples/tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,216 @@
+"""jit-compiled train / prefill / decode steps with explicit shardings.
+
+These builders are shared by the real entry points (launch/train.py,
+launch/serve.py) and the multi-pod dry-run (launch/dryrun.py): the dry-run
+lowers exactly the functions that would run on hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as M
+from repro.models.common import (GemmPolicy, NATIVE_POLICY,
+                                 cross_entropy_loss)
+from repro.optim import clip_by_global_norm, make_optimizer, warmup_cosine
+from repro.parallel import sharding as shd
+
+MTP_WEIGHT = 0.3
+
+
+# ---------------------------------------------------------------------------
+# Shape/spec helpers (dry-run friendly: everything works on ShapeDtypeStruct).
+# ---------------------------------------------------------------------------
+
+def abstract_params(arch: ArchConfig):
+    return jax.eval_shape(partial(M.init_params, mcfg=arch.model),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_opt(arch: ArchConfig, params):
+    opt_init, _ = make_optimizer(arch.train.optimizer)
+    return jax.eval_shape(opt_init, params)
+
+
+def abstract_cache(arch: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        partial(M.init_cache, arch.model, batch, max_seq))
+
+
+def state_specs(arch: ArchConfig, mesh):
+    params = abstract_params(arch)
+    p_specs = shd.param_pspecs(params, mesh, fsdp=arch.train.fsdp,
+                               attn_sp=arch.model.attn_sharding == "sp")
+    opt = abstract_opt(arch, params)
+    o_specs = shd.opt_pspecs(opt, p_specs, mesh, zero2=arch.train.zero2)
+    return {"params": p_specs, "opt": o_specs}
+
+
+def _batch_axes(mesh, batch: int):
+    """Data axes if the global batch divides them, else replicate
+    (long_500k has batch 1)."""
+    dp = shd.data_axes(mesh)
+    return shd._fit(batch, dp, mesh)
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeSpec, mesh):
+    specs = {}
+    for name, leaf in arch.input_specs(shape).items():
+        specs[name] = P(_batch_axes(mesh, leaf.shape[0]),
+                        *([None] * (leaf.ndim - 1)))
+    return specs
+
+
+def named(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Train step.
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(arch: ArchConfig, policy: GemmPolicy):
+    mcfg = arch.model
+    vocab = mcfg.vocab
+
+    def loss_fn(params, batch):
+        logits, mtp_logits, aux = M.forward_train(
+            params, mcfg, batch, policy, remat=arch.train.remat)
+        loss = cross_entropy_loss(logits, batch["labels"], vocab)
+        if mtp_logits is not None:
+            # MTP predicts token t+2: shift next-token labels once more.
+            mtp_labels = jnp.concatenate(
+                [batch["labels"][:, 1:],
+                 -jnp.ones_like(batch["labels"][:, :1])], axis=1)
+            loss = loss + MTP_WEIGHT * cross_entropy_loss(
+                mtp_logits, mtp_labels, vocab)
+        return loss + aux
+
+    return loss_fn
+
+
+def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
+                    policy: GemmPolicy = NATIVE_POLICY,
+                    donate: bool = True):
+    loss_fn = make_loss_fn(arch, policy)
+    _, opt_update = make_optimizer(arch.train.optimizer)
+    n_micro = arch.train.microbatches
+    dp = shd.data_axes(mesh)
+    g_shardings = None
+    if arch.train.zero2:
+        ap = abstract_params(arch)
+        g_specs = shd.grad_pspecs(
+            ap, shd.param_pspecs(ap, mesh, fsdp=arch.train.fsdp,
+                                 attn_sp=arch.model.attn_sharding == "sp"),
+            mesh, True)
+        g_shardings = named(g_specs, mesh)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if n_micro > 1:
+            def reshard(x):
+                x = x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(None, dp,
+                                             *([None] * (x.ndim - 2)))))
+            micro = jax.tree.map(reshard, batch)
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            if g_shardings is not None:
+                # ZeRO-2: the f32 grad accumulator is data-sharded, so
+                # each microbatch's gradient add reduce-scatters instead
+                # of living replicated.
+                g0 = jax.lax.with_sharding_constraint(g0, g_shardings)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = warmup_cosine(state["opt"]["step"], arch.train.learning_rate)
+        new_params, new_opt = opt_update(grads, state["opt"], params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    specs = state_specs(arch, mesh)
+    in_state = named(specs, mesh)
+    batch_sh = named(batch_specs(arch, shape, mesh), mesh) if shape else None
+    metrics_sh = named({"loss": P(), "grad_norm": P(), "lr": P()}, mesh)
+    return jax.jit(
+        train_step,
+        in_shardings=(in_state, batch_sh),
+        out_shardings=(in_state, metrics_sh),
+        donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Serve steps.
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(arch: ArchConfig, shape: ShapeSpec, mesh,
+                      policy: GemmPolicy = NATIVE_POLICY):
+    mcfg = arch.model
+
+    if not mcfg.causal:   # encoder: 'prefill' is a plain forward pass
+        def prefill(params, inputs):
+            logits, _, _ = M.forward_train(params, mcfg, inputs, policy,
+                                           remat=False)
+            return logits
+        out_sh = None
+    else:
+        def prefill(params, inputs):
+            return M.forward_prefill(params, mcfg, inputs, shape.seq_len,
+                                     policy)
+        cache = abstract_cache(arch, shape.global_batch, shape.seq_len)
+        c_specs = shd.cache_pspecs(cache, mesh)
+        dp = _batch_axes(mesh, shape.global_batch)
+        out_sh = (NamedSharding(mesh, P(dp, None, None)),
+                  named(c_specs, mesh))
+
+    params = abstract_params(arch)
+    p_specs = shd.param_pspecs(params, mesh, fsdp=arch.train.fsdp,
+                               attn_sp=arch.model.attn_sharding == "sp")
+    batch_sh = named(batch_specs(arch, shape, mesh), mesh)
+    return jax.jit(prefill,
+                   in_shardings=(named(p_specs, mesh), batch_sh),
+                   out_shardings=out_sh)
+
+
+def make_decode_step(arch: ArchConfig, shape: ShapeSpec, mesh,
+                     policy: GemmPolicy = NATIVE_POLICY,
+                     donate: bool = True):
+    mcfg = arch.model
+
+    def decode(params, cache, tokens, pos):
+        return M.forward_decode(params, mcfg, tokens, pos, cache, policy)
+
+    params = abstract_params(arch)
+    p_specs = shd.param_pspecs(params, mesh, fsdp=arch.train.fsdp,
+                               attn_sp=arch.model.attn_sharding == "sp")
+    cache = abstract_cache(arch, shape.global_batch, shape.seq_len)
+    c_specs = shd.cache_pspecs(cache, mesh)
+    dp = _batch_axes(mesh, shape.global_batch)
+    return jax.jit(
+        decode,
+        in_shardings=(named(p_specs, mesh), named(c_specs, mesh),
+                      NamedSharding(mesh, P(dp, None)), None),
+        out_shardings=(NamedSharding(mesh, P(dp, None, None)),
+                       named(c_specs, mesh)),
+        donate_argnums=(1,) if donate else ())

@@ -1,0 +1,89 @@
+"""Training launcher.
+
+Runs a real (CPU-host or TPU) training loop with the full substrate:
+sharded step function, deterministic data pipeline, fault-tolerant
+trainer with auto-resume. On this container, use ``--smoke`` (reduced
+configs) — the full configs are exercised via launch/dryrun.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+      --steps 50 --batch 8 --seq 128 --gemm ozaki1-p3
+
+Notable flags:
+  --gemm      emulated-GEMM backend for every dense projection
+  --fail-at   inject a failure at step N (fault-tolerance demo)
+  --resume    re-launch after a failure and continue from the checkpoint
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.data import make_batch_iterator
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.optim import make_optimizer
+from repro.runtime import Trainer
+from repro.runtime.trainer import FailureInjector
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20,
+                    help="TOTAL step count — a resumed run only executes "
+                         "the remainder")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--gemm", default="native")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    arch = (configs.get_smoke_config(args.arch) if args.smoke
+            else configs.get_config(args.arch))
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    mesh = make_host_mesh(args.model_parallel)
+    policy = GemmPolicy(default=parse_gemm_spec(args.gemm))
+
+    opt_init, _ = make_optimizer(arch.train.optimizer)
+
+    def init_state():
+        params = M.init_params(jax.random.PRNGKey(args.seed), arch.model)
+        return {"params": params, "opt": opt_init(params)}
+
+    with mesh:
+        step_fn = S.make_train_step(arch, mesh, shape, policy, donate=False)
+        state_sh = S.named(S.state_specs(arch, mesh), mesh)
+        trainer = Trainer(
+            step_fn=step_fn,
+            init_state_fn=init_state,
+            batch_iterator=make_batch_iterator(arch, shape, args.seed),
+            ckpt_dir=args.ckpt_dir,
+            state_shardings=state_sh,
+            ckpt_every=args.ckpt_every,
+            failure=FailureInjector(args.fail_at),
+        )
+        log = trainer.run(max(0, args.steps - trainer.start_step))
+        trainer.close()
+    if log:
+        first = log[0].get("loss")
+        last = log[-1].get("loss")
+        print(f"[train] loss {first:.4f} -> {last:.4f} over "
+              f"{len(log)} steps")
+    return log
+
+
+if __name__ == "__main__":
+    main()

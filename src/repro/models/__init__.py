@@ -1,0 +1,17 @@
+"""Pure-JAX model zoo: decoder/encoder transformers (GQA, MLA), MoE,
+RG-LRU hybrid, and Mamba-2 SSD blocks, with scan-over-layers execution."""
+
+from repro.models.model import (  # noqa: F401
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_params,
+    param_count,
+)
+from repro.models.common import (  # noqa: F401
+    GemmPolicy,
+    NATIVE_POLICY,
+    cross_entropy_loss,
+    parse_gemm_spec,
+)

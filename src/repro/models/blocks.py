@@ -1,0 +1,166 @@
+"""Residual blocks: (pre-norm mixer) + (pre-norm FFN/MoE), per block kind.
+
+Kinds:
+  attn — GQA attention (or MLA when cfg.mla is set) + dense FFN or MoE
+  rec  — RG-LRU recurrent mixer + dense FFN
+  ssd  — Mamba-2 SSD mixer (no separate FFN, following Mamba-2)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mla, moe, rglru, ssd
+from repro.models.attention import AttnConfig
+from repro.models.common import (GemmPolicy, apply_ffn, apply_norm, init_ffn,
+                                 init_norm)
+
+
+def attn_config(mcfg: ModelConfig, local: bool = False) -> AttnConfig:
+    return AttnConfig(
+        d_model=mcfg.d_model, n_heads=mcfg.n_heads,
+        n_kv_heads=mcfg.n_kv_heads, head_dim=mcfg.resolved_head_dim,
+        qkv_bias=mcfg.qkv_bias, causal=mcfg.causal,
+        window=mcfg.attn_window if local or mcfg.attn_window else None,
+        rope_theta=mcfg.rope_theta, use_rope=mcfg.causal,
+        q_chunk=mcfg.q_chunk, kv_chunk=mcfg.kv_chunk,
+        cache_int8=mcfg.kv_cache_dtype == "int8",
+        sp=mcfg.attn_sharding == "sp")
+
+
+def init_block(key, kind: str, mcfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = mcfg.d_model
+    p = {"ln1": init_norm(mcfg.norm, d, dtype)}
+    if kind == "attn":
+        if mcfg.mla is not None:
+            p["mixer"] = mla.init_mla(k1, d, mcfg.n_heads, mcfg.mla, dtype)
+        else:
+            p["mixer"] = attention.init_attention(k1, attn_config(mcfg), dtype)
+        p["ln2"] = init_norm(mcfg.norm, d, dtype)
+        if mcfg.moe is not None:
+            p["moe"] = moe.init_moe(k2, d, mcfg.moe, mcfg.act, dtype)
+        else:
+            p["ffn"] = init_ffn(k2, d, mcfg.d_ff, mcfg.act, dtype)
+    elif kind == "rec":
+        p["mixer"] = rglru.init_rglru(k1, d, mcfg.rglru, dtype)
+        p["ln2"] = init_norm(mcfg.norm, d, dtype)
+        p["ffn"] = init_ffn(k2, d, mcfg.d_ff, mcfg.act, dtype)
+    elif kind == "ssd":
+        p["mixer"] = ssd.init_ssd(k1, d, mcfg.ssd, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _sp_constrain(x, mcfg: ModelConfig):
+    """Pin (B, S, D) activations to the sequence-parallel layout."""
+    if mcfg.attn_sharding != "sp" or x.shape[1] <= 1:
+        return x
+    from jax.sharding import PartitionSpec as P
+    from repro.models.attention import _constrain
+    return _constrain(x, P(P.UNCONSTRAINED, "model", None))
+
+
+def _ffn_part(params, mcfg: ModelConfig, x, policy):
+    h = apply_norm(mcfg.norm, params["ln2"], x)
+    if "moe" in params:
+        out, aux = moe.apply_moe(params["moe"], h, mcfg.moe, mcfg.act, policy)
+    else:
+        out = apply_ffn(params["ffn"], h, mcfg.act, policy,
+                        sp=mcfg.attn_sharding == "sp")
+        aux = 0.0
+    # Megatron-SP pattern: the TP FFN's output reduce-scatters back onto
+    # the sequence axis instead of all-reducing.
+    out = _sp_constrain(out, mcfg)
+    return x + out, aux
+
+
+def block_train(params, kind: str, mcfg: ModelConfig, x, positions,
+                policy: GemmPolicy):
+    h = apply_norm(mcfg.norm, params["ln1"], x)
+    if kind == "attn":
+        if mcfg.mla is not None:
+            mix = mla.mla_train(params["mixer"], mcfg.mla, mcfg.n_heads, h,
+                                positions, policy, mcfg.kv_chunk)
+        else:
+            mix = attention.attention_train(params["mixer"], attn_config(mcfg),
+                                            h, positions, policy)
+        x = x + mix
+        return _ffn_part(params, mcfg, x, policy)
+    if kind == "rec":
+        x = x + rglru.rglru_block_train(params["mixer"], mcfg.rglru, h, policy)
+        return _ffn_part(params, mcfg, x, policy)
+    if kind == "ssd":
+        return x + ssd.ssd_block_train(params["mixer"], mcfg.d_model,
+                                       mcfg.ssd, h, policy), 0.0
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, mcfg: ModelConfig, batch: int, max_seq: int,
+                     dtype):
+    if kind == "attn":
+        if mcfg.mla is not None:
+            return mla.init_mla_cache(mcfg.mla, batch, max_seq, dtype)
+        return attention.init_cache(attn_config(mcfg), batch, max_seq, dtype)
+    if kind == "rec":
+        return rglru.init_rglru_cache(mcfg.rglru, mcfg.d_model, batch, dtype)
+    if kind == "ssd":
+        return ssd.init_ssd_cache(mcfg.ssd, mcfg.d_model, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_prefill(params, kind: str, mcfg: ModelConfig, x, positions,
+                  policy: GemmPolicy, max_seq: int):
+    h = apply_norm(mcfg.norm, params["ln1"], x)
+    if kind == "attn":
+        if mcfg.mla is not None:
+            mix, cache = mla.mla_prefill(params["mixer"], mcfg.mla,
+                                         mcfg.n_heads, h, positions, policy,
+                                         max_seq, mcfg.kv_chunk)
+        else:
+            mix, cache = attention.attention_prefill(
+                params["mixer"], attn_config(mcfg), h, positions, policy,
+                max_seq)
+        x = x + mix
+        x, _ = _ffn_part(params, mcfg, x, policy)
+        return x, cache
+    if kind == "rec":
+        mix, cache = rglru.rglru_block_prefill(params["mixer"], mcfg.rglru,
+                                               h, policy)
+        x = x + mix
+        x, _ = _ffn_part(params, mcfg, x, policy)
+        return x, cache
+    if kind == "ssd":
+        mix, cache = ssd.ssd_block_prefill(params["mixer"], mcfg.d_model,
+                                           mcfg.ssd, h, policy)
+        return x + mix, cache
+    raise ValueError(kind)
+
+
+def block_decode(params, kind: str, mcfg: ModelConfig, x, pos, cache,
+                 policy: GemmPolicy):
+    h = apply_norm(mcfg.norm, params["ln1"], x)
+    if kind == "attn":
+        if mcfg.mla is not None:
+            mix, cache = mla.mla_decode(params["mixer"], mcfg.mla,
+                                        mcfg.n_heads, h, pos, cache, policy)
+        else:
+            mix, cache = attention.attention_decode(
+                params["mixer"], attn_config(mcfg), h, pos, cache, policy)
+        x = x + mix
+        x, _ = _ffn_part(params, mcfg, x, policy)
+        return x, cache
+    if kind == "rec":
+        mix, cache = rglru.rglru_block_decode(params["mixer"], mcfg.rglru,
+                                              h, cache, policy)
+        x = x + mix
+        x, _ = _ffn_part(params, mcfg, x, policy)
+        return x, cache
+    if kind == "ssd":
+        mix, cache = ssd.ssd_block_decode(params["mixer"], mcfg.d_model,
+                                          mcfg.ssd, h, cache, policy)
+        return x + mix, cache
+    raise ValueError(kind)

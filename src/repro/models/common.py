@@ -1,0 +1,212 @@
+"""Shared model primitives for the architecture zoo.
+
+Everything is pure JAX (pytree params + functions). Dense projections route
+through ``repro.core.emulated.emulated_dot`` so the paper's emulated-GEMM
+backend is a first-class, per-call-site-configurable feature of every model
+(attention/FFN/logits), selected by a ``GemmPolicy``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.emulated import emulated_dot
+from repro.core.precision import EmulationConfig, NATIVE
+
+
+# ---------------------------------------------------------------------------
+# GEMM policy: which emulation config each call-site family uses.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmPolicy:
+    """Per-call-site emulated-GEMM selection.
+
+    Families: 'attn' (q/k/v/o projections), 'ffn' (MLP/expert matmuls),
+    'logits' (output head), 'emb' (input projections of stub frontends).
+    Anything absent falls back to ``default``.
+    """
+    default: EmulationConfig = NATIVE
+    overrides: tuple[tuple[str, EmulationConfig], ...] = ()
+
+    def for_site(self, site: str) -> EmulationConfig:
+        for name, cfg in self.overrides:
+            if name == site:
+                return cfg
+        return self.default
+
+
+NATIVE_POLICY = GemmPolicy()
+
+
+def parse_gemm_spec(spec: str) -> EmulationConfig:
+    """'native' | 'ozaki1-p4' | 'ozaki2-p9' -> EmulationConfig.
+
+    Model-level emulation always uses the XLA expansion (impl='xla'): it
+    partitions under pjit/GSPMD like any other dot. The fused Pallas
+    kernels are invoked explicitly (repro.kernels.ops) on TPU, and in
+    interpret mode they lower to a sequential grid loop that GSPMD cannot
+    partition — never route a distributed model through them on CPU.
+    """
+    if spec == "native":
+        return NATIVE
+    scheme, _, ps = spec.partition("-p")
+    if scheme not in ("ozaki1", "ozaki2") or not ps.isdigit():
+        raise ValueError(f"bad gemm spec {spec!r}")
+    return EmulationConfig(scheme=scheme, p=int(ps),  # type: ignore[arg-type]
+                           impl="xla")
+
+
+def dense(x: jax.Array, w: jax.Array, policy: GemmPolicy, site: str,
+          bias: jax.Array | None = None) -> jax.Array:
+    """x: (..., K) @ w: (K, N) under the policy's emulation config."""
+    cfg = policy.for_site(site)
+    if cfg.scheme == "native":
+        out = jnp.einsum("...k,kn->...n", x, w)
+    else:
+        out = emulated_dot(x, w, cfg).astype(x.dtype)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Initializers (numpy-free: jax.random so init can itself be jitted/sharded).
+# ---------------------------------------------------------------------------
+
+def he_init(key, shape, dtype=jnp.float32, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            * (2.0 / max(1, fan)) ** 0.5).astype(dtype)
+
+
+def emb_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms. 'nonparam' is OLMo-style non-parametric LayerNorm (no scale/bias).
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam":
+        return {}
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def apply_norm(kind: str, params: Mapping[str, jax.Array], x: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), -1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) \
+            + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full or partial head-dim coverage).
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0, rot_dim: int | None = None) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S). Rotates the first rot_dim dims."""
+    d = x.shape[-1]
+    rot = d if rot_dim is None else rot_dim
+    freqs = rope_frequencies(rot, theta)                      # (rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# FFN activations.
+# ---------------------------------------------------------------------------
+
+def _pin(x, spec_parts):
+    """with_sharding_constraint that no-ops without an active mesh."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*spec_parts))
+    except (RuntimeError, ValueError):
+        return x
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi_gate": he_init(k1, (d_model, d_ff), dtype),
+            "wi_up": he_init(k2, (d_model, d_ff), dtype),
+            "wo": he_init(k3, (d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "wi": he_init(k1, (d_model, d_ff), dtype),
+        "wo": he_init(k2, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def apply_ffn(params, x: jax.Array, act: str, policy: GemmPolicy,
+              site: str = "ffn", sp: bool = False) -> jax.Array:
+    from jax.sharding import PartitionSpec as P
+    hidden_spec = (P.UNCONSTRAINED, None, "model")
+    if act in ("swiglu", "geglu"):
+        gate = dense(x, params["wi_gate"], policy, site)
+        up = dense(x, params["wi_up"], policy, site)
+        if sp and x.ndim == 3:
+            # Megatron-SP: hidden stays TP-sharded on d_ff; without this
+            # pin GSPMD may all-gather the weight and compute the full
+            # d_ff on every device.
+            gate = _pin(gate, hidden_spec)
+            up = _pin(up, hidden_spec)
+        gate = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        return dense(gate * up, params["wo"], policy, site)
+    h = dense(x, params["wi"], policy, site)
+    if sp and x.ndim == 3:
+        h = _pin(h, hidden_spec)
+    h = jax.nn.gelu(h)
+    return dense(h, params["wo"], policy, site)
+
+
+# ---------------------------------------------------------------------------
+# Misc.
+# ---------------------------------------------------------------------------
+
+def pad_vocab(vocab: int, multiple: int = 512) -> int:
+    """Pad the embedding/logit vocab so it shards over any mesh axis and
+    stays MXU-lane aligned (Megatron-style padded vocab)."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       vocab: int) -> jax.Array:
+    """Mean token NLL; labels >= vocab (padding ids) are masked out."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0) & (labels < vocab)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

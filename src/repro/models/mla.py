@@ -1,0 +1,213 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Queries and keys/values are low-rank compressed; the KV cache stores only
+the 512-dim latent ``c_kv`` plus the 64-dim shared RoPE key per token
+(~9x smaller than a GQA cache at 128 heads).
+
+* train/prefill: flash-style online softmax where each KV chunk is
+  *decompressed on the fly* from c_kv — the full (S, H, 192) key tensor is
+  never materialized (this is what lets the 32k prefill cell fit HBM).
+* decode: the absorbed formulation — W_UK is folded into the query and
+  W_UV into the output, so attention runs directly against the latent
+  cache with per-head 512-dim scores. No decompression at all.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.common import GemmPolicy, apply_norm, dense, he_init, init_norm
+
+NEG_INF = -1e30
+
+
+def init_mla(key, d_model: int, n_heads: int, cfg: MLAConfig,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": he_init(ks[0], (d_model, cfg.q_lora_rank), dtype),
+        "q_norm": init_norm("rms", cfg.q_lora_rank, dtype),
+        "wq_b": he_init(ks[1], (cfg.q_lora_rank, n_heads * qk_dim), dtype),
+        "wkv_a": he_init(ks[2], (d_model, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                         dtype),
+        "kv_norm": init_norm("rms", cfg.kv_lora_rank, dtype),
+        "wkv_b": he_init(ks[3], (cfg.kv_lora_rank,
+                                 n_heads * (cfg.qk_nope_dim + cfg.v_dim)),
+                         dtype),
+        "wo": he_init(ks[4], (n_heads * cfg.v_dim, d_model),
+                      dtype, fan_in=n_heads * cfg.v_dim),
+    }
+
+
+def _rope_1d(x, positions, theta=10000.0):
+    """x: (B, S, R) shared rope key (headless)."""
+    return _rope_heads(x[:, :, None, :], positions, theta)[:, :, 0, :]
+
+
+def _rope_heads(x, positions, theta=10000.0):
+    from repro.models import common
+    return common.apply_rope(x, positions, theta)
+
+
+def _queries(params, cfg: MLAConfig, n_heads, x, positions, policy):
+    from jax.sharding import PartitionSpec as P
+    from repro.models.attention import _constrain
+    b, s, _ = x.shape
+    q_lat = dense(x, params["wq_a"], policy, "attn")
+    q_lat = apply_norm("rms", params["q_norm"], q_lat)
+    q = dense(q_lat, params["wq_b"], policy, "attn")
+    q = q.reshape(b, s, n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    # Pin TP to the *head* axis (when GSPMD splits the (H*d)@model dim of
+    # the projection it may otherwise shard the minor per-head dim, which
+    # turns every score einsum into a partial-sum all-reduce) and the
+    # batch to 'data' (UNCONSTRAINED lets the loop replicate it).
+    q = _constrain(q, P("data", None, "model", None))
+    q_nope, q_pe = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_pe = _rope_heads(q_pe, positions)
+    return q_nope, q_pe
+
+
+def _latents(params, cfg: MLAConfig, x, positions, policy):
+    kv = dense(x, params["wkv_a"], policy, "attn")
+    c_kv = apply_norm("rms", params["kv_norm"], kv[..., :cfg.kv_lora_rank])
+    k_pe = _rope_1d(kv[..., cfg.kv_lora_rank:], positions)
+    return c_kv, k_pe
+
+
+def _wkv_b_split(params, cfg: MLAConfig, n_heads):
+    from jax.sharding import PartitionSpec as P
+    from repro.models.attention import _constrain
+    w = params["wkv_b"].reshape(cfg.kv_lora_rank, n_heads,
+                                cfg.qk_nope_dim + cfg.v_dim)
+    w = _constrain(w, P(None, "model", None))  # TP on heads, not per-head d
+    return w[..., :cfg.qk_nope_dim], w[..., cfg.qk_nope_dim:]  # w_uk, w_uv
+
+
+def mla_train(params, cfg: MLAConfig, n_heads, x, positions,
+              policy: GemmPolicy, kv_chunk: int = 1024):
+    """Full-sequence MLA attention; returns (B, S, D)."""
+    out, _, _ = _mla_full(params, cfg, n_heads, x, positions, policy,
+                          kv_chunk)
+    return out
+
+
+def mla_prefill(params, cfg: MLAConfig, n_heads, x, positions,
+                policy: GemmPolicy, max_seq: int, kv_chunk: int = 1024):
+    out, c_kv, k_pe = _mla_full(params, cfg, n_heads, x, positions, policy,
+                                kv_chunk)
+    b, s = x.shape[0], x.shape[1]
+    cache = init_mla_cache(cfg, b, max_seq, c_kv.dtype)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, 1),
+        "k_pe": jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe, 0, 1),
+    }
+    return out, cache
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, max_seq: int,
+                   dtype=jnp.float32):
+    return {"c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "k_pe": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype)}
+
+
+def _mla_full(params, cfg: MLAConfig, n_heads, x, positions, policy,
+              kv_chunk):
+    """Causal flash attention with on-the-fly KV decompression."""
+    b, s, _ = x.shape
+    q_nope, q_pe = _queries(params, cfg, n_heads, x, positions, policy)
+    c_kv, k_pe = _latents(params, cfg, x, positions, policy)
+    w_uk, w_uv = _wkv_b_split(params, cfg, n_heads)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    bq = min(kv_chunk, s)
+    bk = min(kv_chunk, s)
+    n_q, n_k = s // bq, s // bk
+    assert s % bq == 0, (s, bq)
+    pos1d = positions[0]
+
+    from jax.sharding import PartitionSpec as P
+    from repro.models.attention import _constrain
+    head_spec = P("data", "model", None, None)   # (B@data, H@model, bq, *)
+
+    def kv_step(carry, idx):
+        acc, m, l, qn, qp, qpos = carry
+        cj = jax.lax.dynamic_slice_in_dim(c_kv, idx * bk, bk, 1)  # (B,bk,L)
+        pj = jax.lax.dynamic_slice_in_dim(k_pe, idx * bk, bk, 1)  # (B,bk,R)
+        kpos = jax.lax.dynamic_slice_in_dim(pos1d, idx * bk, bk)
+        # Decompress just this chunk: (B, bk, H, nope) and (B, bk, H, v).
+        k_nope = jnp.einsum("blc,chd->blhd", cj, w_uk)
+        vj = jnp.einsum("blc,chd->blhd", cj, w_uv)
+        s_ij = (jnp.einsum("bqhd,bjhd->bhqj", qn, k_nope,
+                           preferred_element_type=jnp.float32)
+                + jnp.einsum("bqhr,bjr->bhqj", qp, pj,
+                             preferred_element_type=jnp.float32)) * scale
+        # Pin the scores head-sharded so the scan backward stays sharded
+        # (scan carries are a GSPMD propagation blind spot — see
+        # EXPERIMENTS.md §Perf cell A iteration 2).
+        s_ij = _constrain(s_ij, head_spec)
+        mask = (qpos[:, None] - kpos[None, :]) >= 0
+        s_ij = jnp.where(mask[None, None], s_ij, NEG_INF)
+        m_new = jnp.maximum(m, s_ij.max(-1))
+        pij = jnp.exp(s_ij - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + pij.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqj,bjhd->bhqd", pij.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l, qn, qp, qpos), None
+
+    outs = []
+    for i in range(n_q):
+        qn = jax.lax.dynamic_slice_in_dim(q_nope, i * bq, bq, 1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pe, i * bq, bq, 1)
+        qpos = jax.lax.dynamic_slice_in_dim(pos1d, i * bq, bq)
+        acc0 = _constrain(jnp.zeros((b, n_heads, bq, cfg.v_dim),
+                                    jnp.float32), head_spec)
+        m0 = _constrain(jnp.full((b, n_heads, bq), NEG_INF, jnp.float32),
+                        P("data", "model", None))
+        l0 = _constrain(jnp.zeros((b, n_heads, bq), jnp.float32),
+                        P("data", "model", None))
+        (acc, m, l, _, _, _), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0, qn, qp, qpos), jnp.arange(0, i + 1))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        outs.append(out.transpose(0, 2, 1, 3).reshape(b, bq, -1))
+    out = jnp.concatenate(outs, 1).astype(x.dtype)
+    return dense(out, params["wo"], policy, "attn"), c_kv, k_pe
+
+
+def mla_decode(params, cfg: MLAConfig, n_heads, x, pos, cache,
+               policy: GemmPolicy):
+    """Absorbed one-token step against the latent cache.
+
+    x: (B, 1, D); cache: {c_kv (B, S, L), k_pe (B, S, R)}.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_pe = _queries(params, cfg, n_heads, x, positions, policy)
+    c_new, p_new = _latents(params, cfg, x, positions, policy)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, 1)
+    pk = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], p_new, pos, 1)
+    w_uk, w_uv = _wkv_b_split(params, cfg, n_heads)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    # Absorb W_UK into the query: (B, H, L) latent-space queries.
+    q_abs = jnp.einsum("bqhd,chd->bhc", q_nope, w_uk)
+    s_lat = jnp.einsum("bhc,bsc->bhs", q_abs, ck,
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bqhr,bsr->bhs", q_pe, pk,
+                      preferred_element_type=jnp.float32)
+    scores = (s_lat + s_pe) * scale
+    valid = jnp.arange(ck.shape[1]) <= pos
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsc->bhc", w.astype(ck.dtype), ck,
+                     preferred_element_type=jnp.float32)   # latent context
+    out = jnp.einsum("bhc,chd->bhd", ctx.astype(x.dtype), w_uv)  # absorb W_UV
+    out = out.reshape(b, 1, -1)
+    return dense(out, params["wo"], policy, "attn"), \
+        {"c_kv": ck, "k_pe": pk}

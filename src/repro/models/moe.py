@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer with GShard-style grouped einsum dispatch.
+
+Tokens are reshaped into ``n_groups`` groups (groups shard over the data
+axes, experts over the model axis). Dispatch/combine are one-hot einsums
+with per-group capacity, so under GSPMD the group->expert exchange lowers
+to the canonical all-to-all pair. Supports qwen2-moe (softmax top-4,
+4 gated shared experts) and deepseek-v3 (sigmoid top-8 + 1 shared expert)
+routing styles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import GemmPolicy, he_init, init_ffn, apply_ffn
+
+
+def padded_experts(cfg: MoEConfig) -> int:
+    """Experts padded up to a multiple of ``pad_multiple`` so the expert
+    axis shards over the model mesh axis (qwen2-moe: 60 -> 64). Padding
+    experts carry -inf router logits and never receive tokens."""
+    mult = cfg.pad_multiple
+    return ((cfg.n_experts + mult - 1) // mult) * mult if mult else cfg.n_experts
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, act: str, dtype=jnp.float32):
+    kr, ke1, ke2, ke3, ks, kg = jax.random.split(key, 6)
+    e, f = padded_experts(cfg), cfg.d_ff_expert
+    params = {
+        "router": he_init(kr, (d_model, e), jnp.float32),
+        "wi_gate": he_init(ke1, (e, d_model, f), dtype),
+        "wi_up": he_init(ke2, (e, d_model, f), dtype),
+        "wo": he_init(ke3, (e, f, d_model), dtype, fan_in=f),
+    }
+    if cfg.scoring == "sigmoid":
+        params["router_bias"] = jnp.zeros((e,), jnp.float32)
+    if cfg.n_shared:
+        params["shared"] = init_ffn(ks, d_model, cfg.d_ff_shared, act, dtype)
+        if cfg.shared_gate:
+            params["shared_gate"] = he_init(kg, (d_model, 1), dtype)
+    return params
+
+
+def _route(params, cfg: MoEConfig, x_f32: jax.Array):
+    """x: (G, T, D) -> (weights (G,T,K), idx (G,T,K), scores (G,T,E))."""
+    logits = jnp.einsum("gtd,de->gte", x_f32, params["router"])
+    e_pad = padded_experts(cfg)
+    if e_pad != cfg.n_experts:             # mask padding experts out
+        dead = jnp.arange(e_pad) >= cfg.n_experts
+        logits = jnp.where(dead, -1e30, logits)
+    if cfg.scoring == "sigmoid":           # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"]   # bias affects selection only
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        sel = scores
+    _, idx = jax.lax.top_k(sel, cfg.top_k)
+    w = jnp.take_along_axis(scores, idx, axis=-1)
+    if cfg.norm_topk:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx, scores
+
+
+def _dispatch_combine(cfg: MoEConfig, weights, idx, t: int, dtype):
+    """Build (G,T,E,C) dispatch one-hot + combine weights in ``dtype``.
+
+    Token-priority ranking: earlier tokens win capacity slots; overflow is
+    dropped (standard capacity-factor routing). The one-hot tensors are the
+    dominant transient — they are built directly in the model dtype (their
+    entries are exact 0/1 in any float format).
+    """
+    e = padded_experts(cfg)
+    cap = max(1, int(t * cfg.top_k * cfg.capacity_factor / e))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # (G,T,K,E)
+    # Rank slots in (token, k) order within each expert.
+    flat = onehot.reshape(onehot.shape[0], t * cfg.top_k, e)  # (G,T*K,E)
+    rank = (jnp.cumsum(flat, axis=1) - 1.0) * flat            # (G,T*K,E)
+    keep = (rank < cap) * flat
+    rank = (rank * keep).reshape(onehot.shape[0], t, cfg.top_k, e)
+    keep = keep.reshape(onehot.shape[0], t, cfg.top_k, e).astype(dtype)
+    dispatch = jnp.zeros((onehot.shape[0], t, e, cap), dtype)
+    combine = jnp.zeros((onehot.shape[0], t, e, cap), dtype)
+    wk = weights.astype(dtype)
+    for k in range(cfg.top_k):  # one (G,T,E,C) one-hot live at a time
+        pos_k = jax.nn.one_hot(rank[:, :, k], cap, dtype=dtype) \
+            * keep[:, :, k, :, None]
+        dispatch = dispatch + pos_k
+        combine = combine + pos_k * wk[:, :, k, None, None]
+    return dispatch, combine, cap
+
+
+def aux_load_balance_loss(cfg: MoEConfig, scores, idx) -> jax.Array:
+    """Switch-style: E * sum_e (fraction_tokens_e * mean_prob_e)."""
+    e = padded_experts(cfg)
+    frac = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(2).mean((0, 1))
+    prob = scores.mean((0, 1))
+    return cfg.aux_loss_weight * cfg.n_experts * jnp.sum(frac * prob)
+
+
+def apply_moe(params, x: jax.Array, cfg: MoEConfig, act: str,
+              policy: GemmPolicy):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    tokens = b * s
+    g = min(cfg.n_groups, tokens)
+    while tokens % g:
+        g -= 1
+    t = tokens // g
+    xg = x.reshape(g, t, d)
+    w, idx, scores = _route(params, cfg, xg.astype(jnp.float32))
+    dispatch, combine, cap = _dispatch_combine(cfg, w, idx, t, x.dtype)
+
+    xs = jnp.einsum("gtec,gtd->egcd", dispatch, xg)   # a2a: groups->experts
+    gate = jnp.einsum("egcd,edf->egcf", xs, params["wi_gate"])
+    up = jnp.einsum("egcd,edf->egcf", xs, params["wi_up"])
+    h = (jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)) * up
+    ys = jnp.einsum("egcf,efd->egcd", h, params["wo"])
+    out = jnp.einsum("egcd,gtec->gtd", ys, combine)   # a2a: experts->groups
+    out = out.reshape(b, s, d)
+
+    if cfg.n_shared:
+        sh = apply_ffn(params["shared"], x, act, policy, site="ffn")
+        if cfg.shared_gate:
+            sh = sh * jax.nn.sigmoid(
+                jnp.einsum("bsd,do->bso", x, params["shared_gate"]))
+        out = out + sh
+    return out, aux_load_balance_loss(cfg, scores, idx)

@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block = two parallel branches from the input:
+  * y-branch: linear -> causal depthwise conv1d(k) -> RG-LRU recurrence
+  * gate-branch: linear -> GeLU
+merged multiplicatively and projected back to d_model.
+
+RG-LRU:  r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+         a_t = exp(-c * softplus(Lambda) * r_t)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` (log-depth, sequence-parallel-friendly);
+decode is the O(1) state update. The recurrence is elementwise — the
+paper's GEMM-emulation technique applies to the block's projections but
+not to the scan itself (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.common import GemmPolicy, dense, he_init
+
+
+def init_rglru(key, d_model: int, cfg: RGLRUConfig, dtype=jnp.float32):
+    w = cfg.lru_width or d_model
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^(1/c) ~ U[0.9, 0.999] (Griffin appendix).
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^{-1}(-log u)
+    return {
+        "w_y": he_init(ks[0], (d_model, w), dtype),
+        "w_gate": he_init(ks[1], (d_model, w), dtype),
+        "w_out": he_init(ks[2], (w, d_model), dtype, fan_in=w),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_kernel, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lam": lam,
+        "w_r": he_init(ks[5], (w, w), dtype),
+        "w_i": he_init(jax.random.fold_in(ks[5], 1), (w, w), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, W); w: (k, W).
+
+    state: (B, k-1, W) trailing context (decode) or None (zero left-pad).
+    Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return y, xp[:, -(k - 1):]
+
+
+def _gates(params, cfg: RGLRUConfig, x):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, params["w_r"]))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, params["w_i"]))
+    log_a = -cfg.c * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return a, u
+
+
+def rglru_scan(a, u, h0=None):
+    """h_t = a_t h_{t-1} + u_t over axis 1 via associative scan."""
+    if h0 is not None:
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        al, ul = left
+        ar, ur = right
+        return al * ar, ul * ar + ur
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h
+
+
+def rglru_block_train(params, cfg: RGLRUConfig, x, policy: GemmPolicy):
+    """x: (B, S, D) -> (B, S, D), no cache."""
+    y, _, _ = _rglru_forward(params, cfg, x, policy, conv_state=None, h0=None)
+    return y
+
+
+def init_rglru_cache(cfg: RGLRUConfig, d_model: int, batch: int,
+                     dtype=jnp.float32):
+    w = cfg.lru_width or d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype)}
+
+
+def rglru_block_prefill(params, cfg: RGLRUConfig, x, policy: GemmPolicy):
+    y, conv_state, h_last = _rglru_forward(params, cfg, x, policy,
+                                           conv_state=None, h0=None)
+    return y, {"h": h_last, "conv": conv_state}
+
+
+def rglru_block_decode(params, cfg: RGLRUConfig, x, cache,
+                       policy: GemmPolicy):
+    """x: (B, 1, D); O(1) state update."""
+    y, conv_state, h_last = _rglru_forward(
+        params, cfg, x, policy, conv_state=cache["conv"], h0=cache["h"])
+    return y, {"h": h_last, "conv": conv_state}
+
+
+def _rglru_forward(params, cfg: RGLRUConfig, x, policy, conv_state, h0):
+    yb = dense(x, params["w_y"], policy, "ffn")
+    gate = jax.nn.gelu(dense(x, params["w_gate"], policy, "ffn"))
+    yb, new_conv = _causal_conv(yb, params["conv_w"], params["conv_b"],
+                                conv_state)
+    a, u = _gates(params, cfg, yb)
+    h = rglru_scan(a, u, h0)
+    out = (h.astype(x.dtype) * gate)
+    return dense(out, params["w_out"], policy, "ffn"), new_conv, h[:, -1]

@@ -1,0 +1,201 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* chunks (all matmuls — MXU-friendly, and where the paper's
+emulated-GEMM backend could plug in), plus a chunk-level scan for the
+inter-chunk state recurrence. Decode is the O(1) recurrent update
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * (B_t (x)  outer)   ;  y_t = C_t h_t + D x_t
+
+Layout follows the minimal reference implementation: heads H with head dim
+P = ``head_dim``, shared scalar decay A per head, single B/C group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSDConfig
+from repro.models.common import GemmPolicy, apply_norm, dense, he_init, init_norm
+
+
+def d_inner(d_model: int, cfg: SSDConfig) -> int:
+    return cfg.expand * d_model
+
+
+def n_heads(d_model: int, cfg: SSDConfig) -> int:
+    return d_inner(d_model, cfg) // cfg.head_dim
+
+
+def init_ssd(key, d_model: int, cfg: SSDConfig, dtype=jnp.float32):
+    di = d_inner(d_model, cfg)
+    h = n_heads(d_model, cfg)
+    conv_dim = di + 2 * cfg.d_state
+    ks = jax.random.split(key, 5)
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32)
+                 * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+                 + jnp.log(cfg.dt_min))
+    return {
+        # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": he_init(ks[0], (d_model, 2 * di + 2 * cfg.d_state + h), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(dt)),       # softplus^{-1}(dt)
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": init_norm("rms", di, dtype),
+        "w_out": he_init(ks[3], (di, d_model), dtype, fan_in=di),
+    }
+
+
+def _split_proj(params, d_model: int, cfg: SSDConfig, x, policy):
+    di = d_inner(d_model, cfg)
+    h = n_heads(d_model, cfg)
+    zxbcdt = dense(x, params["w_in"], policy, "ffn")
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * cfg.d_state]
+    dt = jax.nn.softplus(
+        zxbcdt[..., -h:].astype(jnp.float32) + params["dt_bias"])
+    return z, xbc, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return jax.nn.silu(y), xp[:, -(k - 1):]
+
+
+def _segsum(t):
+    """Stable 'segment sum': S[..., i, j] = sum_{j < k <= i} t[..., k]."""
+    s = jnp.cumsum(t, axis=-1)
+    ss = s[..., :, None] - s[..., None, :]
+    q = t.shape[-1]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, bmat, cmat, d_skip, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); dt: (B, S, H); a: (H,) negative decay rates;
+    bmat/cmat: (B, S, N). Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    b, s0, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s0)
+    extra = (-s0) % q
+    if extra:  # pad with dt=0 steps: decay-neutral, zero state update
+        pad = lambda t: jnp.pad(t, [(0, 0), (0, extra)] +
+                                [(0, 0)] * (t.ndim - 2))
+        xh, dt, bmat, cmat = pad(xh), pad(dt), pad(bmat), pad(cmat)
+    s = s0 + extra
+    c = s // q
+    xc = xh.reshape(b, c, q, h, p)
+    dtc = dt.reshape(b, c, q, h)
+    bc = bmat.reshape(b, c, q, n)
+    cc = cmat.reshape(b, c, q, n)
+
+    da = dtc * a[None, None, None, :]               # (B,C,Q,H) negative
+    da_cs = jnp.cumsum(da, axis=2)                  # within-chunk cumsum
+    # Intra-chunk (attention-like, all matmuls):
+    l = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (B,C,H,Q,Q)
+    att = jnp.einsum("bcqn,bckn,bchqk->bchqk", cc, bc, l)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", att, dtc, xc)
+
+    # Chunk-final states: (B,C,H,P,N)
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)       # (B,C,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        bc, decay_states * dtc, xc)
+
+    # Inter-chunk recurrence over the C axis (sequential scan, C is small).
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                 # (B,C,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry        # emit the *incoming* state for this chunk
+
+    init = h0 if h0 is not None else jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,C,H,P,N)
+
+    # Off-diagonal contribution from the incoming state of each chunk.
+    state_decay = jnp.exp(da_cs)                              # (B,C,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + d_skip[None, None, :, None] * xh
+    return y[:, :s0], final
+
+
+def ssd_block_train(params, d_model: int, cfg: SSDConfig, x,
+                    policy: GemmPolicy):
+    y, _, _ = _ssd_forward(params, d_model, cfg, x, policy, None, None)
+    return y
+
+
+def init_ssd_cache(cfg: SSDConfig, d_model: int, batch: int,
+                   dtype=jnp.float32):
+    di = d_inner(d_model, cfg)
+    h = n_heads(d_model, cfg)
+    conv_dim = di + 2 * cfg.d_state
+    return {"conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((batch, h, cfg.head_dim, cfg.d_state),
+                             jnp.float32)}
+
+
+def ssd_block_prefill(params, d_model: int, cfg: SSDConfig, x,
+                      policy: GemmPolicy):
+    y, conv_state, ssm_state = _ssd_forward(params, d_model, cfg, x, policy,
+                                            None, None)
+    return y, {"conv": conv_state, "ssm": ssm_state}
+
+
+def ssd_block_decode(params, d_model: int, cfg: SSDConfig, x, cache,
+                     policy: GemmPolicy):
+    """x: (B, 1, D): recurrent update, no chunking."""
+    z, xbc, dt = _split_proj(params, d_model, cfg, x, policy)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   cache["conv"])
+    di = d_inner(d_model, cfg)
+    h = n_heads(d_model, cfg)
+    xh = xbc[..., :di].reshape(x.shape[0], h, cfg.head_dim)
+    bmat = xbc[:, 0, di:di + cfg.d_state]
+    cmat = xbc[:, 0, di + cfg.d_state:]
+    a = -jnp.exp(params["a_log"])
+    dt1 = dt[:, 0]                                   # (B,H)
+    decay = jnp.exp(dt1 * a)                         # (B,H)
+    xf = xh.astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xf, bmat.astype(jnp.float32))
+    ssm = cache["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cmat.astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xf
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = apply_norm("rms", params["out_norm"], y * jax.nn.silu(z))
+    return dense(y, params["w_out"], policy, "ffn"), \
+        {"conv": conv_state, "ssm": ssm}
+
+
+def _ssd_forward(params, d_model, cfg, x, policy, conv_state, h0):
+    b, s, _ = x.shape
+    z, xbc, dt = _split_proj(params, d_model, cfg, x, policy)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    di = d_inner(d_model, cfg)
+    h = n_heads(d_model, cfg)
+    xh = xbc[..., :di].reshape(b, s, h, cfg.head_dim).astype(jnp.float32)
+    bmat = xbc[..., di:di + cfg.d_state].astype(jnp.float32)
+    cmat = xbc[..., di + cfg.d_state:].astype(jnp.float32)
+    a = -jnp.exp(params["a_log"])
+    y, final = ssd_chunked(xh, dt, a, bmat, cmat, params["d_skip"],
+                           cfg.chunk, h0)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = apply_norm("rms", params["out_norm"], y * jax.nn.silu(z))
+    return dense(y, params["w_out"], policy, "ffn"), new_conv, final

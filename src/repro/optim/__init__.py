@@ -1,0 +1,13 @@
+"""Optimizers, schedules, gradient clipping — pure-pytree implementations
+whose states inherit parameter sharding (ZeRO by construction under pjit)."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    warmup_cosine,
+)

@@ -1,0 +1,127 @@
+"""AdamW and Adafactor over parameter pytrees.
+
+States mirror the parameter tree, so they pick up the exact same
+NamedShardings as the parameters under pjit — optimizer sharding (ZeRO)
+falls out of GSPMD instead of being a separate mechanism. Adafactor
+factors the second moment of >=2-D parameters into row/col statistics
+(the memory plan for deepseek-v3-671b depends on this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def warmup_cosine(step, peak_lr: float, warmup: int = 100,
+                  total: int = 10000, floor: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * step / max(1, warmup)
+    frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params):
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else \
+            jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if p.ndim >= 2 else jnp.zeros((1,), jnp.float32)
+
+    return {"vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = beta * vr + (1 - beta) * g2.mean(-1)
+            vc = beta * vc + (1 - beta) * g2.mean(-2)
+            r = vr / jnp.maximum(vr.mean(-1, keepdims=True), eps)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + 1e-12)
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g / (jnp.sqrt(vr) + 1e-12)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state["vr"], state["vc"], params)
+    is_t = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda o: o[0], out, is_leaf=is_t),
+            {"vr": jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+             "vc": jax.tree.map(lambda o: o[2], out, is_leaf=is_t),
+             "step": step})
+
+
+def make_optimizer(kind: str):
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {kind!r}")

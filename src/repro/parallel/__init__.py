@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (  # noqa: F401
+    batch_pspec,
+    cache_pspecs,
+    opt_pspecs,
+    param_pspecs,
+)

@@ -1,0 +1,231 @@
+"""GSPMD sharding rules: parameter / optimizer / cache PartitionSpecs.
+
+Axes convention (launch/mesh.py):
+  * data axes ``('pod', 'data')`` (multi-pod) or ``('data',)`` — batch and
+    FSDP parameter sharding;
+  * ``'model'`` — tensor parallelism (attention heads / FFN width / experts
+    / padded vocab).
+
+Rules are name+shape driven with divisibility fallbacks: a dim that does
+not divide the mesh axis is simply left unsharded (e.g. qwen1.5's 40 heads
+on a 16-way model axis fall back to contraction-dim sharding). Scanned
+parameter stacks get a leading ``None`` for the group axis automatically.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _fit(dim: int, axes, mesh: Mesh):
+    """axes if dim divides their product else None (unsharded fallback)."""
+    return axes if axes and dim % _axes_size(mesh, axes) == 0 else None
+
+
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+
+
+def batch_pspec(mesh: Mesh, extra_dims: int = 1) -> P:
+    return P(data_axes(mesh), *([None] * extra_dims))
+
+
+# Projections whose *output* dim carries TP ("column parallel") ...
+_UP = {"wq", "wk", "wv", "wi", "wi_gate", "wi_up", "w_y", "w_gate", "w_in",
+       "wq_b", "wkv_b", "w_r", "w_i", "proj"}
+# ... and whose *input* dim carries TP ("row parallel", after a TP output).
+_DOWN = {"wo", "w_out"}
+# Low-rank down-projections: keep the small latent dim replicated.
+_LATENT = {"wq_a", "wkv_a", "frontend_proj"}
+
+
+def _param_rule(path: tuple[str, ...], shape, mesh: Mesh, fsdp: bool,
+                attn_sp: bool = False):
+    mdl = "model"
+    dp = data_axes(mesh) if fsdp else None
+    name = path[-1]
+    stacked = "layers" in path          # scan-stacked: leading group axis
+    core = shape[1:] if stacked else shape
+    rank = len(core)
+
+    def spec(*parts):
+        parts = list(parts) + [None] * (rank - len(parts))
+        if stacked:
+            parts = [None] + parts
+        return P(*parts)
+
+    if name == "emb":
+        return spec(_fit(core[0], mdl, mesh), _fit(core[1], dp, mesh))
+    if name == "head":
+        return spec(_fit(core[0], dp, mesh), _fit(core[1], mdl, mesh))
+    if name == "router":
+        return spec(None, None)
+    if name in ("conv_w",):
+        return spec(None, _fit(core[1], mdl, mesh))
+    if rank == 3 and name in ("wi_gate", "wi_up"):      # experts (E, D, F)
+        return spec(_fit(core[0], mdl, mesh), _fit(core[1], dp, mesh), None)
+    if rank == 3 and name == "wo":                      # experts (E, F, D)
+        return spec(_fit(core[0], mdl, mesh), None, _fit(core[2], dp, mesh))
+    if rank == 2 and name in _LATENT:
+        return spec(_fit(core[0], dp, mesh), None)
+    if attn_sp and "mixer" in path and name in ("wq", "wk", "wv", "wo"):
+        # Sequence-parallel attention: activations carry the model axis
+        # along S, so attention weights cannot shard over 'model' — they
+        # shard over the data axes instead (gathered per use, ZeRO-3
+        # style), regardless of the global fsdp setting.
+        dpa = data_axes(mesh)
+        return spec(_fit(core[0], dpa, mesh), None)
+    if rank == 2 and name in _UP:
+        out_ax = _fit(core[1], mdl, mesh)
+        if out_ax is None:  # fall back to sharding the contraction dim
+            return spec(_fit(core[0], mdl, mesh), None)
+        return spec(_fit(core[0], dp, mesh), out_ax)
+    if rank == 2 and name in _DOWN:
+        in_ax = _fit(core[0], mdl, mesh)
+        if in_ax is None:
+            return spec(None, _fit(core[1], mdl, mesh))
+        return spec(in_ax, _fit(core[1], dp, mesh))
+    return spec()                                        # norms, biases, 1-D
+
+
+def param_pspecs(params, mesh: Mesh, fsdp: bool = False,
+                 attn_sp: bool = False):
+    """Pytree of PartitionSpec matching ``params`` (shapes or arrays)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def key_names(kp):
+        out = []
+        for k in kp:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+        return tuple(out)
+
+    specs = [_param_rule(key_names(kp), leaf.shape, mesh, fsdp, attn_sp)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), specs)
+
+
+def add_dp_to_spec(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-2: shard the first unsharded, divisible dim over the data
+    axes (applied to optimizer states and the gradient accumulator).
+    No-op if the spec already uses the data axes."""
+    dp = data_axes(mesh)
+    used = {a for part in spec if part
+            for a in ((part,) if isinstance(part, str) else part)}
+    if dp and any(a in used for a in dp):
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (ax, dim) in enumerate(zip(parts, shape)):
+        if ax is None and _fit(dim, dp, mesh):
+            parts[i] = dp
+            return P(*parts)
+    return spec
+
+
+def grad_pspecs(params, params_specs, mesh: Mesh, zero2: bool):
+    if not zero2:
+        return params_specs
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(
+        params_specs, is_leaf=lambda x: isinstance(x, P))
+    out = [add_dp_to_spec(s, p.shape, mesh)
+           for p, s in zip(flat_p, flat_s)]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), out)
+
+
+def opt_pspecs(opt_state, params_specs, mesh: Mesh, zero2: bool = False):
+    """Optimizer states mirror parameter specs (plus data-axis sharding
+    under ZeRO-2); adafactor's factored statistics drop the corresponding
+    parameter axis."""
+    def moment(sub):
+        if not zero2:
+            return jax.tree.map(lambda s: s, params_specs)
+        return grad_pspecs(sub, params_specs, mesh, True)
+
+    out = {}
+    for k, v in opt_state.items():
+        if k == "step":
+            out[k] = P()
+        elif k in ("m", "v"):
+            out[k] = moment(v)
+        elif k == "vr":      # param spec minus last axis
+            out[k] = jax.tree.map(
+                lambda s: P(*s[:-1]) if len(s) else P(), params_specs)
+        elif k == "vc":      # param spec minus second-to-last axis
+            out[k] = jax.tree.map(
+                lambda s: P(*(s[:-2] + s[-1:])) if len(s) >= 2 else P(),
+                params_specs)
+        else:
+            out[k] = jax.tree.map(lambda _: P(), v)
+    return out
+
+
+def _cache_rule(path: tuple[str, ...], shape, mesh: Mesh):
+    dp = data_axes(mesh)
+    mdl = "model"
+    name = path[-1]
+    stacked = "layers" in path
+    core = shape[1:] if stacked else shape
+    rank = len(core)
+
+    def spec(*parts):
+        parts = list(parts) + [None] * (rank - len(parts))
+        if stacked:
+            parts = [None] + parts
+        return P(*parts)
+
+    if name in ("k", "v", "k_scale", "v_scale"):   # (B, S, KVH, HD)
+        b_ax = _fit(core[0], dp, mesh)
+        kvh_ax = _fit(core[2], mdl, mesh)
+        if kvh_ax is not None:
+            return spec(b_ax, None, kvh_ax, None)
+        return spec(b_ax, _fit(core[1], mdl, mesh), None, None)
+    if name in ("c_kv", "k_pe"):                   # MLA latent (B, S, L)
+        return spec(_fit(core[0], dp, mesh), _fit(core[1], mdl, mesh), None)
+    if name == "h":                                # RG-LRU state (B, W)
+        return spec(_fit(core[0], dp, mesh), _fit(core[1], mdl, mesh))
+    if name == "conv":                             # (B, k-1, W)
+        return spec(_fit(core[0], dp, mesh), None,
+                    _fit(core[2], mdl, mesh))
+    if name == "ssm":                              # (B, H, P, N)
+        return spec(_fit(core[0], dp, mesh), _fit(core[1], mdl, mesh),
+                    None, None)
+    return spec(_fit(core[0], dp, mesh))
+
+
+def cache_pspecs(cache, mesh: Mesh):
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+
+    def key_names(kp):
+        out = []
+        for k in kp:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+        return tuple(out)
+
+    specs = [_cache_rule(key_names(kp), leaf.shape, mesh)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache), specs)
+
+
+def shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,125 @@
+"""Fault-tolerant training runtime.
+
+* auto-resume: on construction the Trainer restores the newest valid
+  checkpoint (possibly onto a different mesh — elastic re-mesh);
+* failure injection: ``FailureInjector`` raises at a chosen step so tests
+  can assert bit-exact continuation after restart;
+* straggler detection: per-step wall-time EMA + z-score; slow steps are
+  logged and counted (the hook where a real cluster would re-slice or
+  evict the slow host);
+* preemption: SIGTERM triggers a final synchronous checkpoint before
+  exit (the TPU maintenance-event pattern).
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+class FailureInjector:
+    def __init__(self, fail_at_step: int | None = None):
+        self.fail_at_step = fail_at_step
+        self.fired = False
+
+    def check(self, step: int):
+        if self.fail_at_step is not None and step == self.fail_at_step \
+                and not self.fired:
+            self.fired = True
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+class StragglerMonitor:
+    """EMA of step time; steps slower than mean + z*std are stragglers."""
+
+    def __init__(self, z: float = 3.0, warmup: int = 5):
+        self.z = z
+        self.warmup = warmup
+        self.times: list[float] = []
+        self.stragglers: list[tuple[int, float]] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        self.times.append(seconds)
+        if len(self.times) <= self.warmup:
+            return False
+        hist = np.asarray(self.times[:-1][-50:])
+        mu, sd = hist.mean(), hist.std() + 1e-9
+        if seconds > mu + self.z * sd:
+            self.stragglers.append((step, seconds))
+            return True
+        return False
+
+
+class Trainer:
+    def __init__(self, *, step_fn, init_state_fn, batch_iterator,
+                 ckpt_dir: str, state_shardings=None,
+                 ckpt_every: int = 50, keep: int = 3,
+                 failure: FailureInjector | None = None,
+                 log_every: int = 10, handle_sigterm: bool = False):
+        self.step_fn = step_fn
+        self.batch_iterator = batch_iterator
+        self.ckpt = CheckpointManager(ckpt_dir, keep=keep)
+        self.ckpt_every = ckpt_every
+        self.failure = failure or FailureInjector()
+        self.monitor = StragglerMonitor()
+        self.log_every = log_every
+        self.metrics_log: list[dict] = []
+        self._preempted = False
+
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            like = jax.eval_shape(init_state_fn)
+            self.state = self.ckpt.restore(latest, like, state_shardings)
+            self.start_step = latest + 1
+            print(f"[trainer] resumed from step {latest}")
+        else:
+            self.state = init_state_fn()
+            self.start_step = 0
+
+        if handle_sigterm:
+            signal.signal(signal.SIGTERM, self._on_sigterm)
+
+    def _on_sigterm(self, *_):
+        self._preempted = True
+
+    def run(self, n_steps: int) -> list[dict]:
+        step = self.start_step
+        end = self.start_step + n_steps
+        it = iter(self.batch_iterator)
+        # Fast-forward the deterministic stream to the resume point.
+        for _ in range(self.start_step):
+            next(it)
+        while step < end:
+            data_step, batch = next(it)
+            t0 = time.time()
+            self.failure.check(step)
+            self.state, metrics = self.step_fn(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            slow = self.monitor.observe(step, dt)
+            metrics.update(step=step, seconds=dt)
+            self.metrics_log.append(metrics)
+            if slow:
+                print(f"[trainer] straggler step {step}: {dt:.3f}s")
+            if step % self.log_every == 0:
+                print(f"[trainer] step {step} "
+                      f"loss {metrics.get('loss', float('nan')):.4f} "
+                      f"({dt:.2f}s)")
+            if (step + 1) % self.ckpt_every == 0 or step + 1 == end \
+                    or self._preempted:
+                self.ckpt.save(step, self.state)
+            if self._preempted:
+                print(f"[trainer] preempted; checkpointed at step {step}")
+                break
+            step += 1
+        self.ckpt.wait()
+        self.start_step = step
+        return self.metrics_log
+
+    def close(self):
+        self.ckpt.close()

@@ -1,0 +1,104 @@
+"""Hillclimb profiling aid: attribute collective/memory bytes in a
+compiled dry-run cell to model regions via op_name metadata.
+
+  PYTHONPATH=src python -m repro.utils.perf_probe --arch deepseek-coder-33b \
+      --shape train_4k
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import math
+import re
+
+import jax
+
+from repro import configs
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.utils import roofline
+
+
+def compile_cell(arch_id, shape_name, gemm="native", multi=False):
+    arch = configs.get_config(arch_id)
+    shape = [s for s in arch.shapes() if s.name == shape_name][0]
+    mesh = make_production_mesh(multi_pod=multi)
+    policy = GemmPolicy(default=parse_gemm_spec(gemm))
+    with mesh:
+        if shape.kind == "train":
+            step = S.make_train_step(arch, mesh, shape, policy, donate=False)
+            state = {"params": S.abstract_params(arch)}
+            state["opt"] = S.abstract_opt(arch, state["params"])
+            return step.lower(state, arch.input_specs(shape)).compile()
+        if shape.kind == "prefill":
+            step = S.make_prefill_step(arch, shape, mesh, policy)
+            return step.lower(S.abstract_params(arch),
+                              arch.input_specs(shape)).compile()
+        step = S.make_decode_step(arch, shape, mesh, policy, donate=False)
+        cache = S.abstract_cache(arch, shape.global_batch, shape.seq_len)
+        return step.lower(S.abstract_params(arch), cache,
+                          arch.input_specs(shape)["tokens"], 0).compile()
+
+
+def attribute(txt, top=20):
+    """Collective bytes per (opcode, op_name tag), trip-count scaled."""
+    g = roofline.parse_hlo(txt)
+    comps = g["comps"]
+    mult = {g["entry"]: 1.0}
+    order = [g["entry"]]
+    i = 0
+    while i < len(order):
+        n = order[i]
+        i += 1
+        for child, m, kind in comps[n].calls:
+            if child in comps:
+                mult[child] = mult.get(child, 0.0) + mult[n] * m
+                if child not in order:
+                    order.append(child)
+    # per-line attribution pass
+    hdr = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+    rows = collections.Counter()
+    cur = None
+    for line in txt.splitlines():
+        h = hdr.match(line)
+        if h:
+            cur = h.group(1)
+            continue
+        m = re.match(r"^\s*(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([\w\-]+)\(", line)
+        if not m or cur not in mult:
+            continue
+        rtype, opcode = m.groups()
+        if opcode not in roofline._COLLECTIVES:
+            continue
+        nbytes = roofline._all_shape_bytes(rtype) * mult.get(cur, 0.0)
+        if opcode == "all-reduce":
+            nbytes *= 2
+        meta = re.search(r'op_name="([^"]+)"', line)
+        tag = meta.group(1) if meta else "?"
+        tag = re.sub(r"\[[^\]]*\]|\d+", "", tag)[:110]
+        rows[(opcode, tag)] += nbytes
+    return rows.most_common(top)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--gemm", default="native")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+    compiled = compile_cell(args.arch, args.shape, args.gemm)
+    txt = compiled.as_text()
+    total = roofline.analyze_hlo(txt)
+    print(f"flops/dev {total['flops']:.3e}  mem {total['mem_bytes']/1e9:.1f}GB"
+          f"  coll {total['coll_bytes']/1e9:.1f}GB")
+    for (opcode, tag), b in attribute(txt, args.top):
+        print(f"{b/1e9:10.1f} GB  {opcode:20s} {tag}")
+
+
+if __name__ == "__main__":
+    main()

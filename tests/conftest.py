@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests must see the real (1-device) CPU;
+# only launch/dryrun.py fakes 512 devices.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def conditioned(rng, shape, phi=2.0, dtype=np.float32):
+    """Paper Eq. 19 test matrices: (rand-0.5)*exp(phi*randn)."""
+    return ((rng.random(shape) - 0.5)
+            * np.exp(phi * rng.standard_normal(shape))).astype(dtype)
+
+
+@pytest.fixture
+def make_matrix(rng):
+    def _make(shape, phi=2.0, dtype=np.float32):
+        return conditioned(rng, shape, phi, dtype)
+    return _make

@@ -1,0 +1,119 @@
+"""Flash attention vs naive softmax oracle; int8 KV cache; MoE invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention
+from repro.models.attention import AttnConfig
+
+
+def naive_attention(cfg: AttnConfig, q, k, v, positions):
+    b, s, h, d = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    qk = q.reshape(b, s, kvh, g, d)
+    scores = np.einsum("bqkgd,bjkd->bkgqj", np.asarray(qk, np.float32),
+                       np.asarray(k, np.float32)) * cfg.scale
+    rel = positions[:, None] - positions[None, :]
+    mask = np.ones((s, s), bool)
+    if cfg.causal:
+        mask &= rel >= 0
+    if cfg.window is not None:
+        mask &= rel < cfg.window
+    scores = np.where(mask[None, None, None], scores, -1e30)
+    w = np.exp(scores - scores.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    out = np.einsum("bkgqj,bjkd->bkgqd", w, np.asarray(v, np.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 16)])
+@pytest.mark.parametrize("s", [64, 60])   # ragged exercises padding
+def test_flash_matches_naive(rng, causal, window, s):
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                     causal=causal, window=window, q_chunk=32, kv_chunk=32)
+    q = jnp.asarray(rng.standard_normal((2, s, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, s, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, s, 2, 8)), jnp.float32)
+    pos = jnp.arange(s)
+    out = attention.flash_attention(cfg, q, k, v, pos, pos)
+    ref = naive_attention(cfg, q, k, v, np.arange(s))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5, atol=2e-5)
+
+
+@given(sq=st.integers(8, 96), bq=st.sampled_from([16, 32]),
+       causal=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_flash_padding_property(sq, bq, causal):
+    """Any (sq, chunk) combination agrees with the naive oracle."""
+    rng = np.random.default_rng(sq)
+    cfg = AttnConfig(d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+                     causal=causal, q_chunk=bq, kv_chunk=bq)
+    q = jnp.asarray(rng.standard_normal((1, sq, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, sq, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, sq, 2, 8)), jnp.float32)
+    pos = jnp.arange(sq)
+    out = attention.flash_attention(cfg, q, k, v, pos, pos)
+    ref = naive_attention(cfg, q, k, v, np.arange(sq))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=3e-5)
+
+
+def test_int8_kv_cache_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((2, 8, 4, 16)) * 3, jnp.float32)
+    q, scale = attention.quantize_kv(x)
+    back = attention.dequantize_kv(q, scale, jnp.float32)
+    rel = np.abs(np.asarray(back - x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 1.5 / 127
+
+
+def test_int8_cache_decode_close_to_fp(rng):
+    from repro.models.common import NATIVE_POLICY
+    base = dict(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                q_chunk=32, kv_chunk=32)
+    params = attention.init_attention(jax.random.PRNGKey(0),
+                                      AttnConfig(**base))
+    x = jnp.asarray(rng.standard_normal((1, 16, 32)), jnp.float32)
+    xd = jnp.asarray(rng.standard_normal((1, 1, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16), (1, 16))
+    outs = {}
+    for int8 in (False, True):
+        cfg = AttnConfig(**base, cache_int8=int8)
+        _, cache = attention.attention_prefill(params, cfg, x, pos,
+                                               NATIVE_POLICY, max_seq=24)
+        y, _ = attention.attention_decode(params, cfg, xd, 16, cache,
+                                          NATIVE_POLICY)
+        outs[int8] = np.asarray(y)
+    np.testing.assert_allclose(outs[True], outs[False], rtol=0.1, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants.
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100), top_k=st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_moe_dispatch_invariants(seed, top_k):
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import _dispatch_combine, _route, init_moe, \
+        padded_experts
+    rng = np.random.default_rng(seed)
+    cfg = MoEConfig(n_experts=6, top_k=top_k, d_ff_expert=8, pad_multiple=8,
+                    n_groups=2, capacity_factor=1.0)
+    params = init_moe(jax.random.PRNGKey(seed), 16, cfg, "swiglu")
+    x = jnp.asarray(rng.standard_normal((2, 12, 16)), jnp.float32)
+    xg = x.reshape(2, 12, 16)
+    w, idx, scores = _route(params, cfg, xg)
+    # padding experts (6, 7) never selected
+    assert int(np.asarray(idx).max()) < cfg.n_experts
+    dispatch, combine, cap = _dispatch_combine(cfg, w, idx, 12, jnp.float32)
+    d = np.asarray(dispatch)
+    # every (expert, slot) holds at most one token
+    assert (d.sum(axis=1) <= 1.0 + 1e-6).all()
+    # a token occupies at most top_k slots
+    assert (d.sum(axis=(2, 3)) <= top_k + 1e-6).all()
+    # combine weights are bounded by the (normalized) router weights
+    assert np.asarray(combine).sum(axis=(2, 3)).max() <= 1.0 + 1e-5

@@ -1,0 +1,142 @@
+"""Fault tolerance: checkpoint atomicity, bit-exact resume, stragglers,
+gradient compression determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(x=0.0):
+    return {"params": {"w": jnp.full((4, 4), 1.0 + x),
+                       "layers": {"b0": [jnp.arange(3.0)]}},
+            "step": jnp.asarray(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    state = _state()
+    mgr.save(3, state)
+    like = jax.eval_shape(lambda: state)
+    out = mgr.restore(3, like)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_n_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 5, 9):
+        mgr.save(s, _state(s))
+    assert mgr.all_steps() == [5, 9]
+    assert mgr.latest_step() == 9
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(1, _state(1.0))
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_tmp_dirs_are_not_valid_checkpoints(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    os.makedirs(tmp_path / ".tmp_step_4" )
+    mgr.save(2, _state())
+    assert mgr.all_steps() == [2]
+
+
+def test_failure_injection_and_bitexact_resume(tmp_path):
+    """Train 8 steps with a crash at step 5; restart; final params must be
+    bit-identical to an uninterrupted 8-step run."""
+    from repro.launch import train as train_cli
+
+    def run(ckpt, fail_at=None, steps=8):
+        argv = ["--arch", "olmo-1b", "--smoke", "--steps", str(steps),
+                "--batch", "2", "--seq", "32", "--ckpt-dir", ckpt,
+                "--ckpt-every", "2"]
+        if fail_at is not None:
+            argv += ["--fail-at", str(fail_at)]
+        return train_cli.main(argv)
+
+    ref_log = run(str(tmp_path / "ref"))
+    with pytest.raises(RuntimeError, match="injected failure"):
+        run(str(tmp_path / "ft"), fail_at=5)
+    log = run(str(tmp_path / "ft"))   # auto-resume from step 4
+    # Same loss trajectory after the resume point as the reference run.
+    ref_losses = {m["step"]: m["loss"] for m in ref_log}
+    for m in log:
+        if m["step"] >= 5:
+            assert abs(ref_losses[m["step"]] - m["loss"]) < 1e-6, m
+
+
+def test_straggler_monitor():
+    from repro.runtime import StragglerMonitor
+    mon = StragglerMonitor(z=3.0, warmup=3)
+    for i in range(10):
+        assert not mon.observe(i, 0.1 + 0.001 * (i % 2))
+    assert mon.observe(10, 5.0)
+    assert mon.stragglers[0][0] == 10
+
+
+def test_data_pipeline_determinism():
+    from repro import configs
+    from repro.configs.base import ShapeSpec
+    from repro.data import SyntheticLMDataset, make_batch_iterator
+    ds = SyntheticLMDataset(vocab=100, seq_len=16, seed=1)
+    b1 = ds.batch(step=4, batch_size=8, host=0, n_hosts=2)
+    b2 = ds.batch(step=4, batch_size=8, host=0, n_hosts=2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = ds.batch(step=4, batch_size=8, host=1, n_hosts=2)
+    assert (b1["tokens"] != b3["tokens"]).any()   # hosts get disjoint data
+    # iterator fast-forward equals direct indexing (resume correctness)
+    arch = configs.get_smoke_config("olmo-1b")
+    shape = ShapeSpec("t", 16, 4, "train")
+    it = iter(make_batch_iterator(arch, shape, seed=2))
+    for _ in range(3):
+        next(it)
+    _, b_at_3 = next(it)
+    it2 = iter(make_batch_iterator(arch, shape, seed=2))
+    for _ in range(3):
+        next(it2)
+    _, b_at_3b = next(it2)
+    np.testing.assert_array_equal(b_at_3["tokens"], b_at_3b["tokens"])
+
+
+def test_compressed_psum_exact_and_deterministic(rng):
+    """Scheme-II residue reduction: simulated 8-way gradient sum matches
+    the float sum to integerization precision and is order-invariant."""
+    import math
+    from repro.core.precision import default_moduli
+    from repro.core import scheme2
+    n, p = 8, 6
+    moduli = default_moduli(p)
+    grads = [rng.standard_normal((16, 16)).astype(np.float32)
+             for _ in range(n)]
+    amax = max(np.abs(g).max() for g in grads)
+    budget = int(sum(math.log2(m) for m in moduli) - 2 - math.ceil(
+        math.log2(n)))
+    budget = min(budget, 30)
+    scale = 2.0 ** (budget - 1 - np.ceil(np.log2(amax)))
+    ints = [np.round(g * scale).astype(np.int64) for g in grads]
+
+    def reduce_in_order(order):
+        acc = [np.zeros((16, 16), np.int32) for _ in moduli]
+        for i in order:
+            for l, m in enumerate(moduli):
+                half = m // 2
+                r = ((ints[i] + half) % m - half).astype(np.int32)
+                acc[l] = acc[l] + r
+        canon = jnp.stack([jnp.asarray(a % m, jnp.int32)
+                           for a, m in zip(acc, moduli)])
+        out = scheme2.crt_reconstruct(canon, moduli, jnp.float32)
+        return np.asarray(out) / scale
+
+    fwd = reduce_in_order(range(n))
+    rev = reduce_in_order(reversed(range(n)))
+    np.testing.assert_array_equal(fwd, rev)        # bitwise deterministic
+    ref = sum(ints)  # exact integer reference
+    np.testing.assert_allclose(fwd * scale, ref, atol=0.5)

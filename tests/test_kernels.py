@@ -1,0 +1,122 @@
+"""Pallas kernel sweeps (interpret mode) vs the pure-jnp oracles in ref.py.
+
+Every kernel is swept over shapes and slice/modulus counts; integer
+kernels must match the oracle bit-exactly, the Scheme-I kernel (float
+epilogue) to f32 summation-order tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scheme1, scheme2
+from repro.core.precision import EmulationConfig, default_moduli
+from repro.kernels import matmul_int8, ops, ozaki1, ozaki2, ozaki3m
+from repro.kernels import ref as kref
+from repro.kernels.common import Blocks, choose_blocks
+
+SHAPES = [(128, 128, 128), (256, 512, 128), (384, 256, 256)]
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+def test_int8_matmul_exact(rng, m, n, k):
+    a8 = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    out = matmul_int8.int8_matmul(a8, b8)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(kref.int8_matmul(a8, b8)))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_ozaki1_kernel_vs_oracle(make_matrix, m, n, k, p):
+    a = jnp.asarray(make_matrix((m, k)))
+    b = jnp.asarray(make_matrix((k, n)))
+    blocks = choose_blocks(m, n, k, p)
+    beta = EmulationConfig(scheme="ozaki1", p=p).resolved_beta(k)
+    a_sl, mu = scheme1.split(a, p, beta, axis=1)
+    b_sl, nu = scheme1.split(b, p, beta, axis=0)
+    a_hat = scheme1.interleave_k(a_sl, "a", blocks.bk)
+    b_hat = scheme1.interleave_k(b_sl, "b", blocks.bk)
+    out = ozaki1.fused_matmul_interleaved(a_hat, b_hat, mu, nu, p, beta,
+                                          blocks)
+    ref = kref.scheme1_interleaved(a_hat, b_hat, mu, nu, p, beta, blocks.bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5 * float(
+                                   jnp.abs(ref).max()))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("p", [4, 9, 15])
+def test_ozaki2_kernel_exact(rng, m, n, k, p):
+    moduli = default_moduli(p)
+    a_res = jnp.asarray(rng.integers(-127, 128, (p, m, k)), jnp.int8)
+    b_res = jnp.asarray(rng.integers(-127, 128, (p, k, n)), jnp.int8)
+    out = ozaki2.fused_residue_matmul(a_res, b_res, moduli)
+    ref = kref.scheme2_residues(a_res, b_res, moduli)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 256, 128)])
+@pytest.mark.parametrize("p", [3, 8])
+def test_ozaki3m_kernel_exact(rng, m, n, k, p):
+    moduli = default_moduli(p)
+    a3 = jnp.asarray(rng.integers(-100, 101, (p, 3, m, k)), jnp.int8)
+    b3 = jnp.asarray(rng.integers(-100, 101, (p, 3, k, n)), jnp.int8)
+    c_re, c_im = ozaki3m.fused_3m_residue_matmul(a3, b3, moduli)
+    r_re, r_im = kref.scheme2_3m(a3, b3, moduli)
+    np.testing.assert_array_equal(np.asarray(c_re), np.asarray(r_re))
+    np.testing.assert_array_equal(np.asarray(c_im), np.asarray(r_im))
+
+
+@pytest.mark.parametrize("p,min_bits", [(2, 9), (4, 19)])
+def test_fused_scheme1_end_to_end(make_matrix, p, min_bits):
+    a = jnp.asarray(make_matrix((256, 256)))
+    b = jnp.asarray(make_matrix((256, 256)))
+    cfg = EmulationConfig(scheme="ozaki1", p=p)
+    out = np.asarray(ops.fused_scheme1_matmul(a, b, cfg))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) >= min_bits  # ~beta bits per slice with margin
+
+
+@pytest.mark.parametrize("p", [6, 10])
+def test_fused_scheme2_end_to_end_matches_xla(make_matrix, p):
+    a = jnp.asarray(make_matrix((256, 256)))
+    b = jnp.asarray(make_matrix((256, 256)))
+    cfg = EmulationConfig(scheme="ozaki2", p=p)
+    fused = np.asarray(ops.fused_scheme2_matmul(a, b, cfg))
+    xla = np.asarray(scheme2.matmul(a, b, cfg, jnp.float32))
+    np.testing.assert_allclose(fused, xla, rtol=0, atol=0)  # bit-identical
+
+
+def test_fused_3m_end_to_end(make_matrix):
+    ar, ai = make_matrix((128, 128)), make_matrix((128, 128))
+    br, bi = make_matrix((128, 128)), make_matrix((128, 128))
+    a = jnp.asarray((ar + 1j * ai).astype(np.complex64))
+    b = jnp.asarray((br + 1j * bi).astype(np.complex64))
+    cfg = EmulationConfig(scheme="ozaki2", p=9)
+    out = np.asarray(ops.fused_3m_matmul(a, b, cfg))
+    ref = (ar + 1j * ai).astype(np.complex128) @ \
+        (br + 1j * bi).astype(np.complex128)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 12
+
+
+def test_blocks_respect_vmem_budget():
+    for p in (1, 4, 8):
+        blocks = choose_blocks(1024, 1024, 1024, p)
+        assert blocks is not None
+        acc = 4 * p * blocks.bm * blocks.bn
+        s_op = 2 * p * (blocks.bm + blocks.bn) * blocks.bk
+        assert acc + s_op <= 12 * 2 ** 20
+        # MXU alignment
+        assert blocks.bm % 32 == 0 and blocks.bn % 128 == 0
+
+
+def test_higher_p_forces_smaller_tiles():
+    """Paper Eq. 12: the p-fold accumulator scaling shrinks alpha_max."""
+    b1 = choose_blocks(2048, 2048, 2048, p=1)
+    b8 = choose_blocks(2048, 2048, 2048, p=8)
+    assert b1.bm * b1.bn >= b8.bm * b8.bn

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (assignment requirement) + the gold
+decode-vs-teacher-forcing consistency check."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.models.common import pad_vocab
+
+B, S = 2, 64
+
+
+def _inputs(m, rng, seq=S):
+    if m.frontend == "audio_stub":
+        return {"tokens": jnp.asarray(
+            rng.standard_normal((B, seq, m.frontend_dim)), jnp.float32)}
+    inputs = {"tokens": jnp.asarray(rng.integers(0, m.vocab, (B, seq)),
+                                    jnp.int32)}
+    if m.frontend == "vision_stub":
+        inputs["image_embeds"] = jnp.asarray(
+            rng.standard_normal((B, m.n_image_tokens, m.frontend_dim)),
+            jnp.float32)
+    return inputs
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_shapes_no_nans(arch, rng):
+    m = configs.get_smoke_config(arch).model
+    params = M.init_params(jax.random.PRNGKey(0), m)
+    logits, mtp, aux = M.forward_train(params, m, _inputs(m, rng))
+    assert logits.shape == (B, S, pad_vocab(m.vocab))
+    assert not np.isnan(np.asarray(logits)).any()
+    assert mtp is None or not np.isnan(np.asarray(mtp)).any()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step_decreases_loss(arch):
+    """One SGD-ish step on repeated data lowers the loss (gradient flows
+    through every block type)."""
+    from repro.configs.base import ShapeSpec
+    from repro.data import make_batch_iterator
+    from repro.launch import steps as Steps
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import make_optimizer
+
+    cfg = configs.get_smoke_config(arch)
+    shape = ShapeSpec("t", 32, 4, "train")
+    mesh = make_host_mesh()
+    opt_init, _ = make_optimizer(cfg.train.optimizer)
+    params = M.init_params(jax.random.PRNGKey(0), cfg.model)
+    state = {"params": params, "opt": opt_init(params)}
+    _, batch = next(iter(make_batch_iterator(cfg, shape)))
+    with mesh:
+        step = Steps.make_train_step(cfg, mesh, shape, donate=False)
+        losses = []
+        for _ in range(3):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+            assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCH_IDS
+                                  if configs.get_smoke_config(a).model.causal])
+def test_decode_matches_teacher_forcing(arch, rng):
+    cfg = configs.get_smoke_config(arch)
+    m = cfg.model
+    if m.moe is not None:  # lossless capacity so no tokens are dropped
+        m = dataclasses.replace(m, moe=dataclasses.replace(
+            m.moe, capacity_factor=float(m.moe.n_experts)))
+    params = M.init_params(jax.random.PRNGKey(0), m)
+    inputs = _inputs(m, rng)
+    logits, _, _ = M.forward_train(params, m, inputs)
+    pre = dict(inputs)
+    pre["tokens"] = inputs["tokens"][:, :S - 4]
+    _, cache = M.forward_prefill(params, m, pre, max_seq=S)
+    for t in range(S - 4, S):
+        dl, cache = M.forward_decode(params, m, inputs["tokens"][:, t:t + 1],
+                                     t, cache)
+        np.testing.assert_allclose(np.asarray(dl[:, 0]),
+                                   np.asarray(logits[:, t]),
+                                   rtol=1e-3, atol=2e-4)
+
+
+def test_encoder_is_bidirectional(rng):
+    """hubert: flipping a late frame must change early-position logits."""
+    m = configs.get_smoke_config("hubert-xlarge").model
+    params = M.init_params(jax.random.PRNGKey(0), m)
+    x = _inputs(m, rng)
+    logits1, _, _ = M.forward_train(params, m, x)
+    x2 = {"tokens": x["tokens"].at[:, -1].add(10.0)}
+    logits2, _, _ = M.forward_train(params, m, x2)
+    assert np.abs(np.asarray(logits1[:, 0] - logits2[:, 0])).max() > 1e-6
+
+
+def test_causal_masking_is_strict(rng):
+    """Decoder: perturbing a late token must NOT change earlier logits."""
+    m = configs.get_smoke_config("granite-3-8b").model
+    params = M.init_params(jax.random.PRNGKey(0), m)
+    toks = rng.integers(0, m.vocab, (B, S)).astype(np.int32)
+    l1, _, _ = M.forward_train(params, m, {"tokens": jnp.asarray(toks)})
+    toks2 = toks.copy()
+    toks2[:, -1] = (toks2[:, -1] + 7) % m.vocab
+    l2, _, _ = M.forward_train(params, m, {"tokens": jnp.asarray(toks2)})
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                               atol=1e-5)
+
+
+def test_vision_stub_prefix_influences_output(rng):
+    m = configs.get_smoke_config("internvl2-1b").model
+    params = M.init_params(jax.random.PRNGKey(0), m)
+    x = _inputs(m, rng)
+    l1, _, _ = M.forward_train(params, m, x)
+    x2 = dict(x)
+    x2["image_embeds"] = x["image_embeds"] + 1.0
+    l2, _, _ = M.forward_train(params, m, x2)
+    assert np.abs(np.asarray(l1 - l2)).max() > 1e-6
+
+
+def test_local_window_attention_limits_context(rng):
+    """recurrentgemma attention layers: tokens beyond the window cannot
+    influence the current logit through the attention path. (They still
+    can via the RG-LRU, so test the attention block in isolation.)"""
+    from repro.models import attention
+    from repro.models.attention import AttnConfig
+    cfg = AttnConfig(d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+                     window=8, q_chunk=16, kv_chunk=16)
+    params = attention.init_attention(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(rng.standard_normal((1, 64, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64), (1, 64))
+    from repro.models.common import NATIVE_POLICY
+    y1 = attention.attention_train(params, cfg, x, pos, NATIVE_POLICY)
+    x2 = x.at[:, 10].add(5.0)   # token 10 is outside window of position 40+
+    y2 = attention.attention_train(params, cfg, x2, pos, NATIVE_POLICY)
+    np.testing.assert_allclose(np.asarray(y1[:, 40:]),
+                               np.asarray(y2[:, 40:]), atol=1e-5)

@@ -1,0 +1,90 @@
+"""Ozaki Scheme I: decomposition exactness, interleaved layout, precision."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheme1
+from repro.core.precision import EmulationConfig, safe_beta
+from conftest import conditioned
+
+
+def test_split_reconstructs_to_residual_bound(make_matrix):
+    a = jnp.asarray(make_matrix((64, 96)))
+    p, beta = 5, 7
+    slices, scale = scheme1.split(a, p, beta, axis=1)
+    rec = sum(2.0 ** (-beta * (i + 1)) * slices[i].astype(jnp.float64)
+              for i in range(p)) * scale
+    resid = np.abs(np.asarray(rec - a))
+    bound = np.asarray(scale) * 2.0 ** (-beta * p)
+    assert (resid <= bound + 1e-30).all()
+
+
+def test_slices_fit_beta_bits(make_matrix):
+    a = jnp.asarray(make_matrix((32, 32), phi=4.0))
+    for beta in (4, 7):
+        slices, _ = scheme1.split(a, 4, beta, axis=1)
+        assert np.abs(np.asarray(slices)).max() <= 2 ** beta - 1
+
+
+@pytest.mark.parametrize("operand", ["a", "b"])
+@pytest.mark.parametrize("t_k", [32, 128])
+def test_interleave_roundtrip(rng, operand, t_k):
+    p, m, k = 3, 8, 256
+    shape = (p, m, k) if operand == "a" else (p, k, m)
+    slices = jnp.asarray(rng.integers(-127, 127, shape), jnp.int8)
+    x = scheme1.interleave_k(slices, operand, t_k)
+    assert x.shape == ((m, p * k) if operand == "a" else (p * k, m))
+    back = scheme1.deinterleave_k(x, p, operand, t_k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(slices))
+
+
+def test_interleave_layout_eq11(rng):
+    """Check the exact Eq. 11 placement: chunk c of slice i lands at
+    column block c*p + i."""
+    p, m, k, t_k = 3, 4, 128, 32
+    slices = jnp.asarray(rng.integers(-10, 10, (p, m, k)), jnp.int8)
+    a_hat = scheme1.interleave_k(slices, "a", t_k)
+    for i in range(p):
+        for c in range(k // t_k):
+            np.testing.assert_array_equal(
+                np.asarray(a_hat[:, (c * p + i) * t_k:(c * p + i + 1) * t_k]),
+                np.asarray(slices[i, :, c * t_k:(c + 1) * t_k]))
+
+
+@pytest.mark.parametrize("p,min_bits", [(2, 9), (3, 14), (4, 20)])
+def test_precision_grows_with_p(make_matrix, p, min_bits):
+    """~beta bits per slice (paper: each slice adds ~8 bits; beta=7 here)."""
+    a = jnp.asarray(make_matrix((128, 128), phi=2.0))
+    b = jnp.asarray(make_matrix((128, 128), phi=2.0))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    c = np.asarray(scheme1.matmul(a, b, EmulationConfig(scheme="ozaki1", p=p),
+                                  jnp.float32))
+    rel = np.abs(c - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) >= min_bits
+
+
+def test_triangular_gemm_count():
+    cfg = EmulationConfig(scheme="ozaki1", p=8)
+    assert cfg.gemm_count() == 36  # p(p+1)/2, paper Table II
+
+
+@given(k=st.integers(1, 2 ** 20))
+@settings(max_examples=50, deadline=None)
+def test_safe_beta_exactness_bound(k):
+    beta = safe_beta(k)
+    assert k * (2 ** beta - 1) ** 2 < 2 ** 31
+
+
+def test_complex_4m(make_matrix, rng):
+    a = (make_matrix((64, 64)) + 1j * make_matrix((64, 64))).astype(
+        np.complex64)
+    b = (make_matrix((64, 64)) + 1j * make_matrix((64, 64))).astype(
+        np.complex64)
+    ref = np.asarray(a, np.complex128) @ np.asarray(b, np.complex128)
+    c = np.asarray(scheme1.matmul_complex_4m(
+        jnp.asarray(a), jnp.asarray(b), EmulationConfig(scheme="ozaki1", p=4)))
+    rel = np.abs(c - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 18

@@ -1,0 +1,102 @@
+"""Ozaki Scheme II: moduli, residues, balanced-Garner CRT, precision."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheme2
+from repro.core.precision import (DEFAULT_MODULI, EmulationConfig,
+                                  default_moduli, scheme2_budget)
+
+
+def test_moduli_pairwise_coprime():
+    for i, a in enumerate(DEFAULT_MODULI):
+        for b in DEFAULT_MODULI[i + 1:]:
+            assert math.gcd(a, b) == 1, (a, b)
+    assert all(m <= 256 for m in DEFAULT_MODULI)
+
+
+def test_balanced_residues_congruent_and_int8(rng):
+    x = jnp.asarray(rng.integers(-2 ** 20, 2 ** 20, (64, 64)), jnp.float32)
+    moduli = default_moduli(6)
+    res = scheme2.balanced_residues(x, moduli)
+    xn = np.asarray(x, np.int64)
+    for l, m in enumerate(moduli):
+        r = np.asarray(res[l], np.int64)
+        assert (np.abs(r) <= m // 2).all()
+        assert ((r - xn) % m == 0).all(), f"not congruent mod {m}"
+
+
+@given(st.integers(2, 15), st.data())
+@settings(max_examples=40, deadline=None)
+def test_crt_roundtrip_exact(p, data):
+    """Property: any integer in (-P/2, P/2] reconstructs exactly through
+    residues -> balanced Garner digits -> double-double assembly, up to
+    the dd precision (~2^-48 relative for f32 pairs)."""
+    moduli = default_moduli(p)
+    p_prod = math.prod(moduli)
+    lim = min(p_prod // 2 - 1, 2 ** 45)  # within f32-dd exact range
+    xs = data.draw(st.lists(st.integers(-lim, lim), min_size=1, max_size=8))
+    arr = np.asarray(xs, np.int64).reshape(1, -1)
+    res = jnp.stack([jnp.asarray(((arr % m) + m) % m, jnp.int32)
+                     for m in moduli])
+    out = np.asarray(scheme2.crt_reconstruct(res, moduli, jnp.float32),
+                     np.float64)
+    # exact up to the float32 *output* rounding (the dd interior is wider)
+    rel_err = np.abs(out - arr) / np.maximum(np.abs(arr), 1)
+    assert (rel_err <= 2 ** -23).all(), (xs, out)
+
+
+def test_balanced_garner_high_digits_vanish():
+    """A small value's balanced mixed-radix digits are zero beyond the
+    first few — the property that kills the catastrophic cancellation of
+    'evaluate then subtract P'."""
+    moduli = default_moduli(12)
+    x = np.asarray([[12345]], np.int64)
+    res = jnp.stack([jnp.asarray(x % m, jnp.int32) for m in moduli])
+    digits = scheme2.garner_digits(res, moduli)
+    assert all(int(d[0, 0]) == 0 for d in digits[3:])
+
+
+@pytest.mark.parametrize("p,min_bits", [(6, 12), (8, 17), (12, 19)])
+def test_precision_grows_with_moduli(make_matrix, p, min_bits):
+    a = jnp.asarray(make_matrix((128, 128)))
+    b = jnp.asarray(make_matrix((128, 128)))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    c = np.asarray(scheme2.matmul(a, b, EmulationConfig(scheme="ozaki2", p=p),
+                                  jnp.float32))
+    rel = np.abs(c - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) >= min_bits
+
+
+def test_fp64_grade_with_x64(make_matrix):
+    with jax.experimental.enable_x64():
+        rng = np.random.default_rng(3)
+        a = ((rng.random((128, 128)) - 0.5)
+             * np.exp(2.0 * rng.standard_normal((128, 128))))
+        b = ((rng.random((128, 128)) - 0.5)
+             * np.exp(2.0 * rng.standard_normal((128, 128))))
+        ref = np.asarray(a, np.longdouble) @ np.asarray(b, np.longdouble)
+        c = np.asarray(scheme2.matmul(
+            jnp.asarray(a), jnp.asarray(b),
+            EmulationConfig(scheme="ozaki2", p=15), jnp.float64))
+        rel = float(np.abs(c.astype(np.longdouble) - ref).max()
+                    / np.abs(ref).max())
+        assert -np.log2(rel) > 40   # far beyond fp32's 24 bits
+
+
+def test_budget_respects_crt_bound():
+    for p in (4, 8, 15):
+        moduli = default_moduli(p)
+        k = 4096
+        bits = scheme2_budget(moduli, k)
+        # 2 * K * 2^b * 2^b < P must hold
+        assert 2 * k * (2 ** bits) ** 2 < math.prod(moduli)
+
+
+def test_linear_gemm_count():
+    assert EmulationConfig(scheme="ozaki2", p=15).gemm_count() == 15

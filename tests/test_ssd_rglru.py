@@ -1,0 +1,106 @@
+"""SSD chunked algorithm vs naive recurrence; RG-LRU scan vs step loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RGLRUConfig, SSDConfig
+from repro.models import rglru, ssd
+
+
+def naive_ssd(xh, dt, a, bmat, cmat, d_skip, h0=None):
+    """Direct recurrence h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    st = np.zeros((b, h, p, n)) if h0 is None else np.asarray(h0, np.float64)
+    xs = np.asarray(xh, np.float64)
+    dts = np.asarray(dt, np.float64)
+    bs = np.asarray(bmat, np.float64)
+    cs = np.asarray(cmat, np.float64)
+    av = np.asarray(a, np.float64)
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        decay = np.exp(dts[:, t] * av)                      # (B,H)
+        upd = np.einsum("bh,bhp,bn->bhpn", dts[:, t], xs[:, t], bs[:, t])
+        st = st * decay[..., None, None] + upd
+        ys[:, t] = np.einsum("bhpn,bn->bhp", st, cs[:, t])
+    ys = ys + np.asarray(d_skip)[None, None, :, None] * xs
+    return ys, st
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (40, 16), (64, 64)])
+def test_ssd_chunked_matches_recurrence(rng, s, chunk):
+    b, h, p, n = 2, 3, 4, 8
+    xh = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, h)) * 0.1 + 0.01, jnp.float32)
+    a = -jnp.asarray(rng.random(h) + 0.5, jnp.float32)
+    bmat = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    cmat = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    d_skip = jnp.asarray(rng.random(h), jnp.float32)
+    y, final = ssd.ssd_chunked(xh, dt, a, bmat, cmat, d_skip, chunk)
+    y_ref, final_ref = naive_ssd(xh, dt, a, bmat, cmat, d_skip)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), final_ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_prefill_then_decode_matches_full(rng):
+    """Chunked prefill state + recurrent decode == full-sequence scan."""
+    b, h, p, n, s = 1, 2, 4, 8, 24
+    xh = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, h)) * 0.1 + 0.01, jnp.float32)
+    a = -jnp.asarray(rng.random(h) + 0.5, jnp.float32)
+    bmat = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    cmat = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    d0 = jnp.zeros(h)
+    _, st8 = ssd.ssd_chunked(xh[:, :8], dt[:, :8], a, bmat[:, :8],
+                             cmat[:, :8], d0, chunk=8)
+    y_rest, st_full = ssd.ssd_chunked(xh[:, 8:], dt[:, 8:], a, bmat[:, 8:],
+                                      cmat[:, 8:], d0, chunk=8, h0=st8)
+    y_all, st_all = ssd.ssd_chunked(xh, dt, a, bmat, cmat, d0, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_rest), np.asarray(y_all[:, 8:]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_full), np.asarray(st_all),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_scan_matches_step_loop(rng):
+    b, s, w = 2, 16, 8
+    a = jnp.asarray(rng.random((b, s, w)) * 0.8 + 0.1, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((b, s, w)), jnp.float32)
+    h = rglru.rglru_scan(a, u)
+    ref = np.zeros((b, w))
+    for t in range(s):
+        ref = np.asarray(a[:, t]) * ref + np.asarray(u[:, t])
+        np.testing.assert_allclose(np.asarray(h[:, t]), ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_scan_with_initial_state(rng):
+    b, s, w = 1, 8, 4
+    a = jnp.asarray(rng.random((b, s, w)) * 0.9, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((b, s, w)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, w)), jnp.float32)
+    h = rglru.rglru_scan(a, u, h0)
+    ref = np.asarray(h0)
+    for t in range(s):
+        ref = np.asarray(a[:, t]) * ref + np.asarray(u[:, t])
+    np.testing.assert_allclose(np.asarray(h[:, -1]), ref, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_causal_conv_decode_matches_train(rng):
+    from repro.models.rglru import _causal_conv
+    b, s, w, k = 1, 12, 4, 4
+    x = jnp.asarray(rng.standard_normal((b, s, w)), jnp.float32)
+    cw = jnp.asarray(rng.standard_normal((k, w)), jnp.float32)
+    cb = jnp.zeros(w)
+    y_full, _ = _causal_conv(x, cw, cb)
+    state = jnp.zeros((b, k - 1, w))
+    ys = []
+    for t in range(s):
+        y, state = _causal_conv(x[:, t:t + 1], cw, cb, state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,61 @@
+"""Paper traffic models (Eqs. 9/10/14/15/17/18) and their headline ratios."""
+
+import pytest
+
+from repro.core import traffic
+from repro.core.traffic import GemmShape
+
+
+@pytest.fixture
+def s():
+    return GemmShape(4096, 4096, 4096)
+
+
+def test_eq9_eq10_scheme1(s):
+    p = 8
+    naive = traffic.scheme1_naive_bytes(s, p)
+    fused = traffic.scheme1_fused_bytes(s, p)
+    assert naive == (p * (p + 1) // 2 * (s.m + s.n) * s.k
+                     + 4 * p * (p + 1) * s.m * s.n + 8 * s.m * s.n)
+    assert fused == p * (s.m + s.n) * s.k + 8 * s.m * s.n
+    assert naive > fused
+
+
+def test_scheme1_intensity_gain_is_half_p_plus_1(s):
+    """Operand-load intensity rises exactly (p+1)/2 (paper Sec. III:
+    4.5x at p=8); including the naive INT32 round-trips the full gain is
+    even larger."""
+    p = 8
+    assert abs(traffic.scheme1_intensity_gain(p) - 4.5) < 1e-9
+    operand_naive = p * (p + 1) // 2 * (s.m + s.n) * s.k
+    operand_fused = p * (s.m + s.n) * s.k
+    assert operand_naive / operand_fused == (p + 1) / 2
+    full_gain = (traffic.scheme1_naive_bytes(s, p)
+                 / traffic.scheme1_fused_bytes(s, p))
+    assert full_gain > (p + 1) / 2
+
+
+def test_eq14_eq15_8x_output_reduction(s):
+    naive = traffic.scheme2_naive_bytes_per_modulus(s)
+    fused = traffic.scheme2_fused_bytes_per_modulus(s)
+    out_naive = naive - (s.m + s.n) * s.k
+    out_fused = fused - (s.m + s.n) * s.k
+    assert out_naive == 9 * s.m * s.n and out_fused == s.m * s.n
+    assert out_naive / out_fused == 9  # 8MN round-trip + MN write -> MN
+
+
+def test_eq17_eq18_3m(s):
+    naive = traffic.scheme2_3m_naive_bytes_per_modulus(s)
+    fused = traffic.scheme2_3m_fused_bytes_per_modulus(s)
+    assert naive - fused == 24 * s.m * s.n  # the 24MN int32 term vanishes
+    # fused 3M writes 2MN vs 3MN for three independent fused real GEMMs
+    three_real = 3 * traffic.scheme2_fused_bytes_per_modulus(s) \
+        - 3 * (s.m + s.n) * s.k + 3 * (s.m + s.n) * s.k
+    assert fused < three_real
+
+
+def test_workspace_scheme2_exceeds_scheme1(s):
+    """Paper Sec. V-F: Scheme II workspace > Scheme I at matched p."""
+    p = 8
+    assert traffic.scheme2_workspace_bytes(s, p) > \
+        traffic.scheme1_workspace_bytes(s, p)
