@@ -80,3 +80,14 @@ def matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
 def gemm_count(cfg: EmulationConfig) -> int:
     """3M: 3 GEMMs per modulus (vs 4 for 4M)."""
     return 3 * cfg.p
+
+
+def fused_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                 out_dtype=None) -> jax.Array:
+    """Complex Scheme-II GEMM on the fused 3M kernel, via the dispatcher
+    (cached block selection; non-aligned shapes are padded, not refused)."""
+    import dataclasses
+    from repro.kernels import dispatch  # lazy: keep the XLA path pallas-free
+    if cfg.scheme != "ozaki2":
+        cfg = dataclasses.replace(cfg, scheme="ozaki2")
+    return dispatch.emulated_matmul(a, b, cfg=cfg, out_dtype=out_dtype)

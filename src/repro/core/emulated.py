@@ -43,14 +43,15 @@ def _dot_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig) -> jax.Array:
             a, b, (((1,), (0,)), ((), ())),
             preferred_element_type=out_dtype)
     if cfg.impl in ("auto", "pallas"):
-        from repro.kernels import ops as kernel_ops  # lazy: pallas import
-        fn = kernel_ops.maybe_fused_matmul(a, b, cfg)
-        if fn is not None:
-            return fn
+        from repro.kernels import dispatch  # lazy: pallas import
+        out = dispatch.maybe_emulated_matmul(a, b, cfg)
+        if out is not None:
+            return out
         if cfg.impl == "pallas":
-            raise ValueError(
-                f"pallas impl requested but shapes {a.shape}x{b.shape} are "
-                f"not tile-aligned for the fused kernel")
+            # Explicit fused request: the dispatcher pads non-aligned
+            # operands to the nearest 128 tile and slices the result.
+            return dispatch.emulated_matmul(a, b, cfg=cfg,
+                                            out_dtype=out_dtype)
     if cfg.scheme == "ozaki1":
         if _is_complex(a) or _is_complex(b):
             return scheme1.matmul_complex_4m(a, b, cfg, out_dtype=None)

@@ -177,3 +177,14 @@ def matmul_complex_4m(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
 def decomposition_residual_bound(p: int, beta: int) -> float:
     """Elementwise |a - reconstruction| <= scale * 2^{-beta p}."""
     return float(2.0 ** (-beta * p))
+
+
+def fused_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                 out_dtype=None) -> jax.Array:
+    """Scheme-I GEMM on the fused EmuGEMM-I kernel, via the dispatcher
+    (cached block selection; non-aligned shapes are padded, not refused)."""
+    import dataclasses
+    from repro.kernels import dispatch  # lazy: keep the XLA path pallas-free
+    if cfg.scheme != "ozaki1":
+        cfg = dataclasses.replace(cfg, scheme="ozaki1")
+    return dispatch.emulated_matmul(a, b, cfg=cfg, out_dtype=out_dtype)

@@ -175,3 +175,14 @@ def matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
 
 def effective_bits(moduli, k_dim: int) -> int:
     return scheme2_budget(moduli, k_dim)
+
+
+def fused_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                 out_dtype=None) -> jax.Array:
+    """Scheme-II GEMM on the fused EmuGEMM-II kernel, via the dispatcher
+    (cached block selection; non-aligned shapes are padded, not refused)."""
+    import dataclasses
+    from repro.kernels import dispatch  # lazy: keep the XLA path pallas-free
+    if cfg.scheme != "ozaki2":
+        cfg = dataclasses.replace(cfg, scheme="ozaki2")
+    return dispatch.emulated_matmul(a, b, cfg=cfg, out_dtype=out_dtype)

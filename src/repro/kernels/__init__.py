@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused Pallas TPU kernels for EmuGEMM precision emulation.
+
+Layering:
+
+  compat.py      feature-probed JAX-version shims (compiler params,
+                 scalar-prefetch grid specs) — absorb upstream API drift
+  dispatch.py    the ONLY place pl.pallas_call is constructed; cached
+                 block selection, padded non-aligned routing, batching,
+                 launch-policy resolution
+  common.py      VMEM budget model (choose_blocks) and interpret-mode probe
+  ozaki1/2/3m, matmul_int8, flash_attn, decompose
+                 the kernels themselves; all route through dispatch
+  ops.py         jit'd end-to-end pipelines (decompose -> kernel -> CRT)
+  ref.py         pure-jnp oracles for the test suite
+"""
+
+from repro.kernels.dispatch import (  # noqa: F401
+    build_pallas_call,
+    emulated_matmul,
+    emulated_matmul_batched,
+    resolve_policy,
+    select_blocks,
+)

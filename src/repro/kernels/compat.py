@@ -1,0 +1,102 @@
+"""JAX-version compatibility shims for the Pallas TPU kernel layer.
+
+The Pallas TPU surface has drifted across jax releases: the compiler-params
+dataclass was renamed (``TPUCompilerParams`` -> ``CompilerParams``), fields
+like ``dimension_semantics`` come and go, and ``PrefetchScalarGridSpec``
+predates the unified ``pl.GridSpec`` scalar-prefetch support. Every kernel
+in this package previously hardcoded one vintage of that API, so a single
+upstream rename broke all five kernels identically.
+
+This module absorbs the drift in one place. Everything is *feature-probed*
+(attribute/field introspection) rather than keyed off ``jax.__version__``,
+so forks and backports that cherry-pick the rename still resolve correctly.
+The probes are unit-tested in tests/test_dispatch.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Any
+
+from jax.experimental import pallas as pl  # noqa: F401  (re-export surface)
+from jax.experimental.pallas import tpu as pltpu
+
+# Names the compiler-params dataclass has carried, newest first.
+_COMPILER_PARAMS_NAMES = ("CompilerParams", "TPUCompilerParams")
+
+
+@functools.cache
+def compiler_params_cls() -> type | None:
+    """The TPU compiler-params class of the installed jax, or None."""
+    for name in _COMPILER_PARAMS_NAMES:
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+@functools.cache
+def compiler_params_fields() -> frozenset[str]:
+    """Constructor fields accepted by the installed compiler-params class."""
+    cls = compiler_params_cls()
+    if cls is None:
+        return frozenset()
+    if dataclasses.is_dataclass(cls):
+        return frozenset(f.name for f in dataclasses.fields(cls))
+    params = inspect.signature(cls).parameters
+    return frozenset(p for p in params if p != "self")
+
+
+def supports_dimension_semantics() -> bool:
+    return "dimension_semantics" in compiler_params_fields()
+
+
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs) -> Any | None:
+    """Build the compiler-params object for this jax version.
+
+    Unknown fields are dropped (they are performance hints, not semantics);
+    returns None when no compiler-params class exists at all, in which case
+    the caller must omit the ``compiler_params=`` argument entirely.
+    """
+    cls = compiler_params_cls()
+    if cls is None:
+        return None
+    accepted = compiler_params_fields()
+    kw = {k: v for k, v in kwargs.items() if k in accepted and v is not None}
+    if dimension_semantics is not None and supports_dimension_semantics():
+        kw["dimension_semantics"] = tuple(dimension_semantics)
+    return cls(**kw)
+
+
+@functools.cache
+def has_scalar_prefetch_grid_spec() -> bool:
+    return hasattr(pltpu, "PrefetchScalarGridSpec")
+
+
+def scalar_prefetch_grid_spec(*, num_scalar_prefetch: int, grid,
+                              in_specs, out_specs, scratch_shapes=()):
+    """A grid spec whose first ``num_scalar_prefetch`` operands are SMEM
+    scalar-prefetch arguments (moduli tables etc.)."""
+    if has_scalar_prefetch_grid_spec():
+        return pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=num_scalar_prefetch,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch_shapes,
+        )
+    # Unified-GridSpec jax versions: pl.GridSpec grew the same keyword.
+    spec_params = inspect.signature(pl.GridSpec).parameters
+    if "num_scalar_prefetch" in spec_params:
+        return pl.GridSpec(
+            num_scalar_prefetch=num_scalar_prefetch,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch_shapes,
+        )
+    raise NotImplementedError(
+        "installed jax exposes neither pltpu.PrefetchScalarGridSpec nor a "
+        "scalar-prefetch-capable pl.GridSpec")

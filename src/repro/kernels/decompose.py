@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import interpret
+from repro.kernels.dispatch import build_pallas_call
 
 
 def _kernel(a_ref, mu_ref, out_ref, *, p: int, beta: int, bk: int):
@@ -46,13 +46,13 @@ def decompose_interleave(a: jax.Array, mu: jax.Array, p: int, beta: int,
     bk = min(bk, k)
     assert m % bm == 0 and k % bk == 0, (m, k, bm, bk)
     kernel = functools.partial(_kernel, p=p, beta=beta, bk=bk)
-    return pl.pallas_call(
+    return build_pallas_call(
         kernel,
         grid=(m // bm, k // bk),
         in_specs=[pl.BlockSpec((bm, bk), lambda i, c: (i, c)),
                   pl.BlockSpec((bm, 1), lambda i, c: (i, 0))],
         out_specs=pl.BlockSpec((bm, p * bk), lambda i, c: (i, c)),
         out_shape=jax.ShapeDtypeStruct((m, p * k), jnp.int8),
-        interpret=interpret(),
+        dimension_semantics=("parallel", "parallel"),
         name=f"decompose_interleave_p{p}",
     )(a, mu)

@@ -1,0 +1,300 @@
+"""Centralized pallas-call construction and emulated-GEMM dispatch.
+
+Every fused kernel in this package (``ozaki1``, ``ozaki2``, ``ozaki3m``,
+``matmul_int8``, ``flash_attn``) builds its ``pl.pallas_call`` through
+:func:`build_pallas_call`, which resolves the JAX-version compiler-params
+drift once via :mod:`repro.kernels.compat` — an API rename upstream is a
+one-file fix here instead of five identical kernel breakages.
+
+On top of the call builder this module owns the *routing* policy:
+
+* :func:`select_blocks` — ``choose_blocks`` memoized per
+  (shape, p, out_bytes, backend) key, so repeated call-sites (training
+  steps re-tracing the same projection shapes) never re-run the VMEM
+  budget search, and a future GPU (Mosaic/Triton) backend can return
+  different tiles for the same problem.
+* :func:`emulated_matmul` — the single entry point for an emulated GEMM.
+  Non-128-aligned operands are zero-padded to the nearest aligned tile,
+  run through the fused kernel, and sliced back — zero rows/columns are
+  exact under both schemes (they decompose to zero slices / zero
+  residues), so padding changes traffic, never values.
+* :func:`emulated_matmul_batched` — leading batch dims on the activation
+  flatten into M (the usual ``activations @ weights`` pattern); a shared
+  leading axis on both operands maps the fused kernel with ``jax.vmap``.
+* :func:`resolve_policy` — clamps a model ``GemmPolicy`` to what the
+  launch target supports: the interpret-mode Pallas lowering is a
+  sequential grid loop GSPMD cannot partition, so multi-device meshes and
+  non-TPU backends pin ``impl='xla'`` (previously a comment in
+  ``parse_gemm_spec`` that every caller had to remember).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.precision import EmulationConfig
+from repro.kernels import compat
+from repro.kernels.common import Blocks, choose_blocks, interpret
+
+# MXU lane/tile alignment the fused kernels require on every dimension.
+ALIGN = 128
+
+
+# ---------------------------------------------------------------------------
+# The one place a pl.pallas_call is constructed.
+# ---------------------------------------------------------------------------
+
+def build_pallas_call(kernel, *, out_shape, grid=None, in_specs=None,
+                      out_specs=None, grid_spec=None, scratch_shapes=None,
+                      dimension_semantics=None, name=None,
+                      interpret_mode: bool | None = None,
+                      **compiler_kwargs):
+    """Construct a ``pl.pallas_call`` with version-portable compiler params.
+
+    Exactly one of ``grid`` (+ ``in_specs``/``out_specs``) or ``grid_spec``
+    must be given. ``compiler_kwargs`` (e.g. ``vmem_limit_bytes``) are
+    forwarded to the compiler-params object when the installed jax accepts
+    them and silently dropped otherwise.
+    """
+    kw: dict = {}
+    if grid_spec is not None:
+        if grid is not None or in_specs is not None or out_specs is not None:
+            raise ValueError("pass either grid_spec or grid/in_specs/out_specs")
+        kw["grid_spec"] = grid_spec
+    else:
+        kw["grid"] = grid
+        kw["in_specs"] = in_specs
+        kw["out_specs"] = out_specs
+    if scratch_shapes is not None:
+        kw["scratch_shapes"] = scratch_shapes
+    params = compat.tpu_compiler_params(
+        dimension_semantics=dimension_semantics, **compiler_kwargs)
+    if params is not None:
+        kw["compiler_params"] = params
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        interpret=interpret() if interpret_mode is None else interpret_mode,
+        name=name,
+        **kw)
+
+
+# ---------------------------------------------------------------------------
+# Block selection, cached per (shape, p, dtype-bytes, backend).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def _select_blocks_cached(m: int, n: int, k: int, p: int, out_bytes: int,
+                          backend: str) -> Blocks | None:
+    # `backend` keys the cache only: tile search is TPU-modelled today, but
+    # a Mosaic-GPU/Triton backend will pick different tiles for the same
+    # problem without invalidating TPU entries.
+    del backend
+    return choose_blocks(m, n, k, p, out_bytes=out_bytes)
+
+
+def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
+                  backend: str | None = None) -> Blocks | None:
+    return _select_blocks_cached(m, n, k, p, out_bytes,
+                                 backend or jax.default_backend())
+
+
+def block_cache_info():
+    """Cache statistics, exposed for tests and perf probes."""
+    return _select_blocks_cached.cache_info()
+
+
+def block_cache_clear() -> None:
+    _select_blocks_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Padding: route non-aligned problems through the fused kernels.
+# ---------------------------------------------------------------------------
+
+def round_up(x: int, mult: int = ALIGN) -> int:
+    return -(-x // mult) * mult
+
+
+def padded_mkn(m: int, k: int, n: int,
+               align: int = ALIGN) -> tuple[int, int, int]:
+    return round_up(m, align), round_up(k, align), round_up(n, align)
+
+
+def pad_operands(a: jax.Array, b: jax.Array, align: int = ALIGN):
+    """Zero-pad (M, K) x (K, N) up to ``align`` multiples.
+
+    Zero padding is exact for every scheme here: zero rows/cols slice to
+    all-zero int8 slices (Scheme I) and integerize to all-zero residues
+    (Scheme II), contributing nothing to the padded products.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    mp, kp, np_ = padded_mkn(m, k, n, align)
+    if (mp, kp, np_) == (m, k, n):
+        return a, b
+    return (jnp.pad(a, ((0, mp - m), (0, kp - k))),
+            jnp.pad(b, ((0, kp - k), (0, np_ - n))))
+
+
+# ---------------------------------------------------------------------------
+# The emulated-GEMM entry point.
+# ---------------------------------------------------------------------------
+
+def _is_complex(x) -> bool:
+    return jnp.issubdtype(x.dtype, jnp.complexfloating)
+
+
+def _resolve_cfg(cfg, scheme, precision) -> EmulationConfig:
+    if cfg is not None:
+        return cfg
+    return EmulationConfig(scheme=scheme,
+                           p=precision if precision is not None else 4)
+
+
+def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype):
+    """Aligned 2-D problem -> the fused kernel for cfg.scheme."""
+    from repro.kernels import ops  # lazy: ops imports the kernel modules
+    cplx = _is_complex(a) or _is_complex(b)
+    if cplx and jnp.issubdtype(jnp.dtype(out_dtype), jnp.complexfloating):
+        # Real-valued interior: the complex result is assembled at the end.
+        out_dtype = jnp.real(jnp.zeros((), out_dtype)).dtype
+    if cfg.scheme == "ozaki1":
+        if cplx:
+            # Scheme-I complex (4M) has no fused kernel: four fused real
+            # GEMMs (paper Sec. V-D runs EmuGEMM-I complex exactly so).
+            ar, ai = jnp.real(a), jnp.imag(a)
+            br, bi = jnp.real(b), jnp.imag(b)
+            rr = ops.fused_scheme1_matmul(ar, br, cfg, out_dtype=out_dtype)
+            ii = ops.fused_scheme1_matmul(ai, bi, cfg, out_dtype=out_dtype)
+            ri = ops.fused_scheme1_matmul(ar, bi, cfg, out_dtype=out_dtype)
+            ir = ops.fused_scheme1_matmul(ai, br, cfg, out_dtype=out_dtype)
+            return jax.lax.complex(rr - ii, ri + ir)
+        return ops.fused_scheme1_matmul(a, b, cfg, out_dtype=out_dtype)
+    if cfg.scheme == "ozaki2":
+        if cplx:
+            return ops.fused_3m_matmul(a, b, cfg, out_dtype=out_dtype)
+        return ops.fused_scheme2_matmul(a, b, cfg, out_dtype=out_dtype)
+    raise ValueError(f"no fused kernel for scheme {cfg.scheme!r}")
+
+
+def emulated_matmul(a: jax.Array, b: jax.Array, *,
+                    scheme: str = "ozaki1", precision: int | None = None,
+                    cfg: EmulationConfig | None = None,
+                    out_dtype=None) -> jax.Array:
+    """Emulated (M, K) @ (K, N) through the fused Pallas kernels.
+
+    Blocks come from the per-(shape, p, dtype, backend) cache; operands
+    that are not 128-aligned are zero-padded to the nearest aligned tile,
+    run fused, and the (M, N) result sliced back out — this path replaces
+    the historical ``ValueError("no aligned blocks")``.
+    """
+    cfg = _resolve_cfg(cfg, scheme, precision)
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"emulated_matmul is 2-D; got {a.shape} @ {b.shape} "
+                         "(use emulated_matmul_batched)")
+    m, k = a.shape
+    _, n = b.shape
+    if out_dtype is None:
+        out_dtype = cfg.out_dtype
+    if cfg.scheme == "native":
+        out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=out_dtype)
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype)
+    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
+    blocks = select_blocks(m, n, k, p_eff,
+                           out_bytes=jnp.dtype(out_dtype).itemsize)
+    if blocks is not None and blocks.aligned(m, n, k):
+        return _fused_2d(a, b, cfg, out_dtype)
+    a_p, b_p = pad_operands(a, b)
+    return _fused_2d(a_p, b_p, cfg, out_dtype)[:m, :n]
+
+
+def emulated_matmul_batched(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """vmap-compatible batched wrapper around :func:`emulated_matmul`.
+
+    * ``b`` 2-D: leading dims of ``a`` flatten into M (activations @
+      weights) — one fused launch.
+    * matching leading axes: the 2-D dispatcher is vmapped over them.
+    """
+    if a.ndim == 2 and b.ndim == 2:
+        return emulated_matmul(a, b, **kw)
+    if b.ndim == 2:
+        lead = a.shape[:-1]
+        out = emulated_matmul(a.reshape(-1, a.shape[-1]), b, **kw)
+        return out.reshape(*lead, b.shape[-1])
+    if a.ndim != b.ndim or a.shape[:-2] != b.shape[:-2]:
+        raise ValueError(f"incompatible batch dims {a.shape} @ {b.shape}")
+    fn = functools.partial(emulated_matmul_batched, **kw)
+    return jax.vmap(fn)(a, b)
+
+
+def maybe_emulated_matmul(a: jax.Array, b: jax.Array,
+                          cfg: EmulationConfig):
+    """'auto'-impl hook: the fused kernel when the 2-D problem is naturally
+    tile-aligned, else None (caller falls back to the XLA expansion —
+    padding is reserved for explicit ``impl='pallas'`` requests, where the
+    copy+slice overhead was asked for)."""
+    if a.ndim != 2 or b.ndim != 2 or cfg.scheme == "native":
+        return None
+    if cfg.scheme == "ozaki1" and (_is_complex(a) or _is_complex(b)):
+        return None  # 4x fused launches is not an 'auto' win; XLA path
+    m, k = a.shape
+    _, n = b.shape
+    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
+    out_dtype = cfg.out_dtype or jnp.promote_types(jnp.real(a).dtype,
+                                                   jnp.real(b).dtype)
+    blocks = select_blocks(m, n, k, p_eff,
+                           out_bytes=jnp.dtype(out_dtype).itemsize)
+    if blocks is None or not blocks.aligned(m, n, k):
+        return None
+    return _fused_2d(a, b, cfg, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Launch-layer policy resolution.
+# ---------------------------------------------------------------------------
+
+def _mesh_devices(mesh) -> int:
+    if mesh is None:
+        return len(jax.devices())
+    size = getattr(mesh, "size", None)
+    if size is not None:
+        return int(size)
+    shape = getattr(mesh, "shape", None)
+    if hasattr(shape, "values"):
+        return math.prod(shape.values())
+    return len(jax.devices())
+
+
+def resolve_policy(policy, mesh=None):
+    """Pin emulated call-sites to impls the launch target can execute.
+
+    The fused kernels' interpret-mode lowering is a sequential grid loop
+    that GSPMD cannot partition: on a multi-device mesh or a non-TPU
+    backend, 'auto'/'pallas' impls are rewritten to 'xla' so the emulation
+    partitions like any other dot. Single-device TPU keeps the request.
+    """
+    sites = [policy.default] + [cfg for _, cfg in policy.overrides]
+    if all(c.scheme == "native" or c.impl == "xla" for c in sites):
+        return policy
+    if _mesh_devices(mesh) <= 1 and jax.default_backend() == "tpu":
+        return policy
+
+    def fix(cfg: EmulationConfig) -> EmulationConfig:
+        if cfg.scheme == "native" or cfg.impl == "xla":
+            return cfg
+        return dataclasses.replace(cfg, impl="xla")
+
+    return dataclasses.replace(
+        policy, default=fix(policy.default),
+        overrides=tuple((s, fix(c)) for s, c in policy.overrides))

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import interpret
+from repro.kernels.dispatch import build_pallas_call
 
 NEG_INF = -1e30
 
@@ -91,7 +91,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
                                window=window, bq=bq, bk=bk)
-    return pl.pallas_call(
+    return build_pallas_call(
         kernel,
         grid=(b, h, sq // bq, sk // bk),
         in_specs=[
@@ -108,9 +108,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),   # running max
             pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
-        interpret=interpret(),
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"),
         name="flash_attention",
     )(q, k, v)

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import Blocks, choose_blocks, interpret
+from repro.kernels.common import Blocks
+from repro.kernels.dispatch import build_pallas_call, select_blocks
 
 
 def _kernel(a_ref, b_ref, out_ref, acc_ref):
@@ -39,11 +40,11 @@ def int8_matmul(a8: jax.Array, b8: jax.Array,
     m, k = a8.shape
     _, n = b8.shape
     if blocks is None:
-        blocks = choose_blocks(m, n, k, p=1)
+        blocks = select_blocks(m, n, k, p=1)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)}")
     bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
-    return pl.pallas_call(
+    return build_pallas_call(
         _kernel,
         grid=(m // bm, n // bn, k // bk),
         in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -51,8 +52,6 @@ def int8_matmul(a8: jax.Array, b8: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret(),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         name="int8_gemm",
     )(a8, b8)

@@ -11,9 +11,9 @@ keeps decomposition and CRT as separate kernels; the *fusion claim* covers
 the GEMM-side INT32 traffic, which is exactly what the Pallas kernels
 eliminate.
 
-``maybe_fused_matmul`` is the dispatch hook used by repro.core.emulated:
-returns None when the problem does not fit the fused kernels (non-2D,
-unaligned, complex Scheme-I), letting the caller fall back to XLA.
+Routing (alignment checks, block caching, padding, batching) lives in
+repro.kernels.dispatch; ``maybe_fused_matmul`` is kept as a thin alias of
+``dispatch.maybe_emulated_matmul`` for existing callers.
 """
 
 from __future__ import annotations
@@ -25,8 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import complex3m, scheme1, scheme2
 from repro.core.precision import EmulationConfig, scheme2_budget
-from repro.kernels import ozaki1, ozaki2, ozaki3m
-from repro.kernels.common import Blocks, choose_blocks
+from repro.kernels import dispatch, ozaki1, ozaki2, ozaki3m
 from repro.kernels.matmul_int8 import int8_matmul  # noqa: F401  (re-export)
 
 
@@ -38,7 +37,8 @@ def fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     _, n = b.shape
     p = cfg.p
     beta = cfg.resolved_beta(k)
-    blocks = choose_blocks(m, n, k, p)
+    blocks = dispatch.select_blocks(m, n, k, p,
+                                    out_bytes=jnp.dtype(out_dtype).itemsize)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"shapes {(m, n, k)} not tile-aligned")
     a_sl, mu = scheme1.split(a, p, beta, axis=1)
@@ -120,24 +120,4 @@ def fused_3m_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
 
 def maybe_fused_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig):
     """Dispatch hook for repro.core.emulated: fused kernel or None."""
-    if a.ndim != 2 or b.ndim != 2:
-        return None
-    m, k = a.shape
-    _, n = b.shape
-    is_cplx = jnp.issubdtype(a.dtype, jnp.complexfloating) or \
-        jnp.issubdtype(b.dtype, jnp.complexfloating)
-    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
-    blocks = choose_blocks(m, n, k, p_eff)
-    if blocks is None or not blocks.aligned(m, n, k):
-        return None
-    out_dtype = cfg.out_dtype or (
-        jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype))
-    if cfg.scheme == "ozaki1":
-        if is_cplx:
-            return None  # Scheme-I complex (4M) runs on the XLA path
-        return fused_scheme1_matmul(a, b, cfg, out_dtype=out_dtype)
-    if cfg.scheme == "ozaki2":
-        if is_cplx:
-            return fused_3m_matmul(a, b, cfg)
-        return fused_scheme2_matmul(a, b, cfg, out_dtype=out_dtype)
-    return None
+    return dispatch.maybe_emulated_matmul(a, b, cfg)

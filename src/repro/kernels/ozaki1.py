@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import Blocks, choose_blocks, interpret
+from repro.kernels.common import Blocks
+from repro.kernels.dispatch import build_pallas_call, select_blocks
 
 
 def _kernel(a_ref, b_ref, mu_ref, nu_ref, out_ref, acc_ref, *,
@@ -80,14 +81,15 @@ def fused_matmul_interleaved(a_hat: jax.Array, b_hat: jax.Array,
     assert pk == pk2, (a_hat.shape, b_hat.shape)
     k = pk // p
     if blocks is None:
-        blocks = choose_blocks(m, n, k, p)
+        blocks = select_blocks(m, n, k, p,
+                               out_bytes=jnp.dtype(out_dtype).itemsize)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)} p={p}")
     bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
 
     kernel = functools.partial(_kernel, p=p, beta=beta, bk=bk,
                                out_dtype=out_dtype)
-    return pl.pallas_call(
+    return build_pallas_call(
         kernel,
         grid=(m // bm, n // bn, k // bk),
         in_specs=[
@@ -100,8 +102,6 @@ def fused_matmul_interleaved(a_hat: jax.Array, b_hat: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((p, bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret(),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         name=f"emugemm1_p{p}",
     )(a_hat, b_hat, mu, nu)

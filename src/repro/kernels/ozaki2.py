@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import Blocks, choose_blocks, interpret
+from repro.kernels import compat
+from repro.kernels.common import Blocks
+from repro.kernels.dispatch import build_pallas_call, select_blocks
 
 
 def _kernel(mods_ref, a_ref, b_ref, out_ref, acc_ref):
@@ -56,13 +58,13 @@ def fused_residue_matmul(a_res: jax.Array, b_res: jax.Array,
     p, m, k = a_res.shape
     _, _, n = b_res.shape
     if blocks is None:
-        blocks = choose_blocks(m, n, k, p=1)  # single accumulator (Sec. IV-C)
+        blocks = select_blocks(m, n, k, p=1)  # single accumulator (Sec. IV-C)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)}")
     bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
     mods = jnp.asarray(moduli, dtype=jnp.int32)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.scalar_prefetch_grid_spec(
         num_scalar_prefetch=1,
         grid=(p, m // bm, n // bn, k // bk),
         in_specs=[
@@ -72,13 +74,11 @@ def fused_residue_matmul(a_res: jax.Array, b_res: jax.Array,
         out_specs=pl.BlockSpec((1, bm, bn), lambda l, i, j, kk, mods: (l, i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
     )
-    return pl.pallas_call(
+    return build_pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((p, m, n), jnp.int8),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "parallel", "parallel",
-                                 "arbitrary")),
-        interpret=interpret(),
+        dimension_semantics=("arbitrary", "parallel", "parallel",
+                             "arbitrary"),
         name=f"emugemm2_p{p}",
     )(mods, a_res, b_res)

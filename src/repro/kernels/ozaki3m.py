@@ -25,7 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import Blocks, choose_blocks, interpret
+from repro.kernels import compat
+from repro.kernels.common import Blocks
+from repro.kernels.dispatch import build_pallas_call, select_blocks
 
 
 def _kernel(mods_ref, a_ref, b_ref, out_re_ref, out_im_ref,
@@ -77,13 +79,13 @@ def fused_3m_residue_matmul(a3: jax.Array, b3: jax.Array, moduli,
     assert three == 3
     _, _, _, n = b3.shape
     if blocks is None:
-        blocks = choose_blocks(m, n, k, p=1)
+        blocks = select_blocks(m, n, k, p=1)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)}")
     bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
     mods = jnp.asarray(moduli, dtype=jnp.int32)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.scalar_prefetch_grid_spec(
         num_scalar_prefetch=1,
         grid=(p, m // bm, n // bn, 3, k // bk),
         in_specs=[
@@ -102,14 +104,12 @@ def fused_3m_residue_matmul(a3: jax.Array, b3: jax.Array, moduli,
             pltpu.VMEM((bm, bn), jnp.int8),   # T2 residue
         ],
     )
-    return pl.pallas_call(
+    return build_pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((p, m, n), jnp.int8),
                    jax.ShapeDtypeStruct((p, m, n), jnp.int8)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "parallel", "parallel",
-                                 "arbitrary", "arbitrary")),
-        interpret=interpret(),
+        dimension_semantics=("arbitrary", "parallel", "parallel",
+                             "arbitrary", "arbitrary"),
         name=f"emugemm2_3m_p{p}",
     )(mods, a3, b3)

@@ -77,6 +77,8 @@ def run_cell(arch_id: str, shape: ShapeSpec, multi_pod: bool,
                                         None),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict] per device
+        ca = ca[0] if ca else {}
     rec["cost_analysis"] = {"flops": ca.get("flops"),
                             "bytes_accessed": ca.get("bytes accessed")}
 

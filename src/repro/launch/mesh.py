@@ -9,7 +9,22 @@ inter-pod (DCN) collectives.
 
 from __future__ import annotations
 
+import inspect
+
 import jax
+
+
+def make_abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Device-free AbstractMesh across the drifting constructor signatures.
+
+    jax 0.4.x takes a single ``shape_tuple`` of (name, size) pairs; newer
+    releases take ``(axis_sizes, axis_names)``. Feature-probed like
+    repro.kernels.compat, not version-string keyed.
+    """
+    params = inspect.signature(jax.sharding.AbstractMesh).parameters
+    if "shape_tuple" in params:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    return jax.sharding.AbstractMesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
+from repro.kernels import dispatch
 from repro.models import model as M
 from repro.models.common import (GemmPolicy, NATIVE_POLICY,
                                  cross_entropy_loss)
@@ -99,6 +100,9 @@ def make_loss_fn(arch: ArchConfig, policy: GemmPolicy):
 def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
                     policy: GemmPolicy = NATIVE_POLICY,
                     donate: bool = True):
+    # The dispatcher owns impl selection: fused Pallas call-sites are
+    # rewritten to the XLA expansion wherever GSPMD must partition them.
+    policy = dispatch.resolve_policy(policy, mesh)
     loss_fn = make_loss_fn(arch, policy)
     _, opt_update = make_optimizer(arch.train.optimizer)
     n_micro = arch.train.microbatches
@@ -166,6 +170,7 @@ def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
 
 def make_prefill_step(arch: ArchConfig, shape: ShapeSpec, mesh,
                       policy: GemmPolicy = NATIVE_POLICY):
+    policy = dispatch.resolve_policy(policy, mesh)
     mcfg = arch.model
 
     if not mcfg.causal:   # encoder: 'prefill' is a plain forward pass
@@ -196,6 +201,7 @@ def make_prefill_step(arch: ArchConfig, shape: ShapeSpec, mesh,
 def make_decode_step(arch: ArchConfig, shape: ShapeSpec, mesh,
                      policy: GemmPolicy = NATIVE_POLICY,
                      donate: bool = True):
+    policy = dispatch.resolve_policy(policy, mesh)
     mcfg = arch.model
 
     def decode(params, cache, tokens, pos):

@@ -69,6 +69,39 @@ def _shape_dims(segment: str):
     return [int(d) for d in m.group(2).split(",") if d]
 
 
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_dims(operands: str, index: int, symtab: dict):
+    """Dims of the ``index``-th operand in an op's argument list.
+
+    Prefers the inline operand types modern HLO prints
+    (``dot(f32[8,64]{1,0} %lhs, ...)``); name-only lists resolve through
+    the per-computation symbol table."""
+    shapes = _SHAPE_RE.findall(operands)
+    names = _NAME_RE.findall(operands)
+    if len(shapes) > index and len(shapes) >= len(names):
+        return [int(d) for d in shapes[index][1].split(",") if d]
+    if len(names) > index:
+        t = symtab.get(names[index])
+        if t:
+            return _shape_dims(t)
+    return None
+
+
+def _operand_bytes(operands: str, symtab: dict) -> int:
+    """Total byte size of every operand in an op's argument list."""
+    shapes = _SHAPE_RE.findall(operands)
+    if shapes:
+        return sum(_shape_bytes(d, s) for d, s in shapes)
+    total = 0
+    for name in _NAME_RE.findall(operands):
+        t = symtab.get(name)
+        if t:
+            total += _all_shape_bytes(t)
+    return total
+
+
 @dataclasses.dataclass
 class _Comp:
     flops: float = 0.0
@@ -139,19 +172,21 @@ def parse_hlo(text: str) -> dict:
             comp.coll_bytes += factor * _all_shape_bytes(rtype)
 
         if opcode == "dot":
+            # 2 * prod(result_dims) * prod(contracting_dims). The lhs shape
+            # is read from the inline operand type (modern HLO prints
+            # `dot(f32[8,64] %lhs, ...)`; splitting the operand list on
+            # bare commas would truncate it at `f32[8`), falling back to
+            # the symbol table for name-only operand lists.
             dims = _shape_dims(rtype) or []
             out = math.prod(dims) if dims else 1
             ops = re.search(r"dot\(([^)]*)\)", line)
             kprod = 1
             cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
             if ops and cdims:
-                lhs = ops.group(1).split(",")[0].strip().lstrip("%")
-                lhs_t = symtab.get(lhs)
-                if lhs_t:
-                    ldims = _shape_dims(lhs_t) or []
-                    for ci in cdims.group(1).split(","):
-                        if ci and int(ci) < len(ldims):
-                            kprod *= ldims[int(ci)]
+                ldims = _operand_dims(ops.group(1), 0, symtab)
+                for ci in cdims.group(1).split(","):
+                    if ci and ldims and int(ci) < len(ldims):
+                        kprod *= ldims[int(ci)]
             comp.flops += 2.0 * out * kprod
 
         if opcode not in _SKIP_OPS:
@@ -163,10 +198,7 @@ def parse_hlo(text: str) -> dict:
             if opcode == "dot":
                 ops = re.search(r"dot\(([^)]*)\)", line)
                 if ops:
-                    for ref in ops.group(1).split(","):
-                        t = symtab.get(ref.strip().lstrip("%"))
-                        if t:
-                            bytes_ += _all_shape_bytes(t)
+                    bytes_ += _operand_bytes(ops.group(1), symtab)
             comp.mem_bytes += bytes_
 
     return {"comps": comps, "entry": entry}

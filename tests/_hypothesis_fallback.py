@@ -1,0 +1,175 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` API this suite uses.
+
+``hypothesis`` is a declared test dependency (see pyproject.toml), but some
+execution environments cannot install it. Rather than losing 4 test modules
+at collection, :func:`install` registers this module under
+``sys.modules['hypothesis']`` — *only* when the real package is absent
+(tests/conftest.py gates it), so an installed hypothesis always wins.
+
+Semantics: ``@given`` runs the test body ``max_examples`` times with values
+drawn from a per-test deterministic PRNG (seeded from the test name), always
+including the strategy boundary values first. This is a vendored fallback,
+not a property-testing engine — no shrinking, no example database — but it
+executes the same assertions over the same value domains.
+
+Supported surface (exactly what the suite imports):
+  given, settings, strategies.{integers, floats, booleans, sampled_from,
+  lists, data}
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import struct
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A draw function plus the boundary examples tried first."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class _DataStrategy:
+    """Marker for ``st.data()`` — materialized per example as _DataObject."""
+
+
+class _DataObject:
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy):
+        return strategy.draw(self._rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value),
+                     boundary=(min_value, max_value, 0)
+                     if min_value <= 0 <= max_value
+                     else (min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)), boundary=(False, True))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements), boundary=elements[:2])
+
+
+def _to_width(x: float, width: int) -> float:
+    if width == 32:
+        # round-trip through IEEE binary32 so draws are exactly representable
+        return struct.unpack("f", struct.pack("f", x))[0]
+    return x
+
+
+def floats(min_value=None, max_value=None, allow_nan=None,
+           allow_infinity=None, allow_subnormal=None,
+           width: int = 64) -> _Strategy:
+    lo = -1e300 if min_value is None else float(min_value)
+    hi = 1e300 if max_value is None else float(max_value)
+
+    def draw(r: random.Random) -> float:
+        roll = r.random()
+        if roll < 0.3:
+            # log-uniform magnitude: floats cluster near 0 in practice
+            import math
+            span = max(abs(lo), abs(hi), 1.0)
+            mag = math.exp(r.uniform(0.0, math.log(span + 1.0))) - 1.0
+            x = mag if r.random() < 0.5 else -mag
+            x = min(max(x, lo), hi)
+        else:
+            x = r.uniform(lo, hi)
+        x = _to_width(x, width)
+        return min(max(x, lo), hi)
+
+    boundary = [_to_width(lo, width), _to_width(hi, width)]
+    if lo <= 0.0 <= hi:
+        boundary.append(0.0)
+    return _Strategy(draw, boundary=boundary)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        return [elements.draw(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def data() -> _DataStrategy:
+    return _DataStrategy()
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            cfg = (getattr(wrapper, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", None))
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            seed0 = zlib.adler32(fn.__module__.encode()
+                                 + fn.__qualname__.encode())
+            for ex in range(n):
+                rnd = random.Random(seed0 * 100003 + ex)
+
+                def materialize(strat, slot):
+                    if isinstance(strat, _DataStrategy):
+                        return _DataObject(rnd)
+                    if ex < len(strat.boundary):
+                        return strat.boundary[ex]
+                    return strat.draw(rnd)
+
+                args = [materialize(s, i)
+                        for i, s in enumerate(arg_strategies)]
+                kwargs = {k: materialize(s, i)
+                          for i, (k, s) in enumerate(kw_strategies.items())}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:  # noqa: BLE001 — re-raise with example
+                    shown = {f"arg{i}": a for i, a in enumerate(args)}
+                    shown.update(kwargs)
+                    raise AssertionError(
+                        f"falsifying example (#{ex}): {shown!r}") from e
+        # pytest must see a zero-arg signature, not the wrapped one —
+        # otherwise the strategy parameters look like missing fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+    return decorator
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (call only when absent)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "data"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,209 @@
+"""Kernel dispatch layer: compat feature-probe, block-selection caching,
+and the padded non-aligned fused path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.precision import EmulationConfig
+from repro.kernels import compat, dispatch
+from repro.kernels.common import choose_blocks
+
+
+# ---------------------------------------------------------------------------
+# compat: the feature probe, under both attribute names.
+# ---------------------------------------------------------------------------
+
+def test_compiler_params_probe_resolves_installed_class():
+    cls = compat.compiler_params_cls()
+    assert cls is not None, "installed jax exposes no TPU compiler params"
+    assert cls is getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+@pytest.mark.parametrize("name", ["CompilerParams", "TPUCompilerParams"])
+def test_compiler_params_probe_accepts_either_name(monkeypatch, name):
+    """The shim must resolve whichever of the two names an installed jax
+    carries — simulate both vintages against a stand-in namespace."""
+    import dataclasses
+
+    @dataclasses.dataclass
+    class Fake:
+        dimension_semantics: tuple | None = None
+
+    for stale in ("CompilerParams", "TPUCompilerParams"):
+        monkeypatch.delattr(compat.pltpu, stale, raising=False)
+    monkeypatch.setattr(compat.pltpu, name, Fake, raising=False)
+    compat.compiler_params_cls.cache_clear()
+    compat.compiler_params_fields.cache_clear()
+    try:
+        assert compat.compiler_params_cls() is Fake
+        params = compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"))
+        assert params.dimension_semantics == ("parallel", "arbitrary")
+    finally:
+        compat.compiler_params_cls.cache_clear()
+        compat.compiler_params_fields.cache_clear()
+
+
+def test_unknown_compiler_fields_are_dropped():
+    params = compat.tpu_compiler_params(
+        dimension_semantics=("parallel",),
+        not_a_real_field_ever=123)
+    assert not hasattr(params, "not_a_real_field_ever") or \
+        getattr(params, "not_a_real_field_ever", None) is None
+
+
+def test_scalar_prefetch_grid_spec_constructs():
+    import jax.experimental.pallas as pl
+    spec = compat.scalar_prefetch_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j, s: (i, j))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j, s: (i, j)),
+        scratch_shapes=[pltpu.VMEM((128, 128), jnp.int32)],
+    )
+    assert spec is not None
+
+
+# ---------------------------------------------------------------------------
+# dispatch: block-selection caching.
+# ---------------------------------------------------------------------------
+
+def test_select_blocks_matches_choose_blocks_and_caches():
+    dispatch.block_cache_clear()
+    b1 = dispatch.select_blocks(512, 512, 512, p=4)
+    misses = dispatch.block_cache_info().misses
+    b2 = dispatch.select_blocks(512, 512, 512, p=4)
+    assert b1 == b2 == choose_blocks(512, 512, 512, 4)
+    assert dispatch.block_cache_info().misses == misses  # second call: hit
+    assert dispatch.block_cache_info().hits >= 1
+
+
+def test_select_blocks_key_includes_backend():
+    dispatch.block_cache_clear()
+    dispatch.select_blocks(256, 256, 256, p=2, backend="cpu")
+    m = dispatch.block_cache_info().misses
+    dispatch.select_blocks(256, 256, 256, p=2, backend="tpu-v5e")
+    assert dispatch.block_cache_info().misses == m + 1
+
+
+# ---------------------------------------------------------------------------
+# dispatch: padded non-aligned path vs the float64 oracle.
+# ---------------------------------------------------------------------------
+
+def test_padded_nonaligned_scheme1_matches_oracle(make_matrix):
+    a = jnp.asarray(make_matrix((100, 200)))
+    b = jnp.asarray(make_matrix((200, 96)))
+    # historical behavior: ValueError("no aligned blocks ...") — now padded
+    out = np.asarray(dispatch.emulated_matmul(a, b, scheme="ozaki1",
+                                              precision=4))
+    assert out.shape == (100, 96)
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 18
+
+
+def test_padded_nonaligned_scheme2_matches_oracle(make_matrix):
+    a = jnp.asarray(make_matrix((100, 200)))
+    b = jnp.asarray(make_matrix((200, 96)))
+    out = np.asarray(dispatch.emulated_matmul(a, b, scheme="ozaki2",
+                                              precision=8))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 18
+
+
+def test_aligned_shapes_skip_padding(make_matrix):
+    a = jnp.asarray(make_matrix((128, 128)))
+    b = jnp.asarray(make_matrix((128, 128)))
+    a_p, b_p = dispatch.pad_operands(a, b)
+    assert a_p is a and b_p is b
+
+
+def test_pallas_impl_no_longer_raises_on_unaligned(make_matrix):
+    from repro.core.emulated import emulated_dot
+    a = jnp.asarray(make_matrix((100, 200)))
+    b = jnp.asarray(make_matrix((200, 96)))
+    cfg = EmulationConfig(scheme="ozaki1", p=3, impl="pallas")
+    out = np.asarray(emulated_dot(a, b, cfg))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 12
+
+
+def test_core_fused_wrappers_pin_their_scheme(make_matrix):
+    """scheme1.fused_matmul must run Scheme I even when handed a cfg built
+    for the other scheme (the wrapper pins, the dispatcher dispatches)."""
+    from repro.core import scheme1, scheme2
+    a = jnp.asarray(make_matrix((128, 128)))
+    b = jnp.asarray(make_matrix((128, 128)))
+    cfg2 = EmulationConfig(scheme="ozaki2", p=8)
+    out1 = np.asarray(scheme1.fused_matmul(a, b, cfg2))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    assert np.abs(out1 - ref).max() / np.abs(ref).max() < 1e-3
+    cfg1 = EmulationConfig(scheme="ozaki1", p=4)
+    out2 = np.asarray(scheme2.fused_matmul(a, b, cfg1))
+    # scheme2 path is bit-identical to its XLA reference
+    xla = np.asarray(scheme2.matmul(a, b,
+                                    EmulationConfig(scheme="ozaki2", p=4),
+                                    jnp.float32))
+    np.testing.assert_allclose(out2, xla, rtol=0, atol=0)
+
+
+def test_emulated_matmul_honors_cfg_out_dtype(make_matrix):
+    a = jnp.asarray(make_matrix((128, 128)))
+    b = jnp.asarray(make_matrix((128, 128)))
+    cfg = EmulationConfig(scheme="ozaki1", p=4, out_dtype="bfloat16")
+    out = dispatch.emulated_matmul(a, b, cfg=cfg)
+    assert out.dtype == jnp.bfloat16
+    # explicit argument wins over the config
+    out2 = dispatch.emulated_matmul(a, b, cfg=cfg, out_dtype=jnp.float32)
+    assert out2.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# dispatch: batched paths.
+# ---------------------------------------------------------------------------
+
+def test_batched_leading_dims_flatten(make_matrix):
+    a = jnp.asarray(make_matrix((2, 3, 64, 128)))
+    b = jnp.asarray(make_matrix((128, 128)))
+    out = np.asarray(dispatch.emulated_matmul_batched(
+        a, b, scheme="ozaki2", precision=8))
+    assert out.shape == (2, 3, 64, 128)
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 18
+
+
+def test_batched_vmap_over_shared_axis(make_matrix):
+    a = jnp.asarray(make_matrix((3, 128, 128)))
+    b = jnp.asarray(make_matrix((3, 128, 128)))
+    out = np.asarray(dispatch.emulated_matmul_batched(
+        a, b, scheme="ozaki1", precision=3))
+    ref = np.einsum("bij,bjk->bik", np.asarray(a, np.float64),
+                    np.asarray(b, np.float64))
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 12
+
+
+# ---------------------------------------------------------------------------
+# dispatch: launch-policy resolution.
+# ---------------------------------------------------------------------------
+
+def test_resolve_policy_pins_xla_off_tpu():
+    from repro.models.common import GemmPolicy
+    pol = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=3,
+                                             impl="pallas"),
+                     overrides=(("ffn", EmulationConfig(scheme="ozaki2",
+                                                        p=8, impl="auto")),))
+    resolved = dispatch.resolve_policy(pol, mesh=None)
+    if jax.default_backend() != "tpu":
+        assert resolved.default.impl == "xla"
+        assert dict(resolved.overrides)["ffn"].impl == "xla"
+    # native / explicit-xla policies pass through untouched
+    native = GemmPolicy()
+    assert dispatch.resolve_policy(native, mesh=None) is native

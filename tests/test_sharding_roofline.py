@@ -8,6 +8,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.launch import mesh as mesh_lib
 from repro.launch import steps as S
 from repro.parallel import sharding as shd
 from repro.utils import roofline
@@ -16,7 +17,9 @@ from repro.utils import roofline
 def abstract_mesh(multi):
     shape = (2, 16, 16) if multi else (16, 16)
     axes = ("pod", "data", "model") if multi else ("data", "model")
-    return jax.sharding.AbstractMesh(shape, axes)
+    # Constructor signature drifts across jax releases; the launch layer
+    # owns the feature-probed shim.
+    return mesh_lib.make_abstract_mesh(shape, axes)
 
 
 @pytest.mark.parametrize("arch", configs.ARCH_IDS)
