@@ -1,0 +1,196 @@
+"""Decomposition-side HBM traffic: decompose-in-XLA vs fused prologue vs
+PreparedOperand weight reuse.
+
+Seeds the bench trajectory with a deterministic, interpret-mode-safe
+metric: the analytic decomposition-byte model
+(repro.core.traffic.scheme1_decomp_*_bytes, surfaced through
+repro.utils.roofline.scheme1_decomposition_terms), corroborated by
+measured compiled-HLO bytes/op-counts of the XLA-visible decomposition
+stages, and a bit-identity check of the in-kernel prologue against the
+split -> interleave -> kernel pipeline.
+
+  PYTHONPATH=src python benchmarks/bench_traffic.py \
+      [--out BENCH_traffic.json] [--check-baseline benchmarks/traffic_baseline.json]
+
+With --check-baseline the run exits non-zero if any cell's decomposition
+bytes regress above the recorded baseline or the headline reductions
+fall below the acceptance floors (>=2x fused prologue, >=3x
+PreparedOperand weight reuse at p=4) — the CI regression gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import scheme1, traffic  # noqa: E402
+from repro.core.precision import EmulationConfig  # noqa: E402
+from repro.utils import roofline  # noqa: E402
+
+SHAPES = [(256, 256, 256), (128, 384, 256), (256, 128, 512)]  # (M, K, N)
+PS = (3, 4, 6)
+USES = 3  # forward, remat re-forward, backward B^T — per layer per step
+PROLOGUE_FLOOR = 2.0
+PREPARED_FLOOR = 3.0
+
+
+def _count_ops(hlo_text: str) -> int:
+    return sum(1 for line in hlo_text.splitlines()
+               if roofline._OP_RE.match(line))
+
+
+def _measure(fn, *args) -> dict:
+    """Compiled-HLO mem bytes + op count of a jitted stage (roofline path)."""
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    stats = roofline.analyze_hlo(text)
+    return {"mem_bytes": int(stats["mem_bytes"]), "ops": _count_ops(text)}
+
+
+def _bit_identity(m: int, k: int, n: int, p: int) -> bool:
+    """Prologue output must equal the split->interleave pipeline bitwise
+    (same int8 slices -> same int32 accumulators -> same epilogue)."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(p * 7919 + m + k + n)
+    a = jnp.asarray(((rng.random((m, k)) - 0.5)
+                     * np.exp(2.0 * rng.standard_normal((m, k))))
+                    .astype(np.float32))
+    b = jnp.asarray(((rng.random((k, n)) - 0.5)
+                     * np.exp(2.0 * rng.standard_normal((k, n))))
+                    .astype(np.float32))
+    pro = ops.fused_scheme1_matmul(
+        a, b, EmulationConfig(scheme="ozaki1", p=p, decomp="kernel"))
+    xla = ops.fused_scheme1_matmul(
+        a, b, EmulationConfig(scheme="ozaki1", p=p, decomp="xla"))
+    return bool(jnp.array_equal(pro, xla))
+
+
+def run_cell(m: int, k: int, n: int, p: int, verify: bool) -> dict:
+    terms = roofline.scheme1_decomposition_terms(m, k, n, p, uses=USES)
+    w = k * n  # the weight (rhs) operand
+    weight = {
+        "xla": traffic.scheme1_decomp_xla_bytes(w, p, USES),
+        "prepared": traffic.scheme1_decomp_prepared_bytes(w, p, 1),
+    }
+    cell = {
+        "m": m, "k": k, "n": n, "p": p,
+        "decomp_bytes": {
+            "xla": terms["xla_bytes"],
+            "prologue": terms["prologue_bytes"],
+            "prepared": terms["prepared_bytes"],
+        },
+        "weight_decomp_bytes": weight,
+        "reduction": {
+            "prologue": terms["xla_bytes"] / terms["prologue_bytes"],
+            "prepared": terms["xla_bytes"] / terms["prepared_bytes"],
+            "prepared_weight": weight["xla"] / weight["prepared"],
+        },
+    }
+
+    beta = EmulationConfig(scheme="ozaki1", p=p).resolved_beta(k)
+
+    def xla_stage(a, b):
+        a_sl, mu = scheme1.split(a, p, beta, axis=1)
+        b_sl, nu = scheme1.split(b, p, beta, axis=0)
+        return (scheme1.interleave_k(a_sl, "a", 128),
+                scheme1.interleave_k(b_sl, "b", 128), mu, nu)
+
+    def prologue_stage(a, b):
+        # Only the scale reductions stay in XLA on the prologue path.
+        return (scheme1._pow2_row_scale(a, axis=1),
+                scheme1._pow2_row_scale(b, axis=0))
+
+    a_spec = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    cell["measured"] = {
+        "xla_stage": _measure(xla_stage, a_spec, b_spec),
+        "prologue_stage": _measure(prologue_stage, a_spec, b_spec),
+    }
+    if verify:
+        cell["bit_identical"] = _bit_identity(m, k, n, p)
+    return cell
+
+
+def check_baseline(report: dict, baseline: dict) -> list[str]:
+    errors = []
+    base = {(c["m"], c["k"], c["n"], c["p"]): c for c in baseline["cells"]}
+    for c in report["cells"]:
+        key = (c["m"], c["k"], c["n"], c["p"])
+        ref = base.get(key)
+        if ref is None:
+            continue
+        for path, cur in c["decomp_bytes"].items():
+            old = ref["decomp_bytes"].get(path)
+            if old is not None and cur > old:
+                errors.append(f"{key} {path}: {cur} > baseline {old}")
+        if c.get("bit_identical") is False:
+            errors.append(f"{key}: prologue not bit-identical to split")
+    head = report["acceptance"]
+    if head["prologue_reduction_p4"] < PROLOGUE_FLOOR:
+        errors.append(f"prologue reduction {head['prologue_reduction_p4']:.2f}"
+                      f" < {PROLOGUE_FLOOR}")
+    if head["prepared_weight_reduction_p4"] < PREPARED_FLOOR:
+        errors.append(
+            f"prepared weight reduction "
+            f"{head['prepared_weight_reduction_p4']:.2f} < {PREPARED_FLOOR}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_traffic.json")
+    ap.add_argument("--check-baseline", default=None)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the (slower) kernel bit-identity checks")
+    args = ap.parse_args(argv)
+
+    cells = []
+    for m, k, n in SHAPES:
+        for p in PS:
+            cell = run_cell(m, k, n, p, verify=not args.no_verify)
+            cells.append(cell)
+            r = cell["reduction"]
+            print(f"({m},{k},{n}) p={p}: xla "
+                  f"{cell['decomp_bytes']['xla']/1e6:.2f}MB -> prologue "
+                  f"{r['prologue']:.2f}x, prepared(weight) "
+                  f"{r['prepared_weight']:.2f}x, bit_identical="
+                  f"{cell.get('bit_identical', 'skipped')}", flush=True)
+
+    p4 = [c for c in cells if c["p"] == 4]
+    report = {
+        "schema": "bench_traffic/v1",
+        "uses_per_step": USES,
+        "cells": cells,
+        "acceptance": {
+            "prologue_reduction_p4":
+                min(c["reduction"]["prologue"] for c in p4),
+            "prepared_weight_reduction_p4":
+                min(c["reduction"]["prepared_weight"] for c in p4),
+            "bit_identical":
+                all(c.get("bit_identical", True) for c in cells),
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.check_baseline:
+        with open(args.check_baseline) as f:
+            baseline = json.load(f)
+        errors = check_baseline(report, baseline)
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        if errors:
+            return 1
+        print("baseline check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

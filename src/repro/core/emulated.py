@@ -16,6 +16,13 @@ emulated GEMM, so models can *train* entirely on the int8 emulated path —
 this is what makes the paper's kernel a first-class framework feature rather
 than a standalone library call.
 
+With ``cfg.cache_weights`` the VJP decomposes the rhs *once per step*: the
+forward prepares B (and its K-transposed twin, see
+repro.kernels.prepared) in a single fp32 read, the backward dA consumes
+the twin's finished slices instead of re-splitting B^T — killing the
+3x-per-layer-per-step decomposition round-trips of the naive pipeline
+(forward, remat re-forward, backward each re-splitting the same weight).
+
 Leading batch dimensions of ``a`` are flattened into M (the usual
 activations @ weights pattern).
 """
@@ -33,6 +40,29 @@ from repro.core.precision import EmulationConfig, NATIVE
 
 def _is_complex(x) -> bool:
     return jnp.issubdtype(x.dtype, jnp.complexfloating)
+
+
+def prepared_dot(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """x: (..., K) @ a PreparedOperand w: (K, N) -> (..., N).
+
+    The once-per-session serving path (no VJP: serving never
+    differentiates, and the int8 slices carry no gradient).
+    """
+    from repro.kernels import prepared  # lazy: pallas import
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    lead = x.shape[:-1]
+    out = prepared.matmul_prepared(x.reshape(-1, x.shape[-1]), w,
+                                   out_dtype=out_dtype)
+    return out.reshape(*lead, w.n)
+
+
+def _cacheable(a, b, cfg: EmulationConfig) -> bool:
+    # Complex problems route through the 4M expansion, not the real-only
+    # prepared path (a silent cast would drop the imaginary part).
+    return (cfg.scheme == "ozaki1" and cfg.cache_weights
+            and getattr(b, "ndim", 0) == 2
+            and not _is_complex(a) and not _is_complex(b))
 
 
 def _dot_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig) -> jax.Array:
@@ -74,12 +104,17 @@ def emulated_dot(a: jax.Array, b: jax.Array,
 
 
 def _fwd(a, b, cfg):
-    return emulated_dot(a, b, cfg), (a, b)
+    if _cacheable(a, b, cfg):
+        # Decompose the rhs once: forward layout + K-transposed twin.
+        from repro.kernels import prepared  # lazy: pallas import
+        prep = prepared.prepare_rhs(b, cfg, with_twin=True)
+        out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
+        return prepared_dot(a, prep, out_dtype), (a, b, prep.twin)
+    return emulated_dot(a, b, cfg), (a, b, None)
 
 
 def _bwd(cfg, res, g):
-    a, b = res
-    lead = a.shape[:-1]
+    a, b, twin = res
     a2 = a.reshape(-1, a.shape[-1])
     g2 = g.reshape(-1, g.shape[-1])
     # Backward GEMMs run through the same emulated path (exact-int
@@ -88,7 +123,14 @@ def _bwd(cfg, res, g):
     if cfg.bwd_p and cfg.bwd_p != cfg.p:
         import dataclasses
         cfg = dataclasses.replace(cfg, p=cfg.bwd_p)
-    da = _dot_2d(g2, b.T, cfg).reshape(a.shape).astype(a.dtype)
+    if twin is not None:
+        # dA = dC @ B^T from the twin's finished slices — no re-split.
+        # Same accumulation dtype as the uncached _dot_2d branch.
+        da_dtype = cfg.out_dtype or jnp.promote_types(g2.dtype, b.dtype)
+        da = prepared_dot(g2, twin, da_dtype).reshape(a.shape) \
+            .astype(a.dtype)
+    else:
+        da = _dot_2d(g2, b.T, cfg).reshape(a.shape).astype(a.dtype)
     db = _dot_2d(a2.T, g2, cfg).astype(b.dtype)
     return da, db
 

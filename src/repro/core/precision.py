@@ -87,6 +87,15 @@ class EmulationConfig:
       fused:   if False, force the naive (unfused, materializing) path —
                used by benchmarks to reproduce the paper's baselines.
       out_dtype: output dtype; None = result dtype of the inputs.
+      decomp:  where Scheme-I decomposition runs on the fused path:
+               'kernel' slices the fp32 tile in VMEM (the in-kernel
+               prologue — no (M, p*K) HBM intermediate), 'xla' keeps the
+               historical split -> interleave -> kernel pipeline, 'auto'
+               prefers the prologue.
+      cache_weights: Scheme-I training flag — the custom VJP prepares the
+               rhs operand once per step (forward layout + K-transposed
+               twin for dA) instead of re-splitting it in forward, remat
+               re-forward, and backward (see repro.kernels.prepared).
     """
     scheme: Scheme = "native"
     p: int = 4
@@ -98,6 +107,8 @@ class EmulationConfig:
     # Mixed-precision emulated training (beyond-paper): gradients tolerate
     # fewer slices than the forward pass; 0 = same as forward.
     bwd_p: int = 0
+    decomp: Literal["auto", "xla", "kernel"] = "auto"
+    cache_weights: bool = False
 
     def resolved_beta(self, k_dim: int) -> int:
         return self.beta if self.beta is not None else safe_beta(k_dim)

@@ -78,6 +78,61 @@ def scheme1_workspace_bytes(s: GemmShape, p: int) -> int:
     return p * s.k * (s.m + s.n)
 
 
+# ---------------------------------------------------------------------------
+# Decomposition-side traffic (beyond the paper's Eqs. 9/10, which only
+# charge the GEMM: the split/interleave preprocessing has its own HBM
+# round-trips, and at practical training sizes they dominate once the
+# GEMM itself is fused — Mukunoki'25 / Uchino'25 observation).
+#
+# Counting convention, per operand of `elems` elements (fp32 source,
+# p int8 slices): every HBM read/write of fp32 operand data or slice
+# intermediates is decomposition-side; streaming the *finished* int8
+# interleaved slices into the GEMM kernel is GEMM-side (the Eq. 10
+# p(M+N)K term) and NOT counted — except on the prologue path, where the
+# kernel's operand stream carries the raw fp32 (decomposition input), so
+# that read is charged here instead.
+# ---------------------------------------------------------------------------
+
+
+def scheme1_decomp_xla_bytes(elems: int, p: int, uses: int = 1) -> int:
+    """The split -> interleave XLA pipeline, per decomposition:
+
+    4*elems   fp32 read for the power-of-two scale reduction
+    4*elems   fp32 re-read by the truncate-subtract slicing pass
+    p*elems   int8 write of the (p, M, K) slice stack
+    2p*elems  interleave_k transpose: slice read + interleaved write
+
+    ``uses`` = decompositions per step: forward, remat re-forward, and
+    the backward's B^T split each pay in full (3x per layer per step).
+    """
+    return uses * (8 + 3 * p) * elems
+
+
+def scheme1_decomp_prologue_bytes(elems: int, p: int, uses: int = 1) -> int:
+    """The in-kernel prologue: 4*elems scale read + the 4*elems fp32
+    operand stream the kernel decomposes in VMEM. No slice intermediates
+    ever touch HBM."""
+    return uses * 8 * elems
+
+
+def scheme1_decomp_prepared_bytes(elems: int, p: int,
+                                  preps: int = 1) -> int:
+    """PreparedOperand: one prep emits forward + twin layouts from a
+    single fp32 read (decompose_interleave_pair): 4*elems for the two
+    fused scale reductions, 4*elems for the pass itself, 2p*elems of
+    int8 slice writes. Consumption streams finished slices (GEMM-side).
+    """
+    return preps * (8 + 2 * p) * elems
+
+
+def scheme1_decomp_reduction(p: int, uses: int = 3) -> tuple[float, float]:
+    """(prologue, prepared) decomposition-byte reduction factors vs the
+    XLA pipeline for one weight over ``uses`` per-step decompositions."""
+    xla = scheme1_decomp_xla_bytes(1, p, uses)
+    return (xla / scheme1_decomp_prologue_bytes(1, p, uses),
+            xla / scheme1_decomp_prepared_bytes(1, p, 1))
+
+
 def scheme2_workspace_bytes(s: GemmShape, p: int,
                             complex_inputs: bool = False) -> int:
     """p residue matrices per operand + p per-modulus output residues

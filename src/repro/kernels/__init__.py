@@ -4,12 +4,19 @@ Layering:
 
   compat.py      feature-probed JAX-version shims (compiler params,
                  scalar-prefetch grid specs) — absorb upstream API drift
-  dispatch.py    the ONLY place pl.pallas_call is constructed; cached
-                 block selection, padded non-aligned routing, batching,
-                 launch-policy resolution
-  common.py      VMEM budget model (choose_blocks) and interpret-mode probe
+  dispatch.py    the ONLY place pl.pallas_call is constructed; one
+                 plan_emulated per GEMM (cached block selection), padded
+                 non-aligned routing, batching, launch-policy resolution
+  common.py      VMEM budget model (choose_blocks, incl. the fp32
+                 prologue staging terms) and interpret-mode probe
   ozaki1/2/3m, matmul_int8, flash_attn, decompose
-                 the kernels themselves; all route through dispatch
+                 the kernels themselves; all route through dispatch.
+                 ozaki1 decomposes fp32 tiles in its VMEM prologue;
+                 decompose emits pre-interleaved slices (incl. the
+                 dual-layout PreparedOperand prep pass)
+  prepared.py    PreparedOperand: pre-decomposed rhs (+ K-transposed
+                 twin) reused across forward/remat/backward and across
+                 serve sessions
   ops.py         jit'd end-to-end pipelines (decompose -> kernel -> CRT)
   ref.py         pure-jnp oracles for the test suite
 """
@@ -18,6 +25,12 @@ from repro.kernels.dispatch import (  # noqa: F401
     build_pallas_call,
     emulated_matmul,
     emulated_matmul_batched,
+    plan_emulated,
     resolve_policy,
     select_blocks,
+)
+from repro.kernels.prepared import (  # noqa: F401
+    PreparedOperand,
+    prepare_params,
+    prepare_rhs,
 )

@@ -13,6 +13,20 @@ Hardware model (TPU v5e target):
   S_epi   = out_bytes bM bN
 all of which must fit the per-core VMEM budget; larger tiles raise the
 MXU pipeline depth (the omega of Fig. 1(c)) until the budget binds.
+
+With the in-kernel decomposition prologue (``prologue_a`` / ``prologue_b``)
+an operand side stages the *fp32* tile instead of the p int8 slices, and
+the slices it carves live in VMEM alongside it:
+
+  S_op(side) = 2 * 4 dim bK   (double-buffered fp32 block)
+             + 4 dim bK       (fp32 remainder of the truncate-subtract chain)
+             + p dim bK       (the carved int8 slices)
+
+Traffic-wise this swaps the Eq. 10 operand term p*dim*K for 4*dim*K *and*
+deletes the decomposition round-trips entirely (the split's (p, M, K)
+write, the interleave's read+write, and the scale pass's extra fp32 read
+— the decomposition-side bytes that Eqs. 9/10 never charged; see
+repro.core.traffic.scheme1_decomp_*_bytes).
 """
 
 from __future__ import annotations
@@ -21,6 +35,7 @@ import dataclasses
 import functools
 
 import jax
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,27 +52,46 @@ class Blocks:
 VMEM_BUDGET = 12 * 2**20
 
 
+def _operand_stage_bytes(dim: int, bk: int, p: int, prologue: bool) -> int:
+    """VMEM bytes one operand side stages per K-step (see module doc)."""
+    if prologue:
+        # double-buffered fp32 block + fp32 remainder + carved int8 slices
+        return (2 * 4 + 4 + p) * dim * bk
+    return 2 * p * dim * bk  # double-buffered pre-interleaved int8 block
+
+
 def choose_blocks(m: int, n: int, k: int, p: int,
                   out_bytes: int = 4,
-                  vmem_budget: int = VMEM_BUDGET) -> Blocks | None:
+                  vmem_budget: int = VMEM_BUDGET,
+                  prologue_a: bool = False,
+                  prologue_b: bool = False,
+                  fixed_bk: int | None = None) -> Blocks | None:
     """Largest 128-aligned blocks whose working set fits VMEM.
 
     Preference order: maximize bM*bN (accumulator tile = MXU work per
     operand byte), then bK (pipeline depth). Mirrors paper Eq. 12's
     alpha_max trade-off: higher p forces smaller tiles.
+
+    ``prologue_a`` / ``prologue_b`` switch that side's operand budget to
+    the fp32-staging model of the in-kernel decomposition prologue.
+    ``fixed_bk`` pins the K block — required when consuming a
+    PreparedOperand whose interleave granularity was already chosen.
     """
     best: tuple[tuple[int, int], Blocks] | None = None
+    bk_candidates = ((fixed_bk,) if fixed_bk is not None
+                     else (512, 256, 128, 64, 32))
     for bm in (512, 256, 128, 64, 32):
         if m % bm:
             continue
         for bn in (512, 256, 128):
             if n % bn:
                 continue
-            for bk in (512, 256, 128, 64, 32):
+            for bk in bk_candidates:
                 if k % bk:
                     continue
                 acc = 4 * p * bm * bn
-                s_op = 2 * p * (bm + bn) * bk
+                s_op = (_operand_stage_bytes(bm, bk, p, prologue_a)
+                        + _operand_stage_bytes(bn, bk, p, prologue_b))
                 s_epi = out_bytes * bm * bn
                 if acc + s_op + s_epi > vmem_budget:
                     continue
@@ -65,6 +99,26 @@ def choose_blocks(m: int, n: int, k: int, p: int,
                 if best is None or key > best[0]:
                     best = (key, Blocks(bm, bn, bk))
     return best[1] if best else None
+
+
+def carve_slices(r: jax.Array, p: int, beta: int):
+    """Yield the p signed int8 beta-bit slices of ``r`` (already divided
+    by its power-of-two scale) via iterated truncate-and-subtract.
+
+    Every step is elementwise and exact in floating point (power-of-two
+    shift, trunc, exact fractional remainder), so a tile-local run inside
+    a kernel is bit-identical to the full-array ``scheme1.split``
+    restricted to that tile.  This is the ONE in-kernel copy of the
+    recurrence — the matmul prologue (ozaki1) and the decompose kernels
+    both consume it, so the bit-identity the tests and the CI traffic
+    gate assert can only drift in one place.
+    """
+    two_beta = float(2 ** beta)
+    for _ in range(p):
+        shifted = r * two_beta            # exact power-of-two shift
+        s = jnp.trunc(shifted)            # |s| <= 2^beta - 1
+        yield s.astype(jnp.int8)
+        r = shifted - s                   # exact fractional remainder
 
 
 @functools.cache

@@ -1,16 +1,25 @@
-"""Fused Scheme-I decomposition + interleave kernel (paper Sec. III-A).
+"""Fused Scheme-I decomposition + interleave kernels (paper Sec. III-A).
 
 The paper's preprocessing pass: split the scaled operand into p signed
 β-bit slices by iterated truncate-and-subtract and write each slice's
 t_K-wide chunk *directly to its interleaved position* (Eq. 11) — one
-read of A and one write of Â, no intermediate (p, M, K) materialization.
+read of the operand and one write of the slice matrix, no intermediate
+(p, M, K) materialization and no separate interleave transpose.
 
-Interleave granularity equals the block's K width, so each grid cell
-(i, c) produces the full (bm, p*bk) interleaved column group of its
-K-chunk: Â[:, (c*p+j)*bk : (c*p+j+1)*bk] = slice_j of chunk c.
+Three kernels:
 
-Row scales mu (power-of-two, |a/mu| < 1) are computed by the caller —
-they need a full-K row reduction and are reused across operands.
+  * ``decompose_interleave``      lhs layout:  A (M, K)  -> Â (M, p*K)
+  * ``decompose_interleave_rhs``  rhs layout:  B (K, N)  -> B̂ (p*K, N)
+  * ``decompose_interleave_pair`` one read of B (K, N) -> B̂ (p*K, N)
+    *and* its K-transposed twin T̂ (p*N, K) (the rhs layout of B^T used by
+    the backward dA = dC @ B^T) — the PreparedOperand prep pass, paying a
+    single fp32 read for both layouts.
+
+Interleave granularity equals the matmul block's K width, so each grid
+cell produces the full interleaved column/row group of its chunk.
+
+Scales (power-of-two, |a/scale| < 1) are computed by the caller — they
+need a full-K reduction and are reused across operands.
 """
 
 from __future__ import annotations
@@ -21,17 +30,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import carve_slices
 from repro.kernels.dispatch import build_pallas_call
 
 
 def _kernel(a_ref, mu_ref, out_ref, *, p: int, beta: int, bk: int):
-    r = a_ref[...] / mu_ref[...]          # exact: mu is a power of two
-    two_beta = float(2 ** beta)
-    for j in range(p):
-        shifted = r * two_beta            # exact shift
-        s = jnp.trunc(shifted)            # |s| <= 2^beta - 1
-        out_ref[:, j * bk:(j + 1) * bk] = s.astype(jnp.int8)
-        r = shifted - s                   # exact fractional remainder
+    for j, s in enumerate(carve_slices(a_ref[...] / mu_ref[...], p, beta)):
+        out_ref[:, j * bk:(j + 1) * bk] = s
 
 
 def decompose_interleave(a: jax.Array, mu: jax.Array, p: int, beta: int,
@@ -56,3 +61,74 @@ def decompose_interleave(a: jax.Array, mu: jax.Array, p: int, beta: int,
         dimension_semantics=("parallel", "parallel"),
         name=f"decompose_interleave_p{p}",
     )(a, mu)
+
+
+def _kernel_rhs(b_ref, nu_ref, out_ref, *, p: int, beta: int, bk: int):
+    for j, s in enumerate(carve_slices(b_ref[...] / nu_ref[...], p, beta)):
+        out_ref[j * bk:(j + 1) * bk, :] = s
+
+
+def decompose_interleave_rhs(b: jax.Array, nu: jax.Array, p: int, beta: int,
+                             bk: int = 256, bn: int = 256) -> jax.Array:
+    """b: (K, N) float; nu: (1, N) power-of-two column scales.
+
+    Returns B̂ of shape (p*K, N) int8: row groups cycling
+    B'_0 | ... | B'_{p-1} per ``bk``-wide K-chunk (paper Eq. 11, rhs).
+    """
+    k, n = b.shape
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert k % bk == 0 and n % bn == 0, (k, n, bk, bn)
+    kernel = functools.partial(_kernel_rhs, p=p, beta=beta, bk=bk)
+    return build_pallas_call(
+        kernel,
+        grid=(k // bk, n // bn),
+        in_specs=[pl.BlockSpec((bk, bn), lambda c, j: (c, j)),
+                  pl.BlockSpec((1, bn), lambda c, j: (0, j))],
+        out_specs=pl.BlockSpec((p * bk, bn), lambda c, j: (c, j)),
+        out_shape=jax.ShapeDtypeStruct((p * k, n), jnp.int8),
+        dimension_semantics=("parallel", "parallel"),
+        name=f"decompose_interleave_rhs_p{p}",
+    )(b, nu)
+
+
+def _kernel_pair(b_ref, nu_ref, tau_ref, fwd_ref, twin_ref, *,
+                 p: int, beta_f: int, beta_b: int, bk: int, bt: int):
+    b = b_ref[...]                       # (bk, bt) fp32 chunk of B
+    for j, s in enumerate(carve_slices(b / nu_ref[...], p, beta_f)):
+        fwd_ref[j * bk:(j + 1) * bk, :] = s
+    # Same chunk, transposed, rescaled per-row-of-B: the B^T rhs layout.
+    bt_tile = b.T / tau_ref[...]         # (bt, bk)
+    for j, s in enumerate(carve_slices(bt_tile, p, beta_b)):
+        twin_ref[j * bt:(j + 1) * bt, :] = s
+
+
+def decompose_interleave_pair(b: jax.Array, nu: jax.Array, tau: jax.Array,
+                              p: int, beta_fwd: int, beta_bwd: int,
+                              bk: int = 256, bt: int = 256):
+    """One fp32 read of B (K, N) -> (B̂ (p*K, N), T̂ (p*N, K)) int8.
+
+    ``nu`` (1, N) scales the forward rhs layout at granularity ``bk``;
+    ``tau`` (1, K) scales the K-transposed twin (the rhs layout of B^T,
+    fed to the backward dA GEMM) at granularity ``bt``.  The two layouts
+    decompose with their own β (the contraction dims K and N differ).
+    """
+    k, n = b.shape
+    bk = min(bk, k)
+    bt = min(bt, n)
+    assert k % bk == 0 and n % bt == 0, (k, n, bk, bt)
+    kernel = functools.partial(_kernel_pair, p=p, beta_f=beta_fwd,
+                               beta_b=beta_bwd, bk=bk, bt=bt)
+    return build_pallas_call(
+        kernel,
+        grid=(k // bk, n // bt),
+        in_specs=[pl.BlockSpec((bk, bt), lambda c, j: (c, j)),
+                  pl.BlockSpec((1, bt), lambda c, j: (0, j)),
+                  pl.BlockSpec((1, bk), lambda c, j: (0, c))],
+        out_specs=[pl.BlockSpec((p * bk, bt), lambda c, j: (c, j)),
+                   pl.BlockSpec((p * bt, bk), lambda c, j: (j, c))],
+        out_shape=[jax.ShapeDtypeStruct((p * k, n), jnp.int8),
+                   jax.ShapeDtypeStruct((p * n, k), jnp.int8)],
+        dimension_semantics=("parallel", "parallel"),
+        name=f"decompose_interleave_pair_p{p}",
+    )(b, nu, tau)

@@ -13,11 +13,17 @@ On top of the call builder this module owns the *routing* policy:
   steps re-tracing the same projection shapes) never re-run the VMEM
   budget search, and a future GPU (Mosaic/Triton) backend can return
   different tiles for the same problem.
+* :func:`plan_emulated` — one (dtype, blocks, alignment) resolution per
+  call, shared by ``emulated_matmul`` and ``maybe_emulated_matmul`` and
+  threaded down to the fused wrappers, so the VMEM search never runs
+  twice for one GEMM.
 * :func:`emulated_matmul` — the single entry point for an emulated GEMM.
   Non-128-aligned operands are zero-padded to the nearest aligned tile,
   run through the fused kernel, and sliced back — zero rows/columns are
   exact under both schemes (they decompose to zero slices / zero
-  residues), so padding changes traffic, never values.
+  residues), so padding changes traffic, never values. A
+  :class:`repro.kernels.prepared.PreparedOperand` rhs skips decomposition
+  entirely and streams its finished int8 slices.
 * :func:`emulated_matmul_batched` — leading batch dims on the activation
   flatten into M (the usual ``activations @ weights`` pattern); a shared
   leading axis on both operands maps the fused kernel with ``jax.vmap``.
@@ -91,18 +97,24 @@ def build_pallas_call(kernel, *, out_shape, grid=None, in_specs=None,
 
 @functools.lru_cache(maxsize=4096)
 def _select_blocks_cached(m: int, n: int, k: int, p: int, out_bytes: int,
-                          backend: str) -> Blocks | None:
+                          backend: str, prologue_a: bool, prologue_b: bool,
+                          fixed_bk: int | None) -> Blocks | None:
     # `backend` keys the cache only: tile search is TPU-modelled today, but
     # a Mosaic-GPU/Triton backend will pick different tiles for the same
     # problem without invalidating TPU entries.
     del backend
-    return choose_blocks(m, n, k, p, out_bytes=out_bytes)
+    return choose_blocks(m, n, k, p, out_bytes=out_bytes,
+                         prologue_a=prologue_a, prologue_b=prologue_b,
+                         fixed_bk=fixed_bk)
 
 
 def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
-                  backend: str | None = None) -> Blocks | None:
+                  backend: str | None = None, prologue_a: bool = False,
+                  prologue_b: bool = False,
+                  fixed_bk: int | None = None) -> Blocks | None:
     return _select_blocks_cached(m, n, k, p, out_bytes,
-                                 backend or jax.default_backend())
+                                 backend or jax.default_backend(),
+                                 prologue_a, prologue_b, fixed_bk)
 
 
 def block_cache_info():
@@ -159,7 +171,62 @@ def _resolve_cfg(cfg, scheme, precision) -> EmulationConfig:
                            p=precision if precision is not None else 4)
 
 
-def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype):
+def _prologue(cfg: EmulationConfig) -> bool:
+    """Does this config run Scheme-I decomposition in the kernel prologue?"""
+    return cfg.scheme == "ozaki1" and cfg.decomp in ("auto", "kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """One block-selection + dtype resolution, shared by every entry point.
+
+    Built by :func:`plan_emulated`; both ``emulated_matmul`` and
+    ``maybe_emulated_matmul`` consume the same plan, and the fused
+    wrappers in :mod:`repro.kernels.ops` receive ``blocks`` instead of
+    re-running the VMEM search on the padded problem.
+    """
+    cfg: EmulationConfig
+    m: int
+    n: int
+    k: int
+    p_eff: int
+    out_dtype: object
+    blocks: Blocks | None
+
+    @property
+    def aligned(self) -> bool:
+        return (self.blocks is not None
+                and self.blocks.aligned(self.m, self.n, self.k))
+
+
+def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                  out_dtype=None) -> GemmPlan:
+    """Resolve output dtype and cached blocks for one 2-D emulated GEMM."""
+    m, k = a.shape
+    _, n = b.shape
+    if out_dtype is None:
+        out_dtype = cfg.out_dtype
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype)
+    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
+    pro = _prologue(cfg)
+    blocks = select_blocks(m, n, k, p_eff,
+                           out_bytes=jnp.dtype(out_dtype).itemsize,
+                           prologue_a=pro, prologue_b=pro)
+    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks)
+
+
+def _replan_padded(plan: GemmPlan) -> GemmPlan:
+    mp, kp, np_ = padded_mkn(plan.m, plan.k, plan.n)
+    pro = _prologue(plan.cfg)
+    blocks = select_blocks(mp, np_, kp, plan.p_eff,
+                           out_bytes=jnp.dtype(plan.out_dtype).itemsize,
+                           prologue_a=pro, prologue_b=pro)
+    return dataclasses.replace(plan, m=mp, n=np_, k=kp, blocks=blocks)
+
+
+def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype,
+              blocks: Blocks | None = None):
     """Aligned 2-D problem -> the fused kernel for cfg.scheme."""
     from repro.kernels import ops  # lazy: ops imports the kernel modules
     cplx = _is_complex(a) or _is_complex(b)
@@ -172,12 +239,17 @@ def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype):
             # GEMMs (paper Sec. V-D runs EmuGEMM-I complex exactly so).
             ar, ai = jnp.real(a), jnp.imag(a)
             br, bi = jnp.real(b), jnp.imag(b)
-            rr = ops.fused_scheme1_matmul(ar, br, cfg, out_dtype=out_dtype)
-            ii = ops.fused_scheme1_matmul(ai, bi, cfg, out_dtype=out_dtype)
-            ri = ops.fused_scheme1_matmul(ar, bi, cfg, out_dtype=out_dtype)
-            ir = ops.fused_scheme1_matmul(ai, br, cfg, out_dtype=out_dtype)
+            rr = ops.fused_scheme1_matmul(ar, br, cfg, out_dtype=out_dtype,
+                                          blocks=blocks)
+            ii = ops.fused_scheme1_matmul(ai, bi, cfg, out_dtype=out_dtype,
+                                          blocks=blocks)
+            ri = ops.fused_scheme1_matmul(ar, bi, cfg, out_dtype=out_dtype,
+                                          blocks=blocks)
+            ir = ops.fused_scheme1_matmul(ai, br, cfg, out_dtype=out_dtype,
+                                          blocks=blocks)
             return jax.lax.complex(rr - ii, ri + ir)
-        return ops.fused_scheme1_matmul(a, b, cfg, out_dtype=out_dtype)
+        return ops.fused_scheme1_matmul(a, b, cfg, out_dtype=out_dtype,
+                                        blocks=blocks)
     if cfg.scheme == "ozaki2":
         if cplx:
             return ops.fused_3m_matmul(a, b, cfg, out_dtype=out_dtype)
@@ -185,7 +257,12 @@ def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype):
     raise ValueError(f"no fused kernel for scheme {cfg.scheme!r}")
 
 
-def emulated_matmul(a: jax.Array, b: jax.Array, *,
+def _is_prepared(b) -> bool:
+    from repro.kernels.prepared import PreparedOperand
+    return isinstance(b, PreparedOperand)
+
+
+def emulated_matmul(a: jax.Array, b, *,
                     scheme: str = "ozaki1", precision: int | None = None,
                     cfg: EmulationConfig | None = None,
                     out_dtype=None) -> jax.Array:
@@ -195,37 +272,52 @@ def emulated_matmul(a: jax.Array, b: jax.Array, *,
     that are not 128-aligned are zero-padded to the nearest aligned tile,
     run fused, and the (M, N) result sliced back out — this path replaces
     the historical ``ValueError("no aligned blocks")``.
+
+    ``b`` may be a :class:`repro.kernels.prepared.PreparedOperand`: its
+    finished int8 slices are streamed as-is and only the lhs decomposes
+    (in the kernel prologue).
     """
     cfg = _resolve_cfg(cfg, scheme, precision)
+    if _is_prepared(b):
+        from repro.kernels import prepared
+        if a.ndim != 2:
+            raise ValueError(f"emulated_matmul is 2-D; got lhs {a.shape} "
+                             "(use emulated_matmul_batched)")
+        if out_dtype is None:
+            out_dtype = cfg.out_dtype
+        if out_dtype is None:
+            out_dtype = jnp.promote_types(a.dtype, jnp.float32)
+        return prepared.matmul_prepared(a, b, out_dtype=out_dtype)
     if a.ndim != 2 or b.ndim != 2:
         raise ValueError(f"emulated_matmul is 2-D; got {a.shape} @ {b.shape} "
                          "(use emulated_matmul_batched)")
-    m, k = a.shape
-    _, n = b.shape
-    if out_dtype is None:
-        out_dtype = cfg.out_dtype
     if cfg.scheme == "native":
-        out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+        out_dtype = (out_dtype or cfg.out_dtype
+                     or jnp.promote_types(a.dtype, b.dtype))
         return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                                    preferred_element_type=out_dtype)
-    if out_dtype is None:
-        out_dtype = jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype)
-    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
-    blocks = select_blocks(m, n, k, p_eff,
-                           out_bytes=jnp.dtype(out_dtype).itemsize)
-    if blocks is not None and blocks.aligned(m, n, k):
-        return _fused_2d(a, b, cfg, out_dtype)
+    plan = plan_emulated(a, b, cfg, out_dtype)
+    if plan.aligned:
+        return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks)
     a_p, b_p = pad_operands(a, b)
-    return _fused_2d(a_p, b_p, cfg, out_dtype)[:m, :n]
+    plan_p = _replan_padded(plan)
+    return _fused_2d(a_p, b_p, cfg, plan.out_dtype,
+                     plan_p.blocks)[:plan.m, :plan.n]
 
 
-def emulated_matmul_batched(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
     """vmap-compatible batched wrapper around :func:`emulated_matmul`.
 
-    * ``b`` 2-D: leading dims of ``a`` flatten into M (activations @
-      weights) — one fused launch.
+    * ``b`` 2-D (or a PreparedOperand): leading dims of ``a`` flatten into
+      M (activations @ weights) — one fused launch.
     * matching leading axes: the 2-D dispatcher is vmapped over them.
     """
+    if _is_prepared(b):
+        if a.ndim == 2:
+            return emulated_matmul(a, b, **kw)
+        lead = a.shape[:-1]
+        out = emulated_matmul(a.reshape(-1, a.shape[-1]), b, **kw)
+        return out.reshape(*lead, b.n)
     if a.ndim == 2 and b.ndim == 2:
         return emulated_matmul(a, b, **kw)
     if b.ndim == 2:
@@ -238,26 +330,25 @@ def emulated_matmul_batched(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
     return jax.vmap(fn)(a, b)
 
 
-def maybe_emulated_matmul(a: jax.Array, b: jax.Array,
-                          cfg: EmulationConfig):
+def maybe_emulated_matmul(a: jax.Array, b, cfg: EmulationConfig):
     """'auto'-impl hook: the fused kernel when the 2-D problem is naturally
     tile-aligned, else None (caller falls back to the XLA expansion —
     padding is reserved for explicit ``impl='pallas'`` requests, where the
-    copy+slice overhead was asked for)."""
+    copy+slice overhead was asked for). A PreparedOperand rhs is the other
+    exception: preparing *was* the commitment to the kernel path, so a
+    non-aligned lhs is padded rather than refused."""
+    if _is_prepared(b):
+        if a.ndim != 2 or cfg.scheme == "native" or _is_complex(a):
+            return None
+        return emulated_matmul(a, b, cfg=cfg)
     if a.ndim != 2 or b.ndim != 2 or cfg.scheme == "native":
         return None
     if cfg.scheme == "ozaki1" and (_is_complex(a) or _is_complex(b)):
         return None  # 4x fused launches is not an 'auto' win; XLA path
-    m, k = a.shape
-    _, n = b.shape
-    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
-    out_dtype = cfg.out_dtype or jnp.promote_types(jnp.real(a).dtype,
-                                                   jnp.real(b).dtype)
-    blocks = select_blocks(m, n, k, p_eff,
-                           out_bytes=jnp.dtype(out_dtype).itemsize)
-    if blocks is None or not blocks.aligned(m, n, k):
+    plan = plan_emulated(a, b, cfg)
+    if not plan.aligned:
         return None
-    return _fused_2d(a, b, cfg, out_dtype)
+    return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks)
 
 
 # ---------------------------------------------------------------------------

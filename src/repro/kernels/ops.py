@@ -2,14 +2,18 @@
 
 The full emulated-GEMM pipelines:
 
-  fused_scheme1_matmul : split -> interleave (Eq. 11) -> EmuGEMM-I kernel
+  fused_scheme1_matmul : scales -> EmuGEMM-I kernel with the in-kernel
+                         decomposition prologue (cfg.decomp='kernel'/'auto'
+                         — the fp32 tiles slice to int8 in VMEM), or the
+                         historical split -> interleave (Eq. 11) -> kernel
+                         pipeline (cfg.decomp='xla')
   fused_scheme2_matmul : integerize -> residues -> EmuGEMM-II kernel -> CRT
   fused_3m_matmul      : complex residues -> fused-3M kernel -> 2x CRT
 
-Pre/post-processing (decomposition, CRT) are XLA ops — the paper likewise
-keeps decomposition and CRT as separate kernels; the *fusion claim* covers
-the GEMM-side INT32 traffic, which is exactly what the Pallas kernels
-eliminate.
+The remaining pre/post-processing (scale reductions, CRT) are XLA ops —
+full-K reductions and multi-word reconstruction don't tile; everything
+that *does* tile (slicing, interleaving, the INT32 accumulation, modular
+reduction) now runs inside the kernels.
 
 Routing (alignment checks, block caching, padding, batching) lives in
 repro.kernels.dispatch; ``maybe_fused_matmul`` is kept as a thin alias of
@@ -29,18 +33,40 @@ from repro.kernels import dispatch, ozaki1, ozaki2, ozaki3m
 from repro.kernels.matmul_int8 import int8_matmul  # noqa: F401  (re-export)
 
 
-@partial(jax.jit, static_argnames=("cfg", "out_dtype"))
+@partial(jax.jit, static_argnames=("cfg", "out_dtype", "blocks"))
 def fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
-                         out_dtype=jnp.float32) -> jax.Array:
-    """End-to-end EmuGEMM-I: (M,K) x (K,N) float -> (M,N) out_dtype."""
+                         out_dtype=jnp.float32, blocks=None) -> jax.Array:
+    """End-to-end EmuGEMM-I: (M,K) x (K,N) float -> (M,N) out_dtype.
+
+    ``blocks`` (from ``dispatch.plan_emulated``) skips the re-search; the
+    decomposition site follows ``cfg.decomp``.
+    """
     m, k = a.shape
     _, n = b.shape
     p = cfg.p
     beta = cfg.resolved_beta(k)
-    blocks = dispatch.select_blocks(m, n, k, p,
-                                    out_bytes=jnp.dtype(out_dtype).itemsize)
+    prologue = cfg.decomp in ("auto", "kernel")
+    if blocks is None:
+        blocks = dispatch.select_blocks(
+            m, n, k, p, out_bytes=jnp.dtype(out_dtype).itemsize,
+            prologue_a=prologue, prologue_b=prologue)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"shapes {(m, n, k)} not tile-aligned")
+    if prologue:
+        # Only the power-of-two scales (full-K reductions) run in XLA;
+        # slicing happens in the kernel — no (M, p*K) HBM intermediate.
+        # The kernel's truncate-subtract runs at >= float32, mirroring
+        # split: ints/half floats widen to f32, f64 keeps its mantissa.
+        def widen(x):
+            if (not jnp.issubdtype(x.dtype, jnp.floating)
+                    or jnp.dtype(x.dtype).itemsize < 4):
+                return x.astype(jnp.float32)
+            return x
+        a, b = widen(a), widen(b)
+        mu = scheme1._pow2_row_scale(a, axis=1)
+        nu = scheme1._pow2_row_scale(b, axis=0)
+        return ozaki1.fused_matmul_prologue(
+            a, b, mu, nu, p, beta, blocks, out_dtype=out_dtype)
     a_sl, mu = scheme1.split(a, p, beta, axis=1)
     b_sl, nu = scheme1.split(b, p, beta, axis=0)
     a_hat = scheme1.interleave_k(a_sl, "a", blocks.bk)
@@ -48,6 +74,17 @@ def fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     return ozaki1.fused_matmul_interleaved(
         a_hat, b_hat, mu.astype(jnp.float32), nu.astype(jnp.float32),
         p, beta, blocks, out_dtype=out_dtype)
+
+
+def _canonical_residues(res8: jax.Array, moduli) -> jax.Array:
+    """Balanced (p, M, N) int8 residues -> canonical [0, m_l) int32.
+
+    One fused broadcast remainder against the constant moduli array —
+    the per-modulus Python loop unrolled p ``remainder`` + ``stack`` ops
+    into the graph; this is a single elementwise op.
+    """
+    mods = jnp.asarray(moduli, jnp.int32).reshape(-1, 1, 1)
+    return jnp.remainder(res8.astype(jnp.int32), mods)
 
 
 @partial(jax.jit, static_argnames=("cfg", "out_dtype"))
@@ -63,9 +100,7 @@ def fused_scheme2_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     a_res = scheme2.balanced_residues(a_int, moduli)
     b_res = scheme2.balanced_residues(b_int, moduli)
     c_res8 = ozaki2.fused_residue_matmul(a_res, b_res, moduli)
-    # Balanced -> canonical [0, m) for Garner (exact int32 ops).
-    c_res = jnp.stack([jnp.remainder(c_res8[l].astype(jnp.int32), int(mm))
-                       for l, mm in enumerate(moduli)])
+    c_res = _canonical_residues(c_res8, moduli)
     out_t = jnp.dtype(out_dtype).type
     c_int = scheme2.crt_reconstruct(c_res, moduli, out_t)
     return c_int / (mu.astype(out_t) * nu.astype(out_t))
@@ -108,10 +143,8 @@ def fused_3m_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
         for l, mm in enumerate(moduli)])          # (p, 3, K, N)
 
     c_re8, c_im8 = ozaki3m.fused_3m_residue_matmul(a3, b3, moduli)
-    c_re = jnp.stack([jnp.remainder(c_re8[l].astype(jnp.int32), int(mm))
-                      for l, mm in enumerate(moduli)])
-    c_im = jnp.stack([jnp.remainder(c_im8[l].astype(jnp.int32), int(mm))
-                      for l, mm in enumerate(moduli)])
+    c_re = _canonical_residues(c_re8, moduli)
+    c_im = _canonical_residues(c_im8, moduli)
     cr = scheme2.crt_reconstruct(c_re, moduli, out_t)
     ci = scheme2.crt_reconstruct(c_im, moduli, out_t)
     inv = 1.0 / (mu.astype(out_t) * nu.astype(out_t))

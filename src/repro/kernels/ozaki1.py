@@ -2,12 +2,18 @@
 
 One kernel executes all p(p+1)/2 slice-pair int8 GEMMs:
 
-  * operands arrive in the *interleaved* layout (paper Eq. 11): Ahat is
-    (M, p*K) with the p slices of each K-chunk adjacent, so one BlockSpec
-    fetch of (bM, p*bK) delivers every slice of the chunk to VMEM — the TPU
-    analogue of the single-TMA-descriptor property;
-  * slice i sits at static offset i*bK inside the fetched block, so the
-    triangular schedule indexes operands with compile-time constants;
+  * operands arrive either in the *interleaved* layout (paper Eq. 11):
+    Ahat is (M, p*K) with the p slices of each K-chunk adjacent, so one
+    BlockSpec fetch of (bM, p*bK) delivers every slice of the chunk to
+    VMEM — the TPU analogue of the single-TMA-descriptor property; or as
+    the raw *fp32* operand, in which case the kernel's decomposition
+    prologue carves the p int8 slices in VMEM via the exact
+    truncate-and-subtract recurrence (bit-identical to
+    ``repro.core.scheme1.split``) and the (M, p*K) HBM intermediate never
+    exists;
+  * slice i sits at a static offset (i*bK into the fetched block, or the
+    i-th carve of the prologue), so the triangular schedule indexes
+    operands with compile-time constants;
   * p int32 accumulators live in VMEM scratch across the K grid dimension
     (paper: RF on Hopper / TMEM on Blackwell);
   * the shift-reduce epilogue (paper Eq. 3 / Alg. 1 lines 9-12) runs
@@ -15,7 +21,12 @@ One kernel executes all p(p+1)/2 slice-pair int8 GEMMs:
     scaling — only the final FP tile is written to HBM.
 
 Traffic: Eq. 10 — p(M+N)K operand bytes + b*MN output, vs the naive
-Eq. 9's extra 4p(p+1)MN int32 round-trips.
+Eq. 9's extra 4p(p+1)MN int32 round-trips.  The decomposition side, which
+Eqs. 9/10 never charged, is accounted in
+``repro.core.traffic.scheme1_decomp_*_bytes``: the interleaved path pays
+(8+3p)*dim*K bytes of split/interleave round-trips per operand before the
+kernel even starts, the prologue path pays only the 4*dim*K fp32 operand
+stream it decomposes in VMEM.
 """
 
 from __future__ import annotations
@@ -27,30 +38,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import Blocks
+from repro.kernels.common import Blocks, carve_slices
 from repro.kernels.dispatch import build_pallas_call, select_blocks
 
 
 def _kernel(a_ref, b_ref, mu_ref, nu_ref, out_ref, acc_ref, *,
-            p: int, beta: int, bk: int, out_dtype):
+            p: int, beta: int, bk: int, out_dtype,
+            a_fp: bool, b_fp: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...]  # (bM, p*bK) int8 — all p A-slices of this K-chunk
-    b = b_ref[...]  # (p*bK, bN) int8 — all p B-slices of this K-chunk
+    if a_fp:
+        # Prologue: (bM, bK) fp32 block -> p int8 slices, all in VMEM.
+        a_slices = list(carve_slices(a_ref[...] / mu_ref[...], p, beta))
+    else:
+        a = a_ref[...]  # (bM, p*bK) int8 — all p A-slices of this K-chunk
+        a_slices = [a[:, i * bk:(i + 1) * bk] for i in range(p)]
+    if b_fp:
+        b_slices = list(carve_slices(b_ref[...] / nu_ref[...], p, beta))
+    else:
+        b = b_ref[...]  # (p*bK, bN) int8 — all p B-slices of this K-chunk
+        b_slices = [b[i * bk:(i + 1) * bk, :] for i in range(p)]
 
     # Triangular MMA schedule (Alg. 1 lines 6-8): C_s += A'_i B'_{s-i}.
     # Slice offsets are python constants — resolved at compile time.
     for s in range(p):
         partial = None
         for i in range(s + 1):
-            a_i = a[:, i * bk:(i + 1) * bk]
-            b_j = b[(s - i) * bk:(s - i + 1) * bk, :]
             prod = jax.lax.dot_general(
-                a_i, b_j, (((1,), (0,)), ((), ())),
+                a_slices[i], b_slices[s - i], (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.int32)
             partial = prod if partial is None else partial + prod
         acc_ref[s] += partial
@@ -64,6 +83,34 @@ def _kernel(a_ref, b_ref, mu_ref, nu_ref, out_ref, acc_ref, *,
             c = c + w * acc_ref[s].astype(out_dtype)
         out_ref[...] = c * mu_ref[...].astype(out_dtype) \
                          * nu_ref[...].astype(out_dtype)
+
+
+def _fused_call(a, b, mu, nu, *, m, n, k, p, beta, blocks, out_dtype,
+                a_fp, b_fp):
+    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    kernel = functools.partial(_kernel, p=p, beta=beta, bk=bk,
+                               out_dtype=out_dtype, a_fp=a_fp, b_fp=b_fp)
+    a_spec = (pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)) if a_fp
+              # One contiguous fetch per K-step carries all p slices.
+              else pl.BlockSpec((bm, p * bk), lambda i, j, kk: (i, kk)))
+    b_spec = (pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)) if b_fp
+              else pl.BlockSpec((p * bk, bn), lambda i, j, kk: (kk, j)))
+    tag = f"{'f' if a_fp else 'i'}{'f' if b_fp else 'i'}"
+    return build_pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            a_spec,
+            b_spec,
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((p, bm, bn), jnp.int32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        name=f"emugemm1_p{p}_{tag}",
+    )(a, b, mu, nu)
 
 
 def fused_matmul_interleaved(a_hat: jax.Array, b_hat: jax.Array,
@@ -85,23 +132,52 @@ def fused_matmul_interleaved(a_hat: jax.Array, b_hat: jax.Array,
                                out_bytes=jnp.dtype(out_dtype).itemsize)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)} p={p}")
-    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    return _fused_call(a_hat, b_hat, mu, nu, m=m, n=n, k=k, p=p, beta=beta,
+                       blocks=blocks, out_dtype=out_dtype,
+                       a_fp=False, b_fp=False)
 
-    kernel = functools.partial(_kernel, p=p, beta=beta, bk=bk,
-                               out_dtype=out_dtype)
-    return build_pallas_call(
-        kernel,
-        grid=(m // bm, n // bn, k // bk),
-        in_specs=[
-            # One contiguous fetch per K-step carries all p slices.
-            pl.BlockSpec((bm, p * bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((p * bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((p, bm, bn), jnp.int32)],
-        dimension_semantics=("parallel", "parallel", "arbitrary"),
-        name=f"emugemm1_p{p}",
-    )(a_hat, b_hat, mu, nu)
+
+def fused_matmul_prologue(a: jax.Array, b: jax.Array,
+                          mu: jax.Array, nu: jax.Array,
+                          p: int, beta: int,
+                          blocks: Blocks | None = None,
+                          out_dtype=jnp.float32) -> jax.Array:
+    """Fused GEMM with the in-kernel decomposition prologue on both sides.
+
+    a: (M, K) float; b: (K, N) float; mu: (M, 1) / nu: (1, N) power-of-two
+    scales (full-K row/col reductions, computed by the caller).  The fp32
+    tiles are sliced into int8 in VMEM — no (M, p*K) HBM intermediate, no
+    split/interleave round-trips.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if blocks is None:
+        blocks = select_blocks(m, n, k, p,
+                               out_bytes=jnp.dtype(out_dtype).itemsize,
+                               prologue_a=True, prologue_b=True)
+    if blocks is None or not blocks.aligned(m, n, k):
+        raise ValueError(f"no aligned blocks for {(m, n, k)} p={p}")
+    return _fused_call(a, b, mu, nu, m=m, n=n, k=k, p=p, beta=beta,
+                       blocks=blocks, out_dtype=out_dtype,
+                       a_fp=True, b_fp=True)
+
+
+def fused_matmul_mixed(a: jax.Array, b_hat: jax.Array,
+                       mu: jax.Array, nu: jax.Array,
+                       p: int, beta: int, blocks: Blocks,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Fused GEMM: fp32 lhs decomposed in-kernel, pre-interleaved int8 rhs.
+
+    The PreparedOperand consumption path: the weight's slices stream from
+    HBM (decomposed once, reused), the activation decomposes in VMEM.
+    ``blocks.bk`` must equal the rhs interleave granularity.
+    """
+    m, k = a.shape
+    pk, n = b_hat.shape
+    assert pk == p * k, (a.shape, b_hat.shape, p)
+    if not blocks.aligned(m, n, k):
+        raise ValueError(f"blocks {blocks} not aligned for {(m, n, k)}")
+    return _fused_call(a, b_hat, mu, nu, m=m, n=n, k=k, p=p, beta=beta,
+                       blocks=blocks, out_dtype=out_dtype,
+                       a_fp=True, b_fp=False)

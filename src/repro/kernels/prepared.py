@@ -1,0 +1,263 @@
+"""PreparedOperand: a pre-decomposed Scheme-I rhs, reused across GEMMs.
+
+The Scheme-I pipeline re-decomposes the *same weight matrix* on every
+emulated call: forward, the remat re-forward, and the backward
+dA = dC @ B^T (which splits B^T from scratch) each pay the full
+scale-read + split + interleave round-trips — 3x per layer per step in
+training, and once per decode step in serving.  A ``PreparedOperand``
+holds the finished artifact instead:
+
+  * ``slices``  — the p int8 slices, interleaved ((p*K, N), paper Eq. 11)
+                  for the fused kernels or stacked ((p, K, N)) for the XLA
+                  expansion,
+  * ``scale``   — the (1, N) power-of-two column scale,
+  * ``beta``/``p`` and ``blocks`` (the interleave granularity lives in
+    ``blocks.bk``),
+  * ``twin``    — the same weight prepared in the K-transposed rhs layout
+                  of B^T, consumed by the backward dA GEMM.
+
+``prepare_rhs`` builds one with a *single fp32 read* of the weight (the
+``decompose_interleave_pair`` kernel emits both layouts in one pass);
+``matmul_prepared`` consumes it through the mixed fused kernel (fp32 lhs
+decomposed in-VMEM, prepared int8 rhs streamed).  Traffic accounting:
+``repro.core.traffic.scheme1_decomp_prepared_bytes``.
+
+Plumbing: ``dispatch.emulated_matmul`` accepts a PreparedOperand rhs,
+``core.emulated.emulated_dot`` prepares weights once per step when
+``cfg.cache_weights`` is set, and ``prepare_params`` wraps a model's
+projection weights for once-per-session serving reuse
+(``launch/serve.py --prepare``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scheme1
+from repro.core.precision import EmulationConfig
+from repro.kernels.common import Blocks
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PreparedOperand:
+    """A pre-split, pre-interleaved Scheme-I rhs operand (see module doc).
+
+    ``k``/``n`` are the *unpadded* logical dims; ``slices`` and ``scale``
+    are 128-aligned.  ``layout`` is 'interleaved' ((p*Kp, Np) int8, fused
+    kernels) or 'stacked' ((p, Kp, Np) int8, XLA expansion).
+    """
+    slices: jax.Array
+    scale: jax.Array
+    p: int
+    beta: int
+    blocks: Blocks | None
+    layout: str
+    k: int
+    n: int
+    twin: "PreparedOperand | None" = None
+
+    @property
+    def padded_k(self) -> int:
+        if self.layout == "interleaved":
+            return self.slices.shape[0] // self.p
+        return self.slices.shape[1]
+
+    @property
+    def padded_n(self) -> int:
+        return self.slices.shape[-1]
+
+    def stacked(self) -> jax.Array:
+        """The (p, Kp, Np) slice stack, deinterleaving if needed."""
+        if self.layout == "stacked":
+            return self.slices
+        return scheme1.deinterleave_k(self.slices, self.p, "b",
+                                      self.blocks.bk)
+
+    def tree_flatten(self):
+        return ((self.slices, self.scale, self.twin),
+                (self.p, self.beta, self.blocks, self.layout,
+                 self.k, self.n))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        slices, scale, twin = children
+        p, beta, blocks, layout, k, n = aux
+        return cls(slices, scale, p, beta, blocks, layout, k, n, twin)
+
+
+def _pad2(x: jax.Array, align: int = 128) -> jax.Array:
+    from repro.kernels.dispatch import round_up
+    k, n = x.shape
+    kp, np_ = round_up(k, align), round_up(n, align)
+    if (kp, np_) == (k, n):
+        return x
+    return jnp.pad(x, ((0, kp - k), (0, np_ - n)))
+
+
+def _use_kernel(cfg: EmulationConfig) -> bool:
+    return cfg.impl in ("auto", "pallas") and cfg.decomp != "xla"
+
+
+def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
+                with_twin: bool = False,
+                m_hint: int = 512) -> PreparedOperand:
+    """Decompose a (K, N) float rhs once, for reuse across GEMMs.
+
+    With ``with_twin`` the K-transposed layout for the backward dA GEMM is
+    produced too; when forward and backward share p, both layouts come out
+    of one fp32 read (the pair kernel).  ``m_hint`` sizes the lhs the
+    block search assumes — consumers re-select with the granularity
+    pinned, so only bK must be right.
+    """
+    if isinstance(b, PreparedOperand):
+        return b
+    if b.ndim != 2:
+        raise ValueError(f"prepare_rhs is 2-D; got {b.shape}")
+    if jnp.issubdtype(b.dtype, jnp.complexfloating):
+        raise ValueError("prepare_rhs is real-valued; decompose the real "
+                         "and imaginary parts separately (4M formulation)")
+    from repro.kernels import decompose, dispatch
+
+    k, n = b.shape
+    if not jnp.issubdtype(b.dtype, jnp.floating):
+        b = b.astype(jnp.float32)
+    b_pad = _pad2(b)
+    kp, np_ = b_pad.shape
+    p = cfg.p
+    beta = cfg.resolved_beta(kp)
+    nu = scheme1._pow2_row_scale(b_pad, axis=0)          # (1, Np)
+
+    p_bwd = cfg.bwd_p or p
+    beta_bwd = cfg.resolved_beta(np_)
+
+    if not _use_kernel(cfg):
+        slices, _ = scheme1.split(b_pad, p, beta, axis=0)
+        twin = None
+        if with_twin:
+            t_slices, tau = scheme1.split(b_pad.T, p_bwd, beta_bwd, axis=0)
+            twin = PreparedOperand(t_slices, tau, p_bwd, beta_bwd, None,
+                                   "stacked", n, k)
+        return PreparedOperand(slices, nu, p, beta, None, "stacked",
+                               k, n, twin)
+
+    blocks = dispatch.select_blocks(m_hint, np_, kp, p, prologue_a=True)
+    if blocks is None:
+        blocks = Blocks(128, 128, 128)
+    if with_twin:
+        t_blocks = dispatch.select_blocks(m_hint, kp, np_, p_bwd,
+                                          prologue_a=True)
+        if t_blocks is None:
+            t_blocks = Blocks(128, 128, 128)
+        tau = scheme1._pow2_row_scale(b_pad.T, axis=0)   # (1, Kp)
+        if p_bwd == p:
+            # One fp32 read of B emits both layouts.
+            hat, t_hat = decompose.decompose_interleave_pair(
+                b_pad, nu, tau, p, beta, beta_bwd,
+                bk=blocks.bk, bt=t_blocks.bk)
+        else:
+            hat = decompose.decompose_interleave_rhs(b_pad, nu, p, beta,
+                                                     bk=blocks.bk)
+            t_hat = decompose.decompose_interleave_rhs(
+                b_pad.T, tau, p_bwd, beta_bwd, bk=t_blocks.bk)
+        twin = PreparedOperand(t_hat, tau, p_bwd, beta_bwd, t_blocks,
+                               "interleaved", n, k)
+        return PreparedOperand(hat, nu, p, beta, blocks, "interleaved",
+                               k, n, twin)
+    hat = decompose.decompose_interleave_rhs(b_pad, nu, p, beta,
+                                             bk=blocks.bk)
+    return PreparedOperand(hat, nu, p, beta, blocks, "interleaved", k, n)
+
+
+def matmul_prepared(a: jax.Array, prep: PreparedOperand,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """(M, K) float @ prepared (K, N) -> (M, N) ``out_dtype``.
+
+    The lhs decomposes in the kernel prologue (interleaved layout) or via
+    ``scheme1.split`` (stacked layout); the rhs slices are reused as-is.
+    Non-aligned lhs rows/K are zero-padded and the result sliced back.
+    """
+    from repro.kernels import dispatch, ozaki1
+
+    m, k = a.shape
+    if k != prep.k:
+        raise ValueError(f"lhs K={k} vs prepared K={prep.k}")
+    if jnp.issubdtype(a.dtype, jnp.complexfloating):
+        # A silent float32 cast would drop the imaginary half; complex
+        # problems must go through the 4M expansion on real parts.
+        raise ValueError("matmul_prepared is real-valued; got complex lhs "
+                         f"{a.dtype}")
+    kp, np_ = prep.padded_k, prep.padded_n
+    mp = dispatch.round_up(m)
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if not jnp.issubdtype(a.dtype, jnp.floating):
+        a = a.astype(jnp.float32)
+
+    if prep.layout == "interleaved":
+        blocks = dispatch.select_blocks(
+            mp, np_, kp, prep.p, out_bytes=jnp.dtype(out_dtype).itemsize,
+            prologue_a=True, fixed_bk=prep.blocks.bk)
+        if blocks is not None:
+            mu = scheme1._pow2_row_scale(a, axis=1)      # (Mp, 1)
+            out = ozaki1.fused_matmul_mixed(
+                a, prep.slices, mu.astype(jnp.float32),
+                prep.scale.astype(jnp.float32), prep.p, prep.beta, blocks,
+                out_dtype=out_dtype)
+            return out[:m, :prep.n]
+
+    # XLA expansion from the stored slices (stacked layout, or no block
+    # fit at the pinned granularity).
+    a_sl, mu = scheme1.split(a, prep.p, prep.beta, axis=1)
+    accs = scheme1.triangular_accumulators(a_sl, prep.stacked(), prep.p)
+    out = scheme1.shift_reduce(accs, prep.beta, mu, prep.scale, out_dtype)
+    return out[:m, :prep.n]
+
+
+# ---------------------------------------------------------------------------
+# Whole-model preparation (once-per-session serving reuse).
+# ---------------------------------------------------------------------------
+
+# Projection-weight leaf names consumed via models.common.dense — the only
+# places a PreparedOperand rhs is legal.  Deliberately excludes lookalikes
+# used through raw einsums (w_r/w_i of RG-LRU, wkv_b of MLA, moe experts,
+# frontend_proj) and the tied-embedding table.
+DENSE_WEIGHT_NAMES = frozenset({
+    "wq", "wk", "wv", "wo", "wq_a", "wq_b", "wkv_a",
+    "wi", "wi_gate", "wi_up", "w_y", "w_gate", "w_out", "w_in",
+    "head",
+})
+
+
+def prepare_params(params, policy, *, site_default: str = "ffn",
+                   names=DENSE_WEIGHT_NAMES):
+    """Wrap a model's 2-D dense projection weights as PreparedOperands.
+
+    Run once per serve session (outside jit): every subsequent prefill /
+    decode step streams the finished int8 slices instead of re-splitting
+    the weight.  Leaves under vmap/scan-stacked layer groups are 3-D and
+    pass through untouched (their per-layer slices are decomposed by the
+    per-step cache instead).
+    """
+    def site_of(path) -> str:
+        keys = [getattr(kp, "key", None) for kp in path]
+        if "mixer" in keys:
+            return "attn"
+        if "head" in keys or "emb" in keys:
+            return "logits"
+        return site_default
+
+    def wrap(path, leaf):
+        name = getattr(path[-1], "key", None) if path else None
+        if (name not in names or getattr(leaf, "ndim", 0) != 2
+                or not jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return leaf
+        cfg = policy.for_site(site_of(path))
+        if cfg.scheme != "ozaki1":
+            return leaf
+        return prepare_rhs(leaf, cfg)
+
+    return jax.tree_util.tree_map_with_path(wrap, params)

@@ -25,7 +25,7 @@ from repro.models.common import GemmPolicy, parse_gemm_spec
 
 class ServeEngine:
     def __init__(self, arch, mesh, max_seq: int, policy=None,
-                 params=None, seed: int = 0):
+                 params=None, seed: int = 0, prepare: bool = False):
         self.arch = arch
         self.mcfg = arch.model
         self.mesh = mesh
@@ -33,6 +33,12 @@ class ServeEngine:
         self.policy = policy or GemmPolicy()
         self.params = params if params is not None else M.init_params(
             jax.random.PRNGKey(seed), self.mcfg)
+        if prepare:
+            # Once-per-session weight decomposition: every prefill/decode
+            # step streams the finished int8 slices instead of
+            # re-splitting the projection weights (Scheme-I sites only).
+            from repro.kernels import prepared
+            self.params = prepared.prepare_params(self.params, self.policy)
         self._decode = jax.jit(
             lambda p, tok, pos, cache: M.forward_decode(
                 p, self.mcfg, tok, pos, cache, self.policy))
@@ -64,6 +70,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--gemm", default="native")
+    ap.add_argument("--prepare", action="store_true",
+                    help="decompose Scheme-I projection weights once per "
+                         "session (PreparedOperand serving)")
     args = ap.parse_args(argv)
 
     arch = (configs.get_smoke_config(args.arch) if args.smoke
@@ -76,7 +85,8 @@ def main(argv=None):
                            (args.requests, args.prompt_len)).astype(np.int32)
     with mesh:
         eng = ServeEngine(arch, mesh, args.prompt_len + args.gen,
-                          GemmPolicy(default=parse_gemm_spec(args.gemm)))
+                          GemmPolicy(default=parse_gemm_spec(args.gemm)),
+                          prepare=args.prepare)
         t0 = time.time()
         toks = eng.generate(prompts, args.gen)
         dt = time.time() - t0

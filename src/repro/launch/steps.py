@@ -102,6 +102,12 @@ def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
                     donate: bool = True):
     # The dispatcher owns impl selection: fused Pallas call-sites are
     # rewritten to the XLA expansion wherever GSPMD must partition them.
+    # cfg.cache_weights survives that rewrite: under impl='xla' the
+    # once-per-step PreparedOperand slices are plain int8 arrays the
+    # partitioner handles like any other operand, so emulated training
+    # still decomposes each projection weight once per step (the VJP
+    # prepares in forward, the backward dA consumes the twin) instead of
+    # 3x per layer (forward, remat re-forward, backward B^T re-split).
     policy = dispatch.resolve_policy(policy, mesh)
     loss_fn = make_loss_fn(arch, policy)
     _, opt_update = make_optimizer(arch.train.optimizer)

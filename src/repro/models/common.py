@@ -14,7 +14,7 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core.emulated import emulated_dot
+from repro.core.emulated import emulated_dot, prepared_dot
 from repro.core.precision import EmulationConfig, NATIVE
 
 
@@ -44,26 +44,46 @@ NATIVE_POLICY = GemmPolicy()
 
 
 def parse_gemm_spec(spec: str) -> EmulationConfig:
-    """'native' | 'ozaki1-p4' | 'ozaki2-p9' -> EmulationConfig.
+    """'native' | 'ozaki1-p4' | 'ozaki2-p9' [+ '-cached'] -> EmulationConfig.
 
     Model-level emulation always uses the XLA expansion (impl='xla'): it
     partitions under pjit/GSPMD like any other dot. The fused Pallas
     kernels are invoked explicitly (repro.kernels.ops) on TPU, and in
     interpret mode they lower to a sequential grid loop that GSPMD cannot
     partition — never route a distributed model through them on CPU.
+
+    The '-cached' suffix (Scheme I) turns on the per-step weight cache:
+    the custom VJP decomposes each rhs once per step and the backward
+    consumes the K-transposed twin (repro.kernels.prepared) — valid under
+    the XLA expansion too, where the cached slices are plain int8 arrays
+    GSPMD partitions like any other operand.
     """
     if spec == "native":
         return NATIVE
+    cached = spec.endswith("-cached")
+    if cached:
+        spec = spec[:-len("-cached")]
     scheme, _, ps = spec.partition("-p")
     if scheme not in ("ozaki1", "ozaki2") or not ps.isdigit():
         raise ValueError(f"bad gemm spec {spec!r}")
+    if cached and scheme != "ozaki1":
+        raise ValueError("'-cached' is a Scheme-I (ozaki1) feature")
     return EmulationConfig(scheme=scheme, p=int(ps),  # type: ignore[arg-type]
-                           impl="xla")
+                           impl="xla", cache_weights=cached)
 
 
-def dense(x: jax.Array, w: jax.Array, policy: GemmPolicy, site: str,
+def dense(x: jax.Array, w, policy: GemmPolicy, site: str,
           bias: jax.Array | None = None) -> jax.Array:
-    """x: (..., K) @ w: (K, N) under the policy's emulation config."""
+    """x: (..., K) @ w: (K, N) under the policy's emulation config.
+
+    ``w`` may be a :class:`repro.kernels.prepared.PreparedOperand`
+    (see ``prepared.prepare_params`` — once-per-session serving reuse):
+    its finished int8 slices are consumed directly, whatever the policy
+    says, since the decomposition choice was made at prepare time.
+    """
+    if not isinstance(w, jax.Array) and hasattr(w, "slices"):
+        out = prepared_dot(x, w).astype(x.dtype)
+        return out if bias is None else out + bias
     cfg = policy.for_site(site)
     if cfg.scheme == "native":
         out = jnp.einsum("...k,kn->...n", x, w)

@@ -192,11 +192,16 @@ def parse_hlo(text: str) -> dict:
         if opcode not in _SKIP_OPS:
             # HBM-traffic proxy: every produced tensor is written once and
             # read once downstream (2x result bytes); dots additionally read
-            # their operands (weight streams). Fusion internals and
-            # dynamic-slice reads are thereby counted at slice granularity.
+            # their operands (weight streams), and custom-calls (the lowered
+            # Pallas kernels — the fused emulated GEMMs and the
+            # decompose/prepare passes) likewise stream every operand from
+            # HBM exactly once, so the decomposition-side saving of the
+            # in-kernel prologue (int8 slice intermediates never written)
+            # is visible in dry-run mem_bytes rather than hidden inside an
+            # opaque call.
             bytes_ = 2 * _all_shape_bytes(rtype)
-            if opcode == "dot":
-                ops = re.search(r"dot\(([^)]*)\)", line)
+            if opcode in ("dot", "custom-call"):
+                ops = re.search(opcode + r"\(([^)]*)\)", line)
                 if ops:
                     bytes_ += _operand_bytes(ops.group(1), symtab)
             comp.mem_bytes += bytes_
@@ -246,6 +251,35 @@ def roofline_terms(per_device_flops: float, per_device_mem_bytes: float,
     total = max(t_compute, t_memory, t_coll)
     terms["roofline_fraction_compute"] = t_compute / total if total else 0.0
     return terms
+
+
+def scheme1_decomposition_terms(m: int, k: int, n: int, p: int,
+                                uses: int = 3) -> dict:
+    """Decomposition-side HBM bytes (and seconds at HBM_BW) for one
+    emulated (M, K) @ (K, N) weight GEMM per training step, under the
+    three Scheme-I data paths (repro.core.traffic counting):
+
+      xla      — split -> interleave -> kernel, re-decomposed ``uses``
+                 times (forward, remat re-forward, backward B^T),
+      prologue — in-kernel VMEM slicing, only the scale pass and the
+                 fp32 operand stream touch HBM,
+      prepared — one dual-layout prep per step, reused by every use.
+
+    Both operands count for xla/prologue (each call decomposes lhs and
+    rhs); 'prepared' preps only the rhs — its lhs (the activation) still
+    runs the prologue.
+    """
+    from repro.core import traffic as T
+    lhs, rhs = m * k, k * n
+    out = {}
+    out["xla_bytes"] = T.scheme1_decomp_xla_bytes(lhs + rhs, p, uses)
+    out["prologue_bytes"] = T.scheme1_decomp_prologue_bytes(lhs + rhs, p,
+                                                            uses)
+    out["prepared_bytes"] = (T.scheme1_decomp_prologue_bytes(lhs, p, uses)
+                             + T.scheme1_decomp_prepared_bytes(rhs, p, 1))
+    for key in ("xla", "prologue", "prepared"):
+        out[f"{key}_s"] = out[f"{key}_bytes"] / HBM_BW
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,242 @@
+"""PreparedOperand + in-kernel decomposition prologue: property tests.
+
+The prologue and the decompose kernels must be *bit-identical* to the
+``scheme1.split`` + ``interleave_k`` oracle (same truncate-subtract
+recurrence, same int8 slices, same int32 accumulation, same epilogue
+order); PreparedOperand forward/backward must match the float64 oracle
+to emulation precision on aligned and padded shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheme1
+from repro.core.emulated import emulated_dot, prepared_dot
+from repro.core.precision import EmulationConfig
+from repro.kernels import decompose, dispatch, ops, prepared
+from repro.kernels.common import choose_blocks
+
+
+def _conditioned(seed, shape, phi=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(((rng.random(shape) - 0.5)
+                        * np.exp(phi * rng.standard_normal(shape)))
+                       .astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# In-kernel prologue == split + interleave + kernel, bitwise.
+# ---------------------------------------------------------------------------
+
+@given(p=st.integers(2, 6), seed=st.integers(0, 2 ** 16),
+       mi=st.integers(1, 2), ki=st.integers(1, 3), ni=st.integers(1, 2))
+@settings(max_examples=8, deadline=None)
+def test_prologue_bit_identical_to_split_pipeline(p, seed, mi, ki, ni):
+    m, k, n = 128 * mi, 128 * ki, 128 * ni
+    a = _conditioned(seed, (m, k))
+    b = _conditioned(seed + 1, (k, n))
+    pro = ops.fused_scheme1_matmul(
+        a, b, EmulationConfig(scheme="ozaki1", p=p, decomp="kernel"))
+    xla = ops.fused_scheme1_matmul(
+        a, b, EmulationConfig(scheme="ozaki1", p=p, decomp="xla"))
+    np.testing.assert_array_equal(np.asarray(pro), np.asarray(xla))
+
+
+@given(p=st.integers(2, 8), seed=st.integers(0, 2 ** 16),
+       ki=st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_decompose_rhs_kernel_matches_split_oracle(p, seed, ki):
+    k, n = 128 * ki, 256
+    b = _conditioned(seed, (k, n), phi=3.0)
+    beta = 7 if p <= 4 else 3
+    slices, nu = scheme1.split(b, p, beta, axis=0)
+    ref = scheme1.interleave_k(slices, "b", 128)
+    out = decompose.decompose_interleave_rhs(b, nu, p, beta, bk=128, bn=128)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@given(p=st.integers(2, 6), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=6, deadline=None)
+def test_decompose_pair_kernel_emits_both_layouts(p, seed):
+    """One read of B -> forward rhs layout AND the K-transposed twin,
+    each bit-identical to its split + interleave_k oracle."""
+    k, n = 256, 128
+    beta_f, beta_b = 7, 5
+    b = _conditioned(seed, (k, n), phi=3.0)
+    _, nu = scheme1.split(b, p, beta_f, axis=0)
+    _, tau = scheme1.split(b.T, p, beta_b, axis=0)
+    fwd, twin = decompose.decompose_interleave_pair(
+        b, nu, tau, p, beta_f, beta_b, bk=128, bt=128)
+    ref_f = scheme1.interleave_k(scheme1.split(b, p, beta_f, axis=0)[0],
+                                 "b", 128)
+    ref_t = scheme1.interleave_k(scheme1.split(b.T, p, beta_b, axis=0)[0],
+                                 "b", 128)
+    np.testing.assert_array_equal(np.asarray(fwd), np.asarray(ref_f))
+    np.testing.assert_array_equal(np.asarray(twin), np.asarray(ref_t))
+
+
+def test_prologue_blocks_respect_fp32_staging_budget():
+    """The VMEM search must charge the fp32 staging tile: at equal
+    problem/p the prologue working set can only shrink the tile."""
+    for p in (2, 4, 8):
+        plain = choose_blocks(2048, 2048, 2048, p)
+        pro = choose_blocks(2048, 2048, 2048, p,
+                            prologue_a=True, prologue_b=True)
+        assert pro is not None
+        acc = 4 * p * pro.bm * pro.bn
+        s_op = (2 * 4 + 4 + p) * (pro.bm + pro.bn) * pro.bk
+        assert acc + s_op <= 12 * 2 ** 20
+        assert pro.bm * pro.bn * pro.bk <= plain.bm * plain.bn * plain.bk \
+            or (2 * 4 + 4 + p) <= 2 * p
+
+
+# ---------------------------------------------------------------------------
+# PreparedOperand forward/backward vs the float64 oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128),    # aligned
+                                   (100, 200, 96)])    # padded
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_prepared_forward_matches_oracle(m, k, n, impl):
+    cfg = EmulationConfig(scheme="ozaki1", p=4, impl=impl)
+    a = _conditioned(0, (m, k))
+    b = _conditioned(1, (k, n))
+    prep = prepared.prepare_rhs(b, cfg, with_twin=True)
+    layout = "interleaved" if impl == "pallas" else "stacked"
+    assert prep.layout == layout and prep.twin.layout == layout
+    out = np.asarray(prepared.matmul_prepared(a, prep))
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 18
+    # the twin computes dC @ B^T
+    g = _conditioned(2, (m, n))
+    da = np.asarray(prepared.matmul_prepared(g, prep.twin))
+    ref_da = np.asarray(g, np.float64) @ np.asarray(b, np.float64).T
+    rel = np.abs(da - ref_da).max() / np.abs(ref_da).max()
+    assert -np.log2(rel) > 15
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 128), (60, 100, 72)])
+def test_cached_vjp_matches_uncached(m, k, n):
+    """cfg.cache_weights reroutes forward + dA through PreparedOperand;
+    gradients must agree with the re-splitting path to emulation
+    precision (identical slices -> near-identical results)."""
+    a = _conditioned(3, (m, k))
+    b = _conditioned(4, (k, n))
+
+    def loss(cfg):
+        def f(a, b):
+            return jnp.sum(jnp.sin(emulated_dot(a, b, cfg)))
+        return jax.grad(f, argnums=(0, 1))(a, b)
+
+    ga_c, gb_c = loss(EmulationConfig(scheme="ozaki1", p=4,
+                                      cache_weights=True))
+    ga_u, gb_u = loss(EmulationConfig(scheme="ozaki1", p=4))
+    for gc, gu in ((ga_c, ga_u), (gb_c, gb_u)):
+        np.testing.assert_allclose(np.asarray(gc), np.asarray(gu),
+                                   rtol=1e-4, atol=1e-4 * float(
+                                       jnp.abs(gu).max() + 1e-9))
+
+
+def test_cached_vjp_complex_falls_back_to_4m():
+    """cache_weights must not hijack complex problems: the prepared path
+    is real-only, so complex activations keep the 4M expansion and match
+    the uncached result exactly."""
+    ar = _conditioned(20, (32, 64))
+    ai = _conditioned(21, (32, 64))
+    a = (ar + 1j * ai).astype(jnp.complex64)
+    b = _conditioned(22, (64, 32))
+
+    def val(cfg):
+        return emulated_dot(a, b, cfg)
+
+    cached = np.asarray(val(EmulationConfig(scheme="ozaki1", p=4,
+                                            cache_weights=True,
+                                            out_dtype="complex64")))
+    plain = np.asarray(val(EmulationConfig(scheme="ozaki1", p=4,
+                                           out_dtype="complex64")))
+    np.testing.assert_array_equal(cached, plain)
+    # and the prepared primitives refuse complex operands loudly
+    prep = prepared.prepare_rhs(b, EmulationConfig(scheme="ozaki1", p=4))
+    with pytest.raises(ValueError, match="complex"):
+        prepared.matmul_prepared(a, prep)
+    with pytest.raises(ValueError, match="real-valued"):
+        prepared.prepare_rhs(a.T @ a, EmulationConfig(scheme="ozaki1", p=4))
+
+
+def test_cached_vjp_respects_bwd_p():
+    """Mixed-precision emulated training: the twin is prepared at bwd_p."""
+    cfg = EmulationConfig(scheme="ozaki1", p=4, bwd_p=2, cache_weights=True)
+    b = _conditioned(5, (128, 128))
+    prep = prepared.prepare_rhs(b, cfg, with_twin=True)
+    assert prep.p == 4 and prep.twin.p == 2
+
+
+def test_prepared_through_dispatch_and_batched():
+    cfg = EmulationConfig(scheme="ozaki1", p=4)
+    a = _conditioned(6, (2, 3, 64, 128))
+    b = _conditioned(7, (128, 96))
+    prep = prepared.prepare_rhs(b, cfg)
+    out = np.asarray(dispatch.emulated_matmul_batched(a, prep, cfg=cfg))
+    assert out.shape == (2, 3, 64, 96)
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 18
+
+
+def test_prepared_dot_jits_as_pytree():
+    """PreparedOperand must cross a jit boundary (serve-session reuse)."""
+    cfg = EmulationConfig(scheme="ozaki1", p=3)
+    x = _conditioned(8, (4, 32, 128))
+    w = _conditioned(9, (128, 128))
+    prep = prepared.prepare_rhs(w, cfg)
+    f = jax.jit(lambda x, w: prepared_dot(x, w))
+    out = np.asarray(f(x, prep))
+    ref = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    assert out.shape == (4, 32, 128)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 12
+
+
+def test_prepare_params_wraps_only_dense_projections():
+    from repro.models.common import GemmPolicy
+    policy = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=3,
+                                                impl="xla"))
+    params = {
+        "mixer": {"wq": jnp.ones((128, 128)), "w_r": jnp.ones((128, 128)),
+                  "conv_w": jnp.ones((4, 128))},
+        "ffn": {"wi": jnp.ones((128, 256)), "wo": jnp.ones((256, 128))},
+        "emb": jnp.ones((512, 128)),
+        "layers": {"wi": jnp.ones((2, 128, 256))},  # scan-stacked: 3-D
+    }
+    out = prepared.prepare_params(params, policy)
+    assert isinstance(out["mixer"]["wq"], prepared.PreparedOperand)
+    assert isinstance(out["ffn"]["wi"], prepared.PreparedOperand)
+    assert isinstance(out["ffn"]["wo"], prepared.PreparedOperand)
+    # einsum-consumed / non-dense / stacked leaves pass through untouched
+    assert isinstance(out["mixer"]["w_r"], jax.Array)
+    assert isinstance(out["mixer"]["conv_w"], jax.Array)
+    assert isinstance(out["emb"], jax.Array)
+    assert isinstance(out["layers"]["wi"], jax.Array)
+
+
+def test_prepared_serving_forward_matches_plain():
+    """A prepared tiny model must produce (near-)identical logits."""
+    from repro.models.common import GemmPolicy, dense
+    policy = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=4,
+                                                impl="xla"))
+    params = {"ffn": {"wi": _conditioned(10, (64, 128)),
+                      "wo": _conditioned(11, (128, 64))}}
+    x = _conditioned(12, (2, 8, 64))
+
+    def fwd(params):
+        h = dense(x, params["ffn"]["wi"], policy, "ffn")
+        return dense(jax.nn.gelu(h), params["ffn"]["wo"], policy, "ffn")
+
+    plain = np.asarray(fwd(params))
+    prepped = np.asarray(fwd(prepared.prepare_params(params, policy)))
+    np.testing.assert_allclose(prepped, plain, rtol=1e-4,
+                               atol=1e-4 * np.abs(plain).max())

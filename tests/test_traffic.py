@@ -59,3 +59,36 @@ def test_workspace_scheme2_exceeds_scheme1(s):
     p = 8
     assert traffic.scheme2_workspace_bytes(s, p) > \
         traffic.scheme1_workspace_bytes(s, p)
+
+
+@pytest.mark.parametrize("p", [3, 4, 6])
+def test_decomposition_traffic_reductions(p):
+    """The PR-2 headline: the in-kernel prologue cuts decomposition-side
+    bytes >= 2x and PreparedOperand weight reuse >= 3x (over the 3
+    per-step decompositions: forward, remat re-forward, backward B^T)."""
+    elems = 4096 * 4096
+    xla = traffic.scheme1_decomp_xla_bytes(elems, p, uses=3)
+    pro = traffic.scheme1_decomp_prologue_bytes(elems, p, uses=3)
+    prep = traffic.scheme1_decomp_prepared_bytes(elems, p, preps=1)
+    assert xla / pro >= 2.0
+    assert xla / prep >= 3.0
+    r_pro, r_prep = traffic.scheme1_decomp_reduction(p, uses=3)
+    assert abs(r_pro - xla / pro) < 1e-9
+    assert abs(r_prep - xla / prep) < 1e-9
+
+
+def test_decomposition_terms_match_component_model():
+    """utils.roofline surfaces the core.traffic model per-GEMM: both
+    operands decompose on the xla/prologue paths, only the activation
+    on the prepared path (the weight preps once)."""
+    from repro.utils import roofline
+    m, k, n, p = 256, 512, 1024, 4
+    t = roofline.scheme1_decomposition_terms(m, k, n, p, uses=3)
+    both = m * k + k * n
+    assert t["xla_bytes"] == traffic.scheme1_decomp_xla_bytes(both, p, 3)
+    assert t["prologue_bytes"] == \
+        traffic.scheme1_decomp_prologue_bytes(both, p, 3)
+    assert t["prepared_bytes"] == \
+        (traffic.scheme1_decomp_prologue_bytes(m * k, p, 3)
+         + traffic.scheme1_decomp_prepared_bytes(k * n, p, 1))
+    assert t["xla_bytes"] > t["prologue_bytes"] > t["prepared_bytes"]
