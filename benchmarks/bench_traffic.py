@@ -112,6 +112,13 @@ def run_cell(m: int, k: int, n: int, p: int, verify: bool) -> dict:
         "xla_stage": _measure(xla_stage, a_spec, b_spec),
         "prologue_stage": _measure(prologue_stage, a_spec, b_spec),
     }
+    # Per-backend roofline projection (paper Fig. 4/5 framing): fraction
+    # of INT8 peak per hardware table of each registered kernel backend —
+    # the 'gpu' entry carries both Hopper (H100) and Blackwell (B200).
+    cell["projection"] = {
+        bk: roofline.projected_throughput(m, k, n, p, backend=bk)
+        for bk in ("tpu", "gpu")
+    }
     if verify:
         cell["bit_identical"] = _bit_identity(m, k, n, p)
     return cell
@@ -156,11 +163,14 @@ def main(argv=None) -> int:
             cell = run_cell(m, k, n, p, verify=not args.no_verify)
             cells.append(cell)
             r = cell["reduction"]
+            hw = cell["projection"]["gpu"]["hardware"]
             print(f"({m},{k},{n}) p={p}: xla "
                   f"{cell['decomp_bytes']['xla']/1e6:.2f}MB -> prologue "
                   f"{r['prologue']:.2f}x, prepared(weight) "
                   f"{r['prepared_weight']:.2f}x, bit_identical="
-                  f"{cell.get('bit_identical', 'skipped')}", flush=True)
+                  f"{cell.get('bit_identical', 'skipped')}, proj "
+                  f"H100 {hw['h100']['projected_tops']:.0f}/B200 "
+                  f"{hw['b200']['projected_tops']:.0f} Top/s", flush=True)
 
     p4 = [c for c in cells if c["p"] == 4]
     report = {

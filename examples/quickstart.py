@@ -1,6 +1,11 @@
 """Quickstart: emulated high-precision GEMM from int8 building blocks.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Kernel-backend selection (TPU Mosaic / Mosaic-GPU-Triton / XLA
+reference) is documented in docs/backends.md; set REPRO_BACKEND=gpu or
+EmulationConfig(backend="gpu") to route through the GPU Scheme-I
+lowering (interpret mode off-GPU — bit-identical results).
 """
 
 import numpy as np
@@ -39,3 +44,9 @@ for p in (8, 12):
 for target in (16, 22, 40):
     cfg = plan_precision(target_bits=target, k_dim=n)
     print(f"planner: {target} bits at K={n} -> {cfg.scheme} p={cfg.p}")
+
+# Kernel backends (docs/backends.md): the same GEMM through the GPU
+# Scheme-I lowering — bit-identical slicing, 16-lane tiles.
+cfg = EmulationConfig(scheme="ozaki1", p=4, backend="gpu")
+c = emulated_dot(jnp.asarray(a), jnp.asarray(b), cfg)
+print(f"Ozaki-I  p=4 via backend='gpu':   {bits(c):5.1f} bits")

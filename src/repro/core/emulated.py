@@ -113,18 +113,20 @@ def _fwd(a, b, cfg):
     return emulated_dot(a, b, cfg), (a, b, None)
 
 
-def _bwd(cfg, res, g):
-    a, b, twin = res
+def _bwd_core(cfg, a, b, twin, g):
+    """Shared backward: dA = dC B^T (from the twin's finished slices when
+    one exists — no re-split), dB = A^T dC, both through the same
+    emulated path (exact-int interior), optionally at reduced slice count
+    (mixed-precision emulated training — gradients tolerate fewer
+    mantissa bits).  Used by both the per-call cache (``emulated_dot``)
+    and the pre-prepared once-per-step path (``emulated_dot_prepared``).
+    """
     a2 = a.reshape(-1, a.shape[-1])
     g2 = g.reshape(-1, g.shape[-1])
-    # Backward GEMMs run through the same emulated path (exact-int
-    # interior), optionally at reduced slice count (mixed-precision
-    # emulated training — gradients tolerate fewer mantissa bits).
     if cfg.bwd_p and cfg.bwd_p != cfg.p:
         import dataclasses
         cfg = dataclasses.replace(cfg, p=cfg.bwd_p)
     if twin is not None:
-        # dA = dC @ B^T from the twin's finished slices — no re-split.
         # Same accumulation dtype as the uncached _dot_2d branch.
         da_dtype = cfg.out_dtype or jnp.promote_types(g2.dtype, b.dtype)
         da = prepared_dot(g2, twin, da_dtype).reshape(a.shape) \
@@ -135,7 +137,63 @@ def _bwd(cfg, res, g):
     return da, db
 
 
+def _bwd(cfg, res, g):
+    a, b, twin = res
+    return _bwd_core(cfg, a, b, twin, g)
+
+
 emulated_dot.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# Pre-prepared weights: the once-per-step hoist under gradient accumulation.
+# ---------------------------------------------------------------------------
+
+def _zero_cotangent(tree):
+    """Structure-matching zero cotangents for a pytree of arrays.
+
+    Integer leaves (the int8 slices) take float0 per the custom_vjp
+    contract; float leaves (the power-of-two scales) take zeros."""
+    import numpy as np
+    from jax import dtypes
+
+    def z(x):
+        if jnp.issubdtype(x.dtype, jnp.inexact):
+            return jnp.zeros_like(x)
+        return np.zeros(jnp.shape(x), dtypes.float0)
+
+    return jax.tree.map(z, tree)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def emulated_dot_prepared(a: jax.Array, b: jax.Array, prep,
+                          cfg: EmulationConfig) -> jax.Array:
+    """a: (..., K) @ b: (K, N) where ``prep`` is b's already-built
+    PreparedOperand (with K-transposed twin).
+
+    The microbatch-scan consumption path (see ``launch/steps.py``): the
+    prep was constructed *outside* the scan, once per optimizer step, so
+    the forward streams finished slices, the backward dA consumes the
+    twin, and dB still flows to the float weight ``b`` — semantically
+    ``emulated_dot`` with ``cfg.cache_weights``, minus the per-microbatch
+    re-preparation.
+    """
+    out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    return prepared_dot(a, prep, out_dtype)
+
+
+def _fwd_prepared(a, b, prep, cfg):
+    out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    return prepared_dot(a, prep, out_dtype), (a, b, prep)
+
+
+def _bwd_prepared(cfg, res, g):
+    a, b, prep = res
+    da, db = _bwd_core(cfg, a, b, prep.twin, g)
+    return da, db, _zero_cotangent(prep)
+
+
+emulated_dot_prepared.defvjp(_fwd_prepared, _bwd_prepared)
 
 
 def emulated_einsum_proj(x: jax.Array, w: jax.Array,

@@ -96,6 +96,11 @@ class EmulationConfig:
                rhs operand once per step (forward layout + K-transposed
                twin for dA) instead of re-splitting it in forward, remat
                re-forward, and backward (see repro.kernels.prepared).
+      backend: kernel-backend name from the registry in
+               repro.kernels.backends ('tpu' | 'gpu' | 'xla' | an
+               out-of-tree registration); None = platform default.  The
+               ``REPRO_BACKEND`` environment variable overrides this at
+               dispatch time.
     """
     scheme: Scheme = "native"
     p: int = 4
@@ -109,6 +114,7 @@ class EmulationConfig:
     bwd_p: int = 0
     decomp: Literal["auto", "xla", "kernel"] = "auto"
     cache_weights: bool = False
+    backend: str | None = None
 
     def resolved_beta(self, k_dim: int) -> int:
         return self.beta if self.beta is not None else safe_beta(k_dim)

@@ -132,7 +132,10 @@ def shift_reduce(accs: jax.Array, beta: int, scale_a: jax.Array,
     p = accs.shape[0]
     c = jnp.zeros(accs.shape[1:], dtype=out_dtype)
     for s in range(p):
-        w = jnp.exp2(jnp.asarray(-beta * (s + 2), dtype=out_dtype))
+        # Python 2.0**e is exact (the runtime exp2 kernel is up to a few
+        # ulp off eagerly, while jit constant-folds it — a bit-parity
+        # hazard between eager oracles and compiled kernels).
+        w = jnp.asarray(2.0 ** (-beta * (s + 2)), dtype=out_dtype)
         c = c + w * accs[s].astype(out_dtype)
     return c * scale_a.astype(out_dtype) * scale_b.astype(out_dtype)
 

@@ -133,6 +133,47 @@ def scheme1_decomp_reduction(p: int, uses: int = 3) -> tuple[float, float]:
             xla / scheme1_decomp_prepared_bytes(1, p, 1))
 
 
+# ---------------------------------------------------------------------------
+# Per-backend hardware peak tables.
+#
+# The paper's headline numbers are fractions of INT8 Tensor Core peak on
+# NVIDIA Hopper (H100) and Blackwell (B200) — up to 83% and 81%
+# respectively — so projected-throughput reporting needs those peaks per
+# kernel backend. Keys mirror repro.kernels.backends capability
+# ``peak_key``s; the 'xla' reference backend projects against whichever
+# hardware the TPU table describes (it runs on the same chip).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwarePeak:
+    """Dense (non-sparsity) peaks of one accelerator."""
+    name: str
+    int8_ops: float      # int8 MAC-pair ops/s (Top/s * 1e12)
+    flops: float         # dense fp16/bf16 FLOP/s
+    hbm_bw: float        # bytes/s
+
+
+BACKEND_PEAKS: dict[str, dict[str, HardwarePeak]] = {
+    "tpu": {
+        "v5e": HardwarePeak("TPU v5e", 394e12, 197e12, 819e9),
+    },
+    "gpu": {
+        "h100": HardwarePeak("H100 SXM (Hopper)", 1979e12, 989e12, 3350e9),
+        "b200": HardwarePeak("B200 (Blackwell)", 4500e12, 2250e12, 8000e9),
+    },
+}
+BACKEND_PEAKS["xla"] = BACKEND_PEAKS["tpu"]
+
+
+def backend_peaks(backend: str) -> dict[str, HardwarePeak]:
+    """Peak table for a backend name ('tpu-v5e'-style names resolve by
+    family prefix; unknown backends project against the TPU table)."""
+    return (BACKEND_PEAKS.get(backend)
+            or BACKEND_PEAKS.get(backend.split("-")[0])
+            or BACKEND_PEAKS["tpu"])
+
+
 def scheme2_workspace_bytes(s: GemmShape, p: int,
                             complex_inputs: bool = False) -> int:
     """p residue matrices per operand + p per-modulus output residues

@@ -1,26 +1,41 @@
-"""Fused Pallas TPU kernels for EmuGEMM precision emulation.
+"""Fused Pallas kernels for EmuGEMM precision emulation.
 
 Layering:
 
-  compat.py      feature-probed JAX-version shims (compiler params,
-                 scalar-prefetch grid specs) — absorb upstream API drift
-  dispatch.py    the ONLY place pl.pallas_call is constructed; one
-                 plan_emulated per GEMM (cached block selection), padded
-                 non-aligned routing, batching, launch-policy resolution
-  common.py      VMEM budget model (choose_blocks, incl. the fp32
+  compat.py      feature-probed JAX-version shims (compiler params for
+                 TPU Mosaic and GPU Triton/Mosaic-GPU, scalar-prefetch
+                 grid specs) — absorb upstream API drift
+  backends/      the pluggable kernel-backend subsystem: KernelBackend
+                 interface + registry ('tpu' Mosaic, 'gpu'
+                 Mosaic-GPU/Triton Scheme-I, 'xla' reference fallback);
+                 owns pallas_call construction, per-backend alignment,
+                 staging budgets and peak tables
+  dispatch.py    routing: one plan_emulated per GEMM (per-backend cached
+                 block selection), padded non-aligned handling, batching,
+                 launch-policy resolution; selected by
+                 EmulationConfig.backend / REPRO_BACKEND
+  common.py      TPU VMEM budget model (choose_blocks, incl. the fp32
                  prologue staging terms) and interpret-mode probe
   ozaki1/2/3m, matmul_int8, flash_attn, decompose
-                 the kernels themselves; all route through dispatch.
-                 ozaki1 decomposes fp32 tiles in its VMEM prologue;
-                 decompose emits pre-interleaved slices (incl. the
-                 dual-layout PreparedOperand prep pass)
+                 the Mosaic (TPU-backend) kernels; all route through
+                 dispatch. ozaki1 decomposes fp32 tiles in its VMEM
+                 prologue; decompose emits pre-interleaved slices (incl.
+                 the dual-layout PreparedOperand prep pass)
   prepared.py    PreparedOperand: pre-decomposed rhs (+ K-transposed
                  twin) reused across forward/remat/backward and across
-                 serve sessions
+                 serve sessions; StepPrepared for the once-per-step
+                 microbatch-scan hoist in launch/steps.py
   ops.py         jit'd end-to-end pipelines (decompose -> kernel -> CRT)
   ref.py         pure-jnp oracles for the test suite
 """
 
+from repro.kernels.backends import (  # noqa: F401
+    KernelBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
 from repro.kernels.dispatch import (  # noqa: F401
     build_pallas_call,
     emulated_matmul,

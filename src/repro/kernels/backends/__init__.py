@@ -1,0 +1,106 @@
+"""Pluggable kernel-backend registry for the emulated-GEMM dispatcher.
+
+Three backends ship built-in:
+
+  ``tpu``  — the Mosaic kernels (ozaki1/ozaki2/ozaki3m/decompose/
+             matmul_int8), 128-lane MXU alignment, VMEM budget model.
+  ``gpu``  — the Mosaic-GPU/Triton Scheme-I lowering (16-lane tiles,
+             shared-memory staging, register/TMEM accumulators);
+             interpret-mode runnable on CPU for CI bit-parity checks.
+  ``xla``  — the reference expansions in ``repro.core`` (no pallas_call;
+             always available; GSPMD-partitionable).
+
+Selection precedence (``resolve_backend``):
+
+  explicit argument > ``REPRO_BACKEND`` env var > ``EmulationConfig
+  .backend`` > platform default (the jax backend: 'gpu' on GPU, 'tpu'
+  otherwise — CPU runs the TPU kernels in interpret mode, the historical
+  behavior).
+
+Names resolve leniently: a platform-qualified name like ``tpu-v5e``
+falls back to its family prefix, and unknown names fall back to the
+platform default so an exotic ``jax.default_backend()`` string never
+crashes block selection (the dispatcher's block cache still buckets by
+the *requested* name, keeping entries distinct per target).
+
+Register out-of-tree backends with :func:`register_backend`; the
+dispatcher, launch-policy resolution, and roofline projections pick them
+up by name.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.backends.base import (  # noqa: F401  (re-export surface)
+    BackendCapabilities,
+    KernelBackend,
+    build_pallas_call,
+)
+from repro.kernels.backends.gpu import GpuBackend
+from repro.kernels.backends.tpu import TpuBackend
+from repro.kernels.backends.xla import XlaBackend
+
+ENV_VAR = "REPRO_BACKEND"
+
+_REGISTRY: dict[str, KernelBackend] = {}
+
+
+def register_backend(backend: KernelBackend, *,
+                     overwrite: bool = False) -> KernelBackend:
+    """Add a backend to the registry (name taken from ``backend.name``)."""
+    name = backend.name
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"backend {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[name] = backend
+    return backend
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> KernelBackend:
+    """Exact-name lookup; raises KeyError for unknown backends."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown kernel backend {name!r}; registered: "
+                       f"{available_backends()}") from None
+
+
+def default_backend_name() -> str:
+    """Platform default: follow the jax backend, with CPU running the TPU
+    kernels in interpret mode (the pre-registry behavior)."""
+    return "gpu" if jax.default_backend() == "gpu" else "tpu"
+
+
+def resolve_backend_name(name: str | None = None, cfg=None) -> str:
+    """Apply the selection precedence; always returns a *registered* name."""
+    requested = (name
+                 or os.environ.get(ENV_VAR)
+                 or getattr(cfg, "backend", None)
+                 or default_backend_name())
+    if requested in _REGISTRY:
+        return requested
+    # 'tpu-v5e' -> 'tpu'; anything else -> platform default.
+    family = requested.split("-")[0]
+    if family in _REGISTRY:
+        return family
+    return default_backend_name()
+
+
+def resolve_backend(name: str | None = None, cfg=None) -> KernelBackend:
+    return _REGISTRY[resolve_backend_name(name, cfg)]
+
+
+register_backend(TpuBackend())
+register_backend(GpuBackend())
+register_backend(XlaBackend())

@@ -1,0 +1,151 @@
+"""KernelBackend interface + the one place a ``pl.pallas_call`` is built.
+
+A backend owns everything hardware-specific about lowering an emulated
+GEMM: tile alignment, operand dtypes, on-chip staging budgets, which
+Ozaki schemes it has fused kernels for, and the peak tables the
+roofline/traffic reporting projects against.  The registry in
+:mod:`repro.kernels.backends` maps names ('tpu', 'gpu', 'xla') to
+instances; :mod:`repro.kernels.dispatch` routes every
+``emulated_matmul`` / ``plan_emulated`` / ``select_blocks`` call through
+it, selected by ``EmulationConfig.backend`` or the ``REPRO_BACKEND``
+environment override.
+
+``build_pallas_call`` (historically ``dispatch.build_pallas_call``) is
+the version-portable call builder every Mosaic kernel in this package
+uses; it lives here so backends and kernels share one construction site.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+import jax
+from jax.experimental import pallas as pl
+
+from repro.kernels import compat
+from repro.kernels.common import Blocks, interpret
+
+
+# ---------------------------------------------------------------------------
+# The one place a pl.pallas_call is constructed.
+# ---------------------------------------------------------------------------
+
+def build_pallas_call(kernel, *, out_shape, grid=None, in_specs=None,
+                      out_specs=None, grid_spec=None, scratch_shapes=None,
+                      dimension_semantics=None, name=None,
+                      interpret_mode: bool | None = None,
+                      compiler_params_fn=compat.tpu_compiler_params,
+                      **compiler_kwargs):
+    """Construct a ``pl.pallas_call`` with version-portable compiler params.
+
+    Exactly one of ``grid`` (+ ``in_specs``/``out_specs``) or ``grid_spec``
+    must be given. ``compiler_kwargs`` (e.g. ``vmem_limit_bytes``) are
+    forwarded to the compiler-params object when the installed jax accepts
+    them and silently dropped otherwise.  ``compiler_params_fn`` selects
+    the platform's params builder (TPU Mosaic by default; the GPU backend
+    passes :func:`repro.kernels.compat.gpu_compiler_params`).
+    """
+    kw: dict = {}
+    if grid_spec is not None:
+        if grid is not None or in_specs is not None or out_specs is not None:
+            raise ValueError("pass either grid_spec or grid/in_specs/out_specs")
+        kw["grid_spec"] = grid_spec
+    else:
+        kw["grid"] = grid
+        kw["in_specs"] = in_specs
+        kw["out_specs"] = out_specs
+    if scratch_shapes is not None:
+        kw["scratch_shapes"] = scratch_shapes
+    interp = interpret() if interpret_mode is None else interpret_mode
+    if not interp or compiler_params_fn is compat.tpu_compiler_params:
+        # Interpret mode ignores compiler hints; platform-foreign params
+        # objects (Triton hints on a CPU run) are dropped rather than
+        # handed to a lowering that would reject them.
+        params = compiler_params_fn(
+            dimension_semantics=dimension_semantics, **compiler_kwargs)
+        if params is not None:
+            kw["compiler_params"] = params
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        interpret=interp,
+        name=name,
+        **kw)
+
+
+# ---------------------------------------------------------------------------
+# Capabilities + the backend interface.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a kernel backend can lower and under which resource model.
+
+    Attributes:
+      align:            tile alignment every GEMM dimension must meet
+                        before the fused kernels run (operands are
+                        zero-padded up to it by the dispatcher),
+      schemes:          Ozaki schemes with a fused lowering here,
+      operand_dtypes:   real operand dtypes the fused kernels accept
+                        (complex inputs route through the 4M expansion
+                        on their real parts before reaching a backend),
+      staging_budget:   bytes of on-chip operand staging (TPU VMEM /
+                        GPU shared memory) the block search may claim,
+      accumulator_budget: bytes available for the p int32 accumulators
+                        (VMEM scratch on TPU, registers/TMEM on GPU),
+      peak_key:         key into ``repro.core.traffic.BACKEND_PEAKS`` —
+                        the hardware table roofline projections use.
+    """
+    align: int
+    schemes: frozenset
+    operand_dtypes: frozenset
+    staging_budget: int
+    accumulator_budget: int
+    peak_key: str
+
+
+class KernelBackend(abc.ABC):
+    """One lowering target for the fused emulated-GEMM kernels."""
+
+    name: str
+
+    @property
+    @abc.abstractmethod
+    def capabilities(self) -> BackendCapabilities:
+        ...
+
+    @abc.abstractmethod
+    def choose_blocks(self, m: int, n: int, k: int, p: int, *,
+                      out_bytes: int = 4, prologue_a: bool = False,
+                      prologue_b: bool = False,
+                      fixed_bk: int | None = None) -> Blocks | None:
+        """Largest aligned blocks whose working set fits this backend's
+        staging/accumulator budgets, or None when nothing aligns."""
+        ...
+
+    @abc.abstractmethod
+    def matmul(self, a: jax.Array, b: jax.Array, cfg, out_dtype,
+               blocks: Blocks | None) -> jax.Array:
+        """Fused 2-D real (M, K) @ (K, N) for ``cfg.scheme`` on aligned
+        operands.  Complex routing (Scheme-I 4M) happens in dispatch."""
+        ...
+
+    def supports(self, cfg, a_dtype=None, b_dtype=None) -> bool:
+        """Can this backend lower ``cfg`` on these (real) operand dtypes?
+        The dispatcher falls back to the 'xla' reference backend when not.
+        """
+        caps = self.capabilities
+        if cfg.scheme not in caps.schemes:
+            return False
+        for dt in (a_dtype, b_dtype):
+            if dt is None:
+                continue
+            name = jax.numpy.dtype(dt).name
+            if name.startswith("complex"):
+                # 4M expansion hands the backend the real parts.
+                name = {"complex64": "float32",
+                        "complex128": "float64"}[name]
+            if name not in caps.operand_dtypes:
+                return False
+        return True

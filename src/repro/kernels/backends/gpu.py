@@ -1,0 +1,225 @@
+"""Mosaic-GPU/Triton Scheme-I backend: fused EmuGEMM-I for Hopper-class GPUs.
+
+The lowering mirrors the paper's Hopper/Blackwell kernel structure
+(Sec. III-B) in the Triton program model rather than the TPU grid model:
+
+  * one program instance per (bM, bN) output tile — the grid is 2-D,
+    with the K reduction as an *in-kernel* loop (``fori_loop``) instead
+    of a third grid axis, matching a Triton/Mosaic-GPU persistent-tile
+    kernel where accumulators live in registers (RF on Hopper, TMEM on
+    Blackwell) for the whole K sweep;
+  * each K step loads a (bM, bK) + (bK, bN) fp32 tile and carves the p
+    signed int8 slices in-place via the exact truncate-and-subtract
+    recurrence (``carve_slices`` — the same recurrence the TPU prologue
+    and ``scheme1.split`` run, so the GPU path is bit-identical to the
+    ``scheme1.matmul`` oracle).  The operand BlockSpecs describe the
+    program's full K *strip*, but in the Triton lowering a BlockSpec is
+    a GMEM block pointer — only the ``pl.ds`` slice loaded inside the K
+    loop materializes on-chip, so the shared-memory working set is the
+    per-K-step tile pair that ``choose_blocks_gpu`` budgets (interpret
+    mode materializes the strip in host memory, which is fine);
+  * the p(p+1)/2 slice-pair products accumulate into p int32 register
+    accumulators (exact: safe_beta bounds the K-long dot below 2^31);
+  * the shift-reduce epilogue (paper Eq. 3) runs before the single
+    (bM, bN) output write — no int32 round-trips to HBM.
+
+Tiles align to the 16-lane WGMMA/MMA granularity (not the TPU's 128) and
+the block search budgets shared memory per K step plus the register/TMEM
+accumulator footprint.  On CPU the kernel runs in Pallas interpret mode,
+which is how CI verifies bit-parity against ``scheme1.matmul``; on a real
+GPU the same kernel body lowers through Triton/Mosaic-GPU with
+feature-probed compiler params (:func:`repro.kernels.compat
+.gpu_compiler_params`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import compat
+from repro.kernels.backends.base import (BackendCapabilities, KernelBackend,
+                                         build_pallas_call)
+from repro.kernels.common import Blocks, carve_slices
+
+# WGMMA tile granularity: every GEMM dimension aligns to 16 lanes.
+ALIGN = 16
+
+# H100-class shared memory per SM is 228 KiB; leave pipeline headroom.
+SMEM_BUDGET = 192 * 1024
+# Register file / Blackwell TMEM available to the p int32 accumulators.
+ACC_BUDGET = 128 * 1024
+
+_CAPS = BackendCapabilities(
+    align=ALIGN,
+    schemes=frozenset({"ozaki1"}),
+    operand_dtypes=frozenset({"float32", "float64", "bfloat16", "float16"}),
+    staging_budget=SMEM_BUDGET,
+    accumulator_budget=ACC_BUDGET,
+    peak_key="gpu",
+)
+
+
+def choose_blocks_gpu(m: int, n: int, k: int, p: int,
+                      out_bytes: int = 4,
+                      smem_budget: int = SMEM_BUDGET,
+                      acc_budget: int = ACC_BUDGET,
+                      fixed_bk: int | None = None) -> Blocks | None:
+    """Largest 16-aligned blocks fitting the SMEM/accumulator budgets.
+
+    The budget models the *per-K-step* working set — what a Triton
+    lowering actually materializes on-chip per loop iteration (the
+    BlockSpec strip itself is a GMEM block pointer, not an SMEM
+    allocation; see the module doc).  One K step stages the fp32 operand
+    tiles (double-buffered by the async-copy pipeline) plus the p carved
+    int8 slices of each:
+
+      S_smem = (2*4 + p) * (bM + bN) * bK
+
+    while the p int32 accumulators occupy 4 p bM bN of RF/TMEM and the
+    epilogue tile ``out_bytes * bM * bN`` shares the staging space.
+    Preference mirrors the TPU search: maximize bM*bN, then bK.
+    """
+    best: tuple[tuple[int, int], Blocks] | None = None
+    bk_candidates = ((fixed_bk,) if fixed_bk is not None
+                     else (128, 64, 32, 16))
+    for bm in (128, 64, 32, 16):
+        if m % bm:
+            continue
+        for bn in (128, 64, 32, 16):
+            if n % bn:
+                continue
+            for bk in bk_candidates:
+                if k % bk:
+                    continue
+                acc = 4 * p * bm * bn
+                smem = (2 * 4 + p) * (bm + bn) * bk + out_bytes * bm * bn
+                if acc > acc_budget or smem > smem_budget:
+                    continue
+                key = (bm * bn, bk)
+                if best is None or key > best[0]:
+                    best = (key, Blocks(bm, bn, bk))
+    return best[1] if best else None
+
+
+def _kernel(a_ref, b_ref, mu_ref, nu_ref, out_ref, *,
+            p: int, beta: int, bk: int, nk: int, out_dtype):
+    """One (bM, bN) output tile: in-kernel K loop, register accumulators."""
+    mu = mu_ref[...]                 # (bM, 1) power-of-two row scales
+    nu = nu_ref[...]                 # (1, bN) power-of-two col scales
+    bm, bn = out_ref.shape
+
+    def k_step(t, acc):
+        # Stage this K step's fp32 tiles (shared memory) and carve the
+        # p int8 slices in-place — elementwise, so tile-local carving is
+        # bit-identical to the full-array scheme1.split.
+        a_t = a_ref[:, pl.ds(t * bk, bk)] / mu       # (bM, bK)
+        b_t = b_ref[pl.ds(t * bk, bk), :] / nu       # (bK, bN)
+        a_slices = list(carve_slices(a_t, p, beta))
+        b_slices = list(carve_slices(b_t, p, beta))
+        # Triangular MMA schedule (Alg. 1 lines 6-8): C_s += A'_i B'_{s-i}.
+        for s in range(p):
+            partial = None
+            for i in range(s + 1):
+                prod = jax.lax.dot_general(
+                    a_slices[i], b_slices[s - i], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                partial = prod if partial is None else partial + prod
+            acc = acc.at[s].add(partial)
+        return acc
+
+    acc = jax.lax.fori_loop(0, nk, k_step,
+                            jnp.zeros((p, bm, bn), jnp.int32))
+
+    # Shift-reduce epilogue: C = diag(mu) (sum_s 2^{-beta(s+2)} C_s) diag(nu),
+    # summed highest-weight-first exactly like scheme1.shift_reduce.
+    c = jnp.zeros((bm, bn), dtype=out_dtype)
+    for s in range(p):
+        # Exact Python power of two (see scheme1.shift_reduce).
+        w = jnp.asarray(2.0 ** (-beta * (s + 2)), dtype=out_dtype)
+        c = c + w * acc[s].astype(out_dtype)
+    out_ref[...] = c * mu.astype(out_dtype) * nu.astype(out_dtype)
+
+
+def fused_matmul_scheme1(a: jax.Array, b: jax.Array,
+                         mu: jax.Array, nu: jax.Array,
+                         p: int, beta: int, blocks: Blocks,
+                         out_dtype=jnp.float32) -> jax.Array:
+    """Fused Scheme-I GEMM, GPU lowering: a (M, K) x b (K, N) fp32 with
+    (M, 1)/(1, N) power-of-two scales -> (M, N) ``out_dtype``."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if not blocks.aligned(m, n, k):
+        raise ValueError(f"blocks {blocks} not aligned for {(m, n, k)}")
+    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    kernel = functools.partial(_kernel, p=p, beta=beta, bk=bk, nk=k // bk,
+                               out_dtype=out_dtype)
+    # Unlike the Mosaic kernels (interpret everywhere off-TPU, see
+    # common.interpret), this lowering compiles on a real GPU and
+    # interprets everywhere else — including TPU hosts, which cannot run
+    # a Triton/Mosaic-GPU program.
+    return build_pallas_call(
+        kernel,
+        interpret_mode=jax.default_backend() != "gpu",
+        grid=(m // bm, n // bn),
+        in_specs=[
+            # Each program walks its K strip tile-by-tile (pl.ds above).
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params_fn=compat.gpu_compiler_params,
+        num_warps=8,
+        num_stages=2,
+        name=f"emugemm1_gpu_p{p}",
+    )(a, b, mu, nu)
+
+
+class GpuBackend(KernelBackend):
+    name = "gpu"
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        return _CAPS
+
+    def choose_blocks(self, m, n, k, p, *, out_bytes=4, prologue_a=False,
+                      prologue_b=False, fixed_bk=None) -> Blocks | None:
+        # The GPU kernel always decomposes in the prologue (fp32 staged in
+        # SMEM, slices carved in-place), so the prologue flags are moot.
+        del prologue_a, prologue_b
+        return choose_blocks_gpu(m, n, k, p, out_bytes=out_bytes,
+                                 fixed_bk=fixed_bk)
+
+    def matmul(self, a, b, cfg, out_dtype, blocks):
+        if cfg.scheme != "ozaki1":
+            raise ValueError(f"gpu backend has no fused kernel for scheme "
+                             f"{cfg.scheme!r}")
+        from repro.core import scheme1  # lazy: keep import graph acyclic
+        m, k = a.shape
+        _, n = b.shape
+        beta = cfg.resolved_beta(k)
+        if blocks is None:
+            blocks = self.choose_blocks(
+                m, n, k, cfg.p, out_bytes=jnp.dtype(out_dtype).itemsize)
+        if blocks is None or not blocks.aligned(m, n, k):
+            raise ValueError(f"shapes {(m, n, k)} not 16-aligned")
+
+        def widen(x):
+            # Match scheme1.split: ints/half floats widen to f32 before the
+            # truncate-subtract recurrence; f64 keeps its mantissa.
+            if (not jnp.issubdtype(x.dtype, jnp.floating)
+                    or jnp.dtype(x.dtype).itemsize < 4):
+                return x.astype(jnp.float32)
+            return x
+        a, b = widen(a), widen(b)
+        mu = scheme1._pow2_row_scale(a, axis=1)
+        nu = scheme1._pow2_row_scale(b, axis=0)
+        return fused_matmul_scheme1(a, b, mu, nu, cfg.p, beta, blocks,
+                                    out_dtype=out_dtype)

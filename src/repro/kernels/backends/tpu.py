@@ -1,0 +1,56 @@
+"""The TPU Mosaic backend: the existing fused kernels, re-registered.
+
+This is the original lowering target of the reproduction — the Mosaic
+kernels in ``ozaki1``/``ozaki2``/``ozaki3m``/``decompose``/``matmul_int8``
+— wrapped behind the :class:`~repro.kernels.backends.base.KernelBackend`
+interface so the dispatcher selects it like any other backend.  Block
+selection is the VMEM budget model of :func:`repro.kernels.common
+.choose_blocks` (128-lane MXU alignment); peaks key the TPU v5e entry of
+``repro.core.traffic.BACKEND_PEAKS``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.backends.base import BackendCapabilities, KernelBackend
+from repro.kernels.common import Blocks, VMEM_BUDGET, choose_blocks
+
+ALIGN = 128  # MXU lane/tile alignment on every GEMM dimension.
+
+_CAPS = BackendCapabilities(
+    align=ALIGN,
+    schemes=frozenset({"ozaki1", "ozaki2"}),
+    operand_dtypes=frozenset({"float32", "float64", "bfloat16", "float16",
+                              "int8", "int16", "int32"}),
+    staging_budget=VMEM_BUDGET,
+    accumulator_budget=VMEM_BUDGET,
+    peak_key="tpu",
+)
+
+
+class TpuBackend(KernelBackend):
+    name = "tpu"
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        return _CAPS
+
+    def choose_blocks(self, m, n, k, p, *, out_bytes=4, prologue_a=False,
+                      prologue_b=False, fixed_bk=None) -> Blocks | None:
+        return choose_blocks(m, n, k, p, out_bytes=out_bytes,
+                             prologue_a=prologue_a, prologue_b=prologue_b,
+                             fixed_bk=fixed_bk)
+
+    def matmul(self, a, b, cfg, out_dtype, blocks):
+        from repro.kernels import ops  # lazy: ops imports the kernel modules
+        if cfg.scheme == "ozaki1":
+            return ops.fused_scheme1_matmul(a, b, cfg, out_dtype=out_dtype,
+                                            blocks=blocks)
+        if cfg.scheme == "ozaki2":
+            if (jnp.issubdtype(a.dtype, jnp.complexfloating)
+                    or jnp.issubdtype(b.dtype, jnp.complexfloating)):
+                return ops.fused_3m_matmul(a, b, cfg, out_dtype=out_dtype)
+            return ops.fused_scheme2_matmul(a, b, cfg, out_dtype=out_dtype)
+        raise ValueError(f"tpu backend has no fused kernel for scheme "
+                         f"{cfg.scheme!r}")

@@ -1,0 +1,61 @@
+"""The XLA reference backend: the always-available fallback lowering.
+
+No ``pallas_call`` at all — the scheme reference implementations in
+``repro.core`` (plain jnp/lax ops that partition under GSPMD like any
+other dot).  The dispatcher falls back here whenever the selected
+backend has no fused kernel for a (scheme, dtype) pair — e.g. Scheme-II
+on the GPU backend until its residue kernel lands.
+
+Alignment is 1 (XLA tiles internally), so every shape is "aligned" and
+the padded path never engages.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.backends.base import BackendCapabilities, KernelBackend
+from repro.kernels.common import Blocks
+
+_CAPS = BackendCapabilities(
+    align=1,
+    schemes=frozenset({"ozaki1", "ozaki2"}),
+    operand_dtypes=frozenset({"float32", "float64", "bfloat16", "float16",
+                              "int8", "int16", "int32"}),
+    staging_budget=0,
+    accumulator_budget=0,
+    peak_key="xla",
+)
+
+
+class XlaBackend(KernelBackend):
+    name = "xla"
+
+    @property
+    def capabilities(self) -> BackendCapabilities:
+        return _CAPS
+
+    def choose_blocks(self, m, n, k, p, *, out_bytes=4, prologue_a=False,
+                      prologue_b=False, fixed_bk=None) -> Blocks | None:
+        # XLA chooses its own tiling; a unit block makes every shape
+        # "aligned" so the dispatcher never pads for this backend.
+        del p, out_bytes, prologue_a, prologue_b
+        return Blocks(1, 1, fixed_bk if fixed_bk is not None else 1)
+
+    def matmul(self, a, b, cfg, out_dtype, blocks):
+        del blocks
+        from repro.core import complex3m, scheme1, scheme2
+        cplx = (jnp.issubdtype(a.dtype, jnp.complexfloating)
+                or jnp.issubdtype(b.dtype, jnp.complexfloating))
+        if cfg.scheme == "ozaki1":
+            if cplx:
+                # out_dtype arrives real (dispatch converts a complex
+                # request to its real interior before routing).
+                return scheme1.matmul_complex_4m(a, b, cfg,
+                                                 out_dtype=out_dtype)
+            return scheme1.matmul(a, b, cfg, out_dtype=out_dtype)
+        if cfg.scheme == "ozaki2":
+            if cplx:
+                return complex3m.matmul(a, b, cfg, out_dtype=out_dtype)
+            return scheme2.matmul(a, b, cfg, out_dtype=out_dtype)
+        raise ValueError(f"xla backend: unknown scheme {cfg.scheme!r}")

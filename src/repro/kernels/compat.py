@@ -70,6 +70,63 @@ def tpu_compiler_params(*, dimension_semantics=None, **kwargs) -> Any | None:
     return cls(**kw)
 
 
+# ---------------------------------------------------------------------------
+# GPU (Mosaic-GPU / Triton) compiler params — same feature-probe treatment.
+# ---------------------------------------------------------------------------
+
+@functools.cache
+def gpu_pallas_module():
+    """The installed jax's GPU Pallas extension module, or None.
+
+    The module has moved (``pallas.gpu`` -> ``pallas.triton``) and a
+    Mosaic-GPU variant exists on newer jax; probe newest-first.  Interpret
+    mode never needs it — only a real GPU lowering does.
+    """
+    for mod_name in ("jax.experimental.pallas.mosaic_gpu",
+                     "jax.experimental.pallas.triton",
+                     "jax.experimental.pallas.gpu"):
+        try:
+            import importlib
+            return importlib.import_module(mod_name)
+        except Exception:  # noqa: BLE001 — absent/broken extras both mean "no"
+            continue
+    return None
+
+
+_GPU_PARAMS_NAMES = ("CompilerParams", "TritonCompilerParams",
+                     "GPUCompilerParams")
+
+
+@functools.cache
+def gpu_compiler_params_cls() -> type | None:
+    mod = gpu_pallas_module()
+    if mod is None:
+        return None
+    for name in _GPU_PARAMS_NAMES:
+        cls = getattr(mod, name, None)
+        if cls is not None:
+            return cls
+    return None
+
+
+def gpu_compiler_params(*, dimension_semantics=None, **kwargs) -> Any | None:
+    """Build GPU (Triton/Mosaic-GPU) compiler params, dropping unknown
+    fields, or None when the installed jax has no GPU Pallas extension
+    (interpret-mode runs never reach a real GPU lowering anyway).
+    ``dimension_semantics`` is a TPU Mosaic concept and is discarded."""
+    del dimension_semantics
+    cls = gpu_compiler_params_cls()
+    if cls is None:
+        return None
+    if dataclasses.is_dataclass(cls):
+        accepted = frozenset(f.name for f in dataclasses.fields(cls))
+    else:
+        accepted = frozenset(p for p in inspect.signature(cls).parameters
+                             if p != "self")
+    kw = {k: v for k, v in kwargs.items() if k in accepted and v is not None}
+    return cls(**kw)
+
+
 @functools.cache
 def has_scalar_prefetch_grid_spec() -> bool:
     return hasattr(pltpu, "PrefetchScalarGridSpec")

@@ -30,8 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backends.base import build_pallas_call
 from repro.kernels.common import carve_slices
-from repro.kernels.dispatch import build_pallas_call
 
 
 def _kernel(a_ref, mu_ref, out_ref, *, p: int, beta: int, bk: int):

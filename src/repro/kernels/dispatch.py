@@ -1,129 +1,151 @@
-"""Centralized pallas-call construction and emulated-GEMM dispatch.
+"""Emulated-GEMM dispatch: backend routing, block caching, padding, policy.
 
-Every fused kernel in this package (``ozaki1``, ``ozaki2``, ``ozaki3m``,
-``matmul_int8``, ``flash_attn``) builds its ``pl.pallas_call`` through
-:func:`build_pallas_call`, which resolves the JAX-version compiler-params
-drift once via :mod:`repro.kernels.compat` — an API rename upstream is a
-one-file fix here instead of five identical kernel breakages.
+Every fused kernel in this package builds its ``pl.pallas_call`` through
+:func:`repro.kernels.backends.base.build_pallas_call` (re-exported here
+for compatibility), which resolves the JAX-version compiler-params drift
+once via :mod:`repro.kernels.compat`.
 
-On top of the call builder this module owns the *routing* policy:
+On top of the call builder this module owns the *routing* policy, which
+since the backend-registry subsystem landed is expressed per
+:class:`repro.kernels.backends.KernelBackend`:
 
-* :func:`select_blocks` — ``choose_blocks`` memoized per
-  (shape, p, out_bytes, backend) key, so repeated call-sites (training
-  steps re-tracing the same projection shapes) never re-run the VMEM
-  budget search, and a future GPU (Mosaic/Triton) backend can return
-  different tiles for the same problem.
-* :func:`plan_emulated` — one (dtype, blocks, alignment) resolution per
+* :func:`select_blocks` — the selected backend's ``choose_blocks``
+  memoized per (shape, p, out_bytes, prologue, fixed_bk) key in a
+  *per-backend* cache, so repeated call-sites (training steps re-tracing
+  the same projection shapes) never re-run the staging-budget search and
+  the TPU/GPU backends keep distinct tiles for the same problem.
+  ``block_cache_info()`` / ``block_cache_clear()`` report and clear
+  per-backend entries.
+* :func:`plan_emulated` — one (backend, dtype, blocks) resolution per
   call, shared by ``emulated_matmul`` and ``maybe_emulated_matmul`` and
-  threaded down to the fused wrappers, so the VMEM search never runs
-  twice for one GEMM.
+  threaded down to the fused wrappers.  Backend selection precedence:
+  explicit argument > ``REPRO_BACKEND`` env var > ``cfg.backend`` >
+  platform default; a backend with no fused kernel for the requested
+  (scheme, dtype) falls back to the ``xla`` reference backend.
 * :func:`emulated_matmul` — the single entry point for an emulated GEMM.
-  Non-128-aligned operands are zero-padded to the nearest aligned tile,
-  run through the fused kernel, and sliced back — zero rows/columns are
-  exact under both schemes (they decompose to zero slices / zero
-  residues), so padding changes traffic, never values. A
-  :class:`repro.kernels.prepared.PreparedOperand` rhs skips decomposition
-  entirely and streams its finished int8 slices.
+  Operands not aligned to the backend's capability (128 on TPU, 16 on
+  GPU) are zero-padded to the nearest aligned tile, run through the
+  fused kernel, and sliced back — zero rows/columns are exact under both
+  schemes, so padding changes traffic, never values.  A
+  :class:`repro.kernels.prepared.PreparedOperand` rhs skips
+  decomposition entirely and streams its finished int8 slices.
 * :func:`emulated_matmul_batched` — leading batch dims on the activation
-  flatten into M (the usual ``activations @ weights`` pattern); a shared
-  leading axis on both operands maps the fused kernel with ``jax.vmap``.
+  flatten into M; a shared leading axis maps the fused kernel with vmap.
 * :func:`resolve_policy` — clamps a model ``GemmPolicy`` to what the
-  launch target supports: the interpret-mode Pallas lowering is a
-  sequential grid loop GSPMD cannot partition, so multi-device meshes and
-  non-TPU backends pin ``impl='xla'`` (previously a comment in
-  ``parse_gemm_spec`` that every caller had to remember).
+  launch target supports: (scheme, backend) pairs the selected backend
+  cannot lower pin ``impl='xla'``, and fused impls survive only on a
+  single-device mesh whose jax platform natively compiles the selected
+  backend (the interpret-mode lowering is a sequential grid loop GSPMD
+  cannot partition).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.core.precision import EmulationConfig
-from repro.kernels import compat
-from repro.kernels.common import Blocks, choose_blocks, interpret
+from repro.kernels import backends
+from repro.kernels.backends.base import build_pallas_call  # noqa: F401
+from repro.kernels.common import Blocks
 
-# MXU lane/tile alignment the fused kernels require on every dimension.
+# Historical MXU alignment; kept as the default for the padding helpers
+# (the TPU backend's capability). Backend-aware callers pass
+# ``backends.get_backend(name).capabilities.align`` instead.
 ALIGN = 128
 
 
 # ---------------------------------------------------------------------------
-# The one place a pl.pallas_call is constructed.
+# Block selection: the backend's choose_blocks, cached per backend.
 # ---------------------------------------------------------------------------
 
-def build_pallas_call(kernel, *, out_shape, grid=None, in_specs=None,
-                      out_specs=None, grid_spec=None, scratch_shapes=None,
-                      dimension_semantics=None, name=None,
-                      interpret_mode: bool | None = None,
-                      **compiler_kwargs):
-    """Construct a ``pl.pallas_call`` with version-portable compiler params.
+BLOCK_CACHE_MAXSIZE = 4096
 
-    Exactly one of ``grid`` (+ ``in_specs``/``out_specs``) or ``grid_spec``
-    must be given. ``compiler_kwargs`` (e.g. ``vmem_limit_bytes``) are
-    forwarded to the compiler-params object when the installed jax accepts
-    them and silently dropped otherwise.
+
+class _BlockCache:
+    """One backend's memoized block selections, with lru_cache-style stats.
+
+    Bounded at BLOCK_CACHE_MAXSIZE entries (FIFO eviction — dict preserves
+    insertion order) so shape-ragged serving loops cannot grow it forever.
     """
-    kw: dict = {}
-    if grid_spec is not None:
-        if grid is not None or in_specs is not None or out_specs is not None:
-            raise ValueError("pass either grid_spec or grid/in_specs/out_specs")
-        kw["grid_spec"] = grid_spec
-    else:
-        kw["grid"] = grid
-        kw["in_specs"] = in_specs
-        kw["out_specs"] = out_specs
-    if scratch_shapes is not None:
-        kw["scratch_shapes"] = scratch_shapes
-    params = compat.tpu_compiler_params(
-        dimension_semantics=dimension_semantics, **compiler_kwargs)
-    if params is not None:
-        kw["compiler_params"] = params
-    return pl.pallas_call(
-        kernel,
-        out_shape=out_shape,
-        interpret=interpret() if interpret_mode is None else interpret_mode,
-        name=name,
-        **kw)
+
+    __slots__ = ("data", "hits", "misses")
+
+    def __init__(self) -> None:
+        self.data: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def put(self, key, blocks) -> None:
+        if len(self.data) >= BLOCK_CACHE_MAXSIZE:
+            self.data.pop(next(iter(self.data)))
+        self.data[key] = blocks
 
 
-# ---------------------------------------------------------------------------
-# Block selection, cached per (shape, p, dtype-bytes, backend).
-# ---------------------------------------------------------------------------
+_BLOCK_CACHES: dict[str, _BlockCache] = {}
 
-@functools.lru_cache(maxsize=4096)
-def _select_blocks_cached(m: int, n: int, k: int, p: int, out_bytes: int,
-                          backend: str, prologue_a: bool, prologue_b: bool,
-                          fixed_bk: int | None) -> Blocks | None:
-    # `backend` keys the cache only: tile search is TPU-modelled today, but
-    # a Mosaic-GPU/Triton backend will pick different tiles for the same
-    # problem without invalidating TPU entries.
-    del backend
-    return choose_blocks(m, n, k, p, out_bytes=out_bytes,
-                         prologue_a=prologue_a, prologue_b=prologue_b,
-                         fixed_bk=fixed_bk)
+BlockCacheInfo = collections.namedtuple(
+    "BlockCacheInfo", ["hits", "misses", "maxsize", "currsize",
+                       "per_backend"])
 
 
 def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
                   backend: str | None = None, prologue_a: bool = False,
                   prologue_b: bool = False,
                   fixed_bk: int | None = None) -> Blocks | None:
-    return _select_blocks_cached(m, n, k, p, out_bytes,
-                                 backend or jax.default_backend(),
-                                 prologue_a, prologue_b, fixed_bk)
+    """Cached block selection through the backend registry.
+
+    ``backend`` may be any string — platform-qualified names bucket their
+    own cache entries ('tpu-v5e' and 'tpu' stay distinct) while resolving
+    to the nearest registered backend for the actual tile search.
+    """
+    bucket = backend or backends.resolve_backend_name()
+    cache = _BLOCK_CACHES.setdefault(bucket, _BlockCache())
+    key = (m, n, k, p, out_bytes, prologue_a, prologue_b, fixed_bk)
+    try:
+        blocks = cache.data[key]
+        cache.hits += 1
+        return blocks
+    except KeyError:
+        cache.misses += 1
+    blocks = backends.resolve_backend(bucket).choose_blocks(
+        m, n, k, p, out_bytes=out_bytes, prologue_a=prologue_a,
+        prologue_b=prologue_b, fixed_bk=fixed_bk)
+    cache.put(key, blocks)
+    return blocks
 
 
-def block_cache_info():
-    """Cache statistics, exposed for tests and perf probes."""
-    return _select_blocks_cached.cache_info()
+def block_cache_info(backend: str | None = None) -> BlockCacheInfo:
+    """Cache statistics, exposed for tests and perf probes.
+
+    Without ``backend``: aggregate hits/misses/size across every backend
+    bucket, with the per-backend breakdown under ``.per_backend``.
+    """
+    if backend is not None:
+        c = _BLOCK_CACHES.get(backend, _BlockCache())
+        return BlockCacheInfo(c.hits, c.misses, BLOCK_CACHE_MAXSIZE,
+                              len(c.data),
+                              {backend: (c.hits, c.misses, len(c.data))})
+    per = {name: (c.hits, c.misses, len(c.data))
+           for name, c in sorted(_BLOCK_CACHES.items())}
+    return BlockCacheInfo(sum(c.hits for c in _BLOCK_CACHES.values()),
+                          sum(c.misses for c in _BLOCK_CACHES.values()),
+                          BLOCK_CACHE_MAXSIZE,
+                          sum(len(c.data) for c in _BLOCK_CACHES.values()),
+                          per)
 
 
-def block_cache_clear() -> None:
-    _select_blocks_cached.cache_clear()
+def block_cache_clear(backend: str | None = None) -> None:
+    """Clear one backend's cached selections, or every backend's."""
+    if backend is not None:
+        _BLOCK_CACHES.pop(backend, None)
+    else:
+        _BLOCK_CACHES.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -178,12 +200,14 @@ def _prologue(cfg: EmulationConfig) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class GemmPlan:
-    """One block-selection + dtype resolution, shared by every entry point.
+    """One backend + block-selection + dtype resolution per GEMM.
 
     Built by :func:`plan_emulated`; both ``emulated_matmul`` and
     ``maybe_emulated_matmul`` consume the same plan, and the fused
-    wrappers in :mod:`repro.kernels.ops` receive ``blocks`` instead of
-    re-running the VMEM search on the padded problem.
+    wrappers receive ``blocks`` instead of re-running the staging-budget
+    search on the padded problem.  ``backend`` is the *resolved* name —
+    after the env override and the unsupported-(scheme, dtype) fallback
+    to 'xla'.
     """
     cfg: EmulationConfig
     m: int
@@ -192,16 +216,33 @@ class GemmPlan:
     p_eff: int
     out_dtype: object
     blocks: Blocks | None
+    backend: str = "tpu"
 
     @property
     def aligned(self) -> bool:
         return (self.blocks is not None
                 and self.blocks.aligned(self.m, self.n, self.k))
 
+    @property
+    def align(self) -> int:
+        return backends.get_backend(self.backend).capabilities.align
+
+
+def _plan_backend(cfg: EmulationConfig, a, b,
+                  backend: str | None = None) -> str:
+    """Resolve the backend for one GEMM, falling back to the 'xla'
+    reference when the selected backend cannot lower (scheme, dtype)."""
+    name = backends.resolve_backend_name(backend, cfg)
+    bk = backends.get_backend(name)
+    if not bk.supports(cfg, getattr(a, "dtype", None),
+                       getattr(b, "dtype", None)):
+        return "xla"
+    return name
+
 
 def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
-                  out_dtype=None) -> GemmPlan:
-    """Resolve output dtype and cached blocks for one 2-D emulated GEMM."""
+                  out_dtype=None, backend: str | None = None) -> GemmPlan:
+    """Resolve backend, output dtype and cached blocks for one 2-D GEMM."""
     m, k = a.shape
     _, n = b.shape
     if out_dtype is None:
@@ -209,51 +250,48 @@ def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     if out_dtype is None:
         out_dtype = jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype)
     p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
+    name = _plan_backend(cfg, a, b, backend)
     pro = _prologue(cfg)
     blocks = select_blocks(m, n, k, p_eff,
                            out_bytes=jnp.dtype(out_dtype).itemsize,
-                           prologue_a=pro, prologue_b=pro)
-    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks)
+                           backend=name, prologue_a=pro, prologue_b=pro)
+    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks, name)
 
 
 def _replan_padded(plan: GemmPlan) -> GemmPlan:
-    mp, kp, np_ = padded_mkn(plan.m, plan.k, plan.n)
+    mp, kp, np_ = padded_mkn(plan.m, plan.k, plan.n, plan.align)
     pro = _prologue(plan.cfg)
     blocks = select_blocks(mp, np_, kp, plan.p_eff,
                            out_bytes=jnp.dtype(plan.out_dtype).itemsize,
-                           prologue_a=pro, prologue_b=pro)
+                           backend=plan.backend, prologue_a=pro,
+                           prologue_b=pro)
     return dataclasses.replace(plan, m=mp, n=np_, k=kp, blocks=blocks)
 
 
 def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype,
-              blocks: Blocks | None = None):
-    """Aligned 2-D problem -> the fused kernel for cfg.scheme."""
-    from repro.kernels import ops  # lazy: ops imports the kernel modules
+              blocks: Blocks | None = None, backend: str | None = None):
+    """Aligned 2-D problem -> the selected backend's fused lowering."""
+    bk = backends.get_backend(backend) if backend \
+        else backends.resolve_backend(cfg=cfg)
     cplx = _is_complex(a) or _is_complex(b)
     if cplx and jnp.issubdtype(jnp.dtype(out_dtype), jnp.complexfloating):
         # Real-valued interior: the complex result is assembled at the end.
         out_dtype = jnp.real(jnp.zeros((), out_dtype)).dtype
     if cfg.scheme == "ozaki1":
         if cplx:
-            # Scheme-I complex (4M) has no fused kernel: four fused real
-            # GEMMs (paper Sec. V-D runs EmuGEMM-I complex exactly so).
+            # Scheme-I complex (4M) has no fused kernel on any backend:
+            # four fused real GEMMs (paper Sec. V-D runs EmuGEMM-I complex
+            # exactly so).
             ar, ai = jnp.real(a), jnp.imag(a)
             br, bi = jnp.real(b), jnp.imag(b)
-            rr = ops.fused_scheme1_matmul(ar, br, cfg, out_dtype=out_dtype,
-                                          blocks=blocks)
-            ii = ops.fused_scheme1_matmul(ai, bi, cfg, out_dtype=out_dtype,
-                                          blocks=blocks)
-            ri = ops.fused_scheme1_matmul(ar, bi, cfg, out_dtype=out_dtype,
-                                          blocks=blocks)
-            ir = ops.fused_scheme1_matmul(ai, br, cfg, out_dtype=out_dtype,
-                                          blocks=blocks)
+            rr = bk.matmul(ar, br, cfg, out_dtype, blocks)
+            ii = bk.matmul(ai, bi, cfg, out_dtype, blocks)
+            ri = bk.matmul(ar, bi, cfg, out_dtype, blocks)
+            ir = bk.matmul(ai, br, cfg, out_dtype, blocks)
             return jax.lax.complex(rr - ii, ri + ir)
-        return ops.fused_scheme1_matmul(a, b, cfg, out_dtype=out_dtype,
-                                        blocks=blocks)
+        return bk.matmul(a, b, cfg, out_dtype, blocks)
     if cfg.scheme == "ozaki2":
-        if cplx:
-            return ops.fused_3m_matmul(a, b, cfg, out_dtype=out_dtype)
-        return ops.fused_scheme2_matmul(a, b, cfg, out_dtype=out_dtype)
+        return bk.matmul(a, b, cfg, out_dtype, blocks)
     raise ValueError(f"no fused kernel for scheme {cfg.scheme!r}")
 
 
@@ -265,13 +303,15 @@ def _is_prepared(b) -> bool:
 def emulated_matmul(a: jax.Array, b, *,
                     scheme: str = "ozaki1", precision: int | None = None,
                     cfg: EmulationConfig | None = None,
-                    out_dtype=None) -> jax.Array:
-    """Emulated (M, K) @ (K, N) through the fused Pallas kernels.
+                    out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Emulated (M, K) @ (K, N) through the fused kernels of the selected
+    backend (``backend`` arg > ``REPRO_BACKEND`` > ``cfg.backend`` >
+    platform default; unsupported (scheme, dtype) pairs fall back to the
+    'xla' reference backend).
 
     Blocks come from the per-(shape, p, dtype, backend) cache; operands
-    that are not 128-aligned are zero-padded to the nearest aligned tile,
-    run fused, and the (M, N) result sliced back out — this path replaces
-    the historical ``ValueError("no aligned blocks")``.
+    not aligned to the backend's capability are zero-padded to the
+    nearest aligned tile, run fused, and the (M, N) result sliced back.
 
     ``b`` may be a :class:`repro.kernels.prepared.PreparedOperand`: its
     finished int8 slices are streamed as-is and only the lhs decomposes
@@ -296,13 +336,14 @@ def emulated_matmul(a: jax.Array, b, *,
                      or jnp.promote_types(a.dtype, b.dtype))
         return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                                    preferred_element_type=out_dtype)
-    plan = plan_emulated(a, b, cfg, out_dtype)
+    plan = plan_emulated(a, b, cfg, out_dtype, backend)
     if plan.aligned:
-        return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks)
-    a_p, b_p = pad_operands(a, b)
+        return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks,
+                         plan.backend)
+    a_p, b_p = pad_operands(a, b, plan.align)
     plan_p = _replan_padded(plan)
-    return _fused_2d(a_p, b_p, cfg, plan.out_dtype,
-                     plan_p.blocks)[:plan.m, :plan.n]
+    return _fused_2d(a_p, b_p, cfg, plan.out_dtype, plan_p.blocks,
+                     plan.backend)[:plan.m, :plan.n]
 
 
 def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
@@ -332,11 +373,12 @@ def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
 
 def maybe_emulated_matmul(a: jax.Array, b, cfg: EmulationConfig):
     """'auto'-impl hook: the fused kernel when the 2-D problem is naturally
-    tile-aligned, else None (caller falls back to the XLA expansion —
-    padding is reserved for explicit ``impl='pallas'`` requests, where the
-    copy+slice overhead was asked for). A PreparedOperand rhs is the other
-    exception: preparing *was* the commitment to the kernel path, so a
-    non-aligned lhs is padded rather than refused."""
+    tile-aligned for the selected backend, else None (caller falls back to
+    the XLA expansion — padding is reserved for explicit ``impl='pallas'``
+    requests, where the copy+slice overhead was asked for). A
+    PreparedOperand rhs is the other exception: preparing *was* the
+    commitment to the kernel path, so a non-aligned lhs is padded rather
+    than refused."""
     if _is_prepared(b):
         if a.ndim != 2 or cfg.scheme == "native" or _is_complex(a):
             return None
@@ -346,9 +388,12 @@ def maybe_emulated_matmul(a: jax.Array, b, cfg: EmulationConfig):
     if cfg.scheme == "ozaki1" and (_is_complex(a) or _is_complex(b)):
         return None  # 4x fused launches is not an 'auto' win; XLA path
     plan = plan_emulated(a, b, cfg)
+    if plan.backend == "xla" and backends.resolve_backend_name(
+            None, cfg) != "xla":
+        return None  # fell back — nothing fused to offer the 'auto' site
     if not plan.aligned:
         return None
-    return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks)
+    return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks, plan.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -370,20 +415,34 @@ def _mesh_devices(mesh) -> int:
 def resolve_policy(policy, mesh=None):
     """Pin emulated call-sites to impls the launch target can execute.
 
-    The fused kernels' interpret-mode lowering is a sequential grid loop
-    that GSPMD cannot partition: on a multi-device mesh or a non-TPU
-    backend, 'auto'/'pallas' impls are rewritten to 'xla' so the emulation
-    partitions like any other dot. Single-device TPU keeps the request.
+    Two clamps, in order:
+
+    1. (scheme, backend) pairs the selected kernel backend cannot lower
+       (e.g. Scheme II on the 'gpu' backend) rewrite to ``impl='xla'`` —
+       the reference expansion rather than a run-time registry fallback
+       buried inside a jitted step.
+    2. The fused kernels' interpret-mode lowering is a sequential grid
+       loop that GSPMD cannot partition: 'auto'/'pallas' impls survive
+       only on a single-device mesh whose jax platform natively compiles
+       the selected kernel backend (TPU host + 'tpu' backend, GPU host +
+       'gpu' backend); every other combination — multi-device meshes,
+       CPU hosts, cross-platform backend requests — rewrites to 'xla' so
+       the emulation partitions like any other dot.
     """
     sites = [policy.default] + [cfg for _, cfg in policy.overrides]
     if all(c.scheme == "native" or c.impl == "xla" for c in sites):
         return policy
-    if _mesh_devices(mesh) <= 1 and jax.default_backend() == "tpu":
-        return policy
+
+    single = _mesh_devices(mesh) <= 1
 
     def fix(cfg: EmulationConfig) -> EmulationConfig:
         if cfg.scheme == "native" or cfg.impl == "xla":
             return cfg
+        bk = backends.resolve_backend(cfg=cfg)
+        if cfg.scheme not in bk.capabilities.schemes:
+            return dataclasses.replace(cfg, impl="xla")
+        if single and bk.name == jax.default_backend():
+            return cfg  # this host compiles the selected backend natively
         return dataclasses.replace(cfg, impl="xla")
 
     return dataclasses.replace(

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.dispatch import build_pallas_call
+from repro.kernels.backends.base import build_pallas_call
 
 NEG_INF = -1e30
 

@@ -14,8 +14,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backends.base import build_pallas_call
 from repro.kernels.common import Blocks
-from repro.kernels.dispatch import build_pallas_call, select_blocks
+from repro.kernels.dispatch import select_blocks
 
 
 def _kernel(a_ref, b_ref, out_ref, acc_ref):
@@ -40,7 +41,7 @@ def int8_matmul(a8: jax.Array, b8: jax.Array,
     m, k = a8.shape
     _, n = b8.shape
     if blocks is None:
-        blocks = select_blocks(m, n, k, p=1)
+        blocks = select_blocks(m, n, k, p=1, backend="tpu")
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)}")
     bm, bn, bk = blocks.bm, blocks.bn, blocks.bk

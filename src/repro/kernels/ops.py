@@ -49,7 +49,7 @@ def fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     if blocks is None:
         blocks = dispatch.select_blocks(
             m, n, k, p, out_bytes=jnp.dtype(out_dtype).itemsize,
-            prologue_a=prologue, prologue_b=prologue)
+            backend="tpu", prologue_a=prologue, prologue_b=prologue)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"shapes {(m, n, k)} not tile-aligned")
     if prologue:

@@ -38,8 +38,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backends.base import build_pallas_call
 from repro.kernels.common import Blocks, carve_slices
-from repro.kernels.dispatch import build_pallas_call, select_blocks
+from repro.kernels.dispatch import select_blocks
 
 
 def _kernel(a_ref, b_ref, mu_ref, nu_ref, out_ref, acc_ref, *,
@@ -79,7 +80,8 @@ def _kernel(a_ref, b_ref, mu_ref, nu_ref, out_ref, acc_ref, *,
         # Shift-reduce: C = diag(mu) (sum_s 2^{-beta(s+2)} C_s) diag(nu).
         c = jnp.zeros(out_ref.shape, dtype=out_dtype)
         for s in range(p):
-            w = jnp.exp2(jnp.asarray(-beta * (s + 2), dtype=out_dtype))
+            # Exact Python power of two (see scheme1.shift_reduce).
+            w = jnp.asarray(2.0 ** (-beta * (s + 2)), dtype=out_dtype)
             c = c + w * acc_ref[s].astype(out_dtype)
         out_ref[...] = c * mu_ref[...].astype(out_dtype) \
                          * nu_ref[...].astype(out_dtype)
@@ -129,7 +131,8 @@ def fused_matmul_interleaved(a_hat: jax.Array, b_hat: jax.Array,
     k = pk // p
     if blocks is None:
         blocks = select_blocks(m, n, k, p,
-                               out_bytes=jnp.dtype(out_dtype).itemsize)
+                               out_bytes=jnp.dtype(out_dtype).itemsize,
+                               backend="tpu")
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)} p={p}")
     return _fused_call(a_hat, b_hat, mu, nu, m=m, n=n, k=k, p=p, beta=beta,
@@ -155,6 +158,7 @@ def fused_matmul_prologue(a: jax.Array, b: jax.Array,
     if blocks is None:
         blocks = select_blocks(m, n, k, p,
                                out_bytes=jnp.dtype(out_dtype).itemsize,
+                               backend="tpu",
                                prologue_a=True, prologue_b=True)
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)} p={p}")

@@ -24,8 +24,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels.backends.base import build_pallas_call
 from repro.kernels.common import Blocks
-from repro.kernels.dispatch import build_pallas_call, select_blocks
+from repro.kernels.dispatch import select_blocks
 
 
 def _kernel(mods_ref, a_ref, b_ref, out_ref, acc_ref):
@@ -58,7 +59,8 @@ def fused_residue_matmul(a_res: jax.Array, b_res: jax.Array,
     p, m, k = a_res.shape
     _, _, n = b_res.shape
     if blocks is None:
-        blocks = select_blocks(m, n, k, p=1)  # single accumulator (Sec. IV-C)
+        # Single accumulator (Sec. IV-C); this is a Mosaic kernel — TPU tiles.
+        blocks = select_blocks(m, n, k, p=1, backend="tpu")
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)}")
     bm, bn, bk = blocks.bm, blocks.bn, blocks.bk

@@ -26,8 +26,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels.backends.base import build_pallas_call
 from repro.kernels.common import Blocks
-from repro.kernels.dispatch import build_pallas_call, select_blocks
+from repro.kernels.dispatch import select_blocks
 
 
 def _kernel(mods_ref, a_ref, b_ref, out_re_ref, out_im_ref,
@@ -79,7 +80,7 @@ def fused_3m_residue_matmul(a3: jax.Array, b3: jax.Array, moduli,
     assert three == 3
     _, _, _, n = b3.shape
     if blocks is None:
-        blocks = select_blocks(m, n, k, p=1)
+        blocks = select_blocks(m, n, k, p=1, backend="tpu")
     if blocks is None or not blocks.aligned(m, n, k):
         raise ValueError(f"no aligned blocks for {(m, n, k)}")
     bm, bn, bk = blocks.bm, blocks.bn, blocks.bk

@@ -144,12 +144,13 @@ def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
         return PreparedOperand(slices, nu, p, beta, None, "stacked",
                                k, n, twin)
 
-    blocks = dispatch.select_blocks(m_hint, np_, kp, p, prologue_a=True)
+    blocks = dispatch.select_blocks(m_hint, np_, kp, p, backend="tpu",
+                                    prologue_a=True)
     if blocks is None:
         blocks = Blocks(128, 128, 128)
     if with_twin:
         t_blocks = dispatch.select_blocks(m_hint, kp, np_, p_bwd,
-                                          prologue_a=True)
+                                          backend="tpu", prologue_a=True)
         if t_blocks is None:
             t_blocks = Blocks(128, 128, 128)
         tau = scheme1._pow2_row_scale(b_pad.T, axis=0)   # (1, Kp)
@@ -200,7 +201,7 @@ def matmul_prepared(a: jax.Array, prep: PreparedOperand,
     if prep.layout == "interleaved":
         blocks = dispatch.select_blocks(
             mp, np_, kp, prep.p, out_bytes=jnp.dtype(out_dtype).itemsize,
-            prologue_a=True, fixed_bk=prep.blocks.bk)
+            backend="tpu", prologue_a=True, fixed_bk=prep.blocks.bk)
         if blocks is not None:
             mu = scheme1._pow2_row_scale(a, axis=1)      # (Mp, 1)
             out = ozaki1.fused_matmul_mixed(
@@ -215,6 +216,119 @@ def matmul_prepared(a: jax.Array, prep: PreparedOperand,
     accs = scheme1.triangular_accumulators(a_sl, prep.stacked(), prep.p)
     out = scheme1.shift_reduce(accs, prep.beta, mu, prep.scale, out_dtype)
     return out[:m, :prep.n]
+
+
+# ---------------------------------------------------------------------------
+# Once-per-step preparation under gradient accumulation.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StepPrepared:
+    """A float weight paired with its once-per-step PreparedOperand.
+
+    Built *outside* the microbatch scan by ``build_step_preps`` and
+    attached to the params tree by ``attach_step_preps``: the scan body
+    then closes over the finished slices (a loop-invariant constant of
+    the compiled while loop), so every microbatch streams them instead
+    of re-running the prep — the decomposition executes once per
+    optimizer step, not once per microbatch.  ``w`` stays the
+    differentiable leaf: ``emulated_dot_prepared`` (repro.core.emulated)
+    computes the forward from ``prep`` and routes dB to ``w``.
+    """
+    w: jax.Array
+    prep: PreparedOperand
+
+    def tree_flatten(self):
+        return ((self.w, self.prep), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _site_of(path, site_default: str = "ffn") -> str:
+    keys = [getattr(kp, "key", None) for kp in path]
+    if "mixer" in keys:
+        return "attn"
+    if "head" in keys or "emb" in keys:
+        return "logits"
+    return site_default
+
+
+def _step_cacheable(cfg) -> bool:
+    return cfg.scheme == "ozaki1" and cfg.cache_weights
+
+
+def policy_caches_weights(policy) -> bool:
+    """Does any call-site family of this GemmPolicy cache weights?"""
+    sites = [policy.default] + [cfg for _, cfg in policy.overrides]
+    return any(_step_cacheable(cfg) for cfg in sites)
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(kp, "key", kp)) for kp in path)
+
+
+def _stack_preps(preps: list) -> PreparedOperand:
+    """Stack per-layer PreparedOperands along a new leading axis.
+
+    The static aux (p, beta, blocks, layout) is shape-derived and thus
+    identical across layers; stacking only the array leaves yields a
+    pytree ``jax.lax.scan`` slices back into per-layer operands."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *preps)
+
+
+def build_step_preps(params, policy, *, site_default: str = "ffn",
+                     names=None) -> dict:
+    """Prepare every cacheable dense weight once, keyed by tree path.
+
+    Returns {path: PreparedOperand (with twin)} for the float leaves in
+    ``names`` whose site config caches weights.  Scan-stacked layer
+    groups (3-D leaves under 'layers') are prepared per layer and
+    re-stacked, so the model's layer scan slices finished slices instead
+    of re-splitting each layer's weight inside the microbatch scan.
+    """
+    if names is None:
+        names = DENSE_WEIGHT_NAMES
+    preps: dict = {}
+
+    def visit(path, leaf):
+        name = getattr(path[-1], "key", None) if path else None
+        keys = {getattr(kp, "key", None) for kp in path}
+        ndim = getattr(leaf, "ndim", 0)
+        stacked = ndim == 3 and "layers" in keys
+        # MoE expert tensors reuse dense names but are consumed through
+        # raw einsums (and carry an expert axis) — never prepped.
+        if (name not in names or "moe" in keys or not (ndim == 2 or stacked)
+                or not jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return leaf
+        cfg = policy.for_site(_site_of(path, site_default))
+        if not _step_cacheable(cfg):
+            return leaf
+        if stacked:
+            preps[_path_key(path)] = _stack_preps(
+                [prepare_rhs(leaf[g], cfg, with_twin=True)
+                 for g in range(leaf.shape[0])])
+        else:
+            preps[_path_key(path)] = prepare_rhs(leaf, cfg, with_twin=True)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return preps
+
+
+def attach_step_preps(params, preps: dict):
+    """Swap each prepared weight leaf for a StepPrepared(w, prep) pair."""
+    if not preps:
+        return params
+
+    def wrap(path, leaf):
+        prep = preps.get(_path_key(path))
+        return StepPrepared(leaf, prep) if prep is not None else leaf
+
+    return jax.tree_util.tree_map_with_path(wrap, params)
 
 
 # ---------------------------------------------------------------------------
@@ -242,20 +356,12 @@ def prepare_params(params, policy, *, site_default: str = "ffn",
     pass through untouched (their per-layer slices are decomposed by the
     per-step cache instead).
     """
-    def site_of(path) -> str:
-        keys = [getattr(kp, "key", None) for kp in path]
-        if "mixer" in keys:
-            return "attn"
-        if "head" in keys or "emb" in keys:
-            return "logits"
-        return site_default
-
     def wrap(path, leaf):
         name = getattr(path[-1], "key", None) if path else None
         if (name not in names or getattr(leaf, "ndim", 0) != 2
                 or not jnp.issubdtype(leaf.dtype, jnp.floating)):
             return leaf
-        cfg = policy.for_site(site_of(path))
+        cfg = policy.for_site(_site_of(path, site_default))
         if cfg.scheme != "ozaki1":
             return leaf
         return prepare_rhs(leaf, cfg)

@@ -81,7 +81,13 @@ def make_loss_fn(arch: ArchConfig, policy: GemmPolicy):
     mcfg = arch.model
     vocab = mcfg.vocab
 
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, preps=None):
+        if preps:
+            # Once-per-step prepared weights (built outside the
+            # microbatch scan — see make_train_step) replace their float
+            # leaves with StepPrepared pairs consumed by dense().
+            from repro.kernels import prepared
+            params = prepared.attach_step_preps(params, preps)
         logits, mtp_logits, aux = M.forward_train(
             params, mcfg, batch, policy, remat=arch.train.remat)
         loss = cross_entropy_loss(logits, batch["labels"], vocab)
@@ -133,9 +139,20 @@ def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
                                              *([None] * (x.ndim - 2)))))
             micro = jax.tree.map(reshard, batch)
 
+            # Gradient accumulation: build each cacheable weight's
+            # PreparedOperand HERE, outside the scan body, so the
+            # decomposition runs once per optimizer step. The scan body
+            # closes over the finished slices (loop-invariant constants
+            # of the compiled while loop) — previously cache_weights
+            # still re-prepared once per *microbatch* inside the VJP.
+            preps = None
+            from repro.kernels import prepared
+            if prepared.policy_caches_weights(policy):
+                preps = prepared.build_step_preps(params, policy)
+
             def acc_fn(carry, mb):
                 g_acc, l_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                l, g = jax.value_and_grad(loss_fn)(params, mb, preps)
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g)
                 return (g_acc, l_acc + l), None

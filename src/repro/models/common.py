@@ -14,7 +14,8 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core.emulated import emulated_dot, prepared_dot
+from repro.core.emulated import (emulated_dot, emulated_dot_prepared,
+                                 prepared_dot)
 from repro.core.precision import EmulationConfig, NATIVE
 
 
@@ -79,8 +80,16 @@ def dense(x: jax.Array, w, policy: GemmPolicy, site: str,
     ``w`` may be a :class:`repro.kernels.prepared.PreparedOperand`
     (see ``prepared.prepare_params`` — once-per-session serving reuse):
     its finished int8 slices are consumed directly, whatever the policy
-    says, since the decomposition choice was made at prepare time.
+    says, since the decomposition choice was made at prepare time.  A
+    :class:`repro.kernels.prepared.StepPrepared` pair (float weight +
+    once-per-step prep, attached outside the microbatch scan by
+    ``launch/steps.py``) routes through ``emulated_dot_prepared`` so the
+    forward streams finished slices while dB still reaches the weight.
     """
+    if not isinstance(w, jax.Array) and hasattr(w, "prep"):
+        cfg = policy.for_site(site)
+        out = emulated_dot_prepared(x, w.w, w.prep, cfg).astype(x.dtype)
+        return out if bias is None else out + bias
     if not isinstance(w, jax.Array) and hasattr(w, "slices"):
         out = prepared_dot(x, w).astype(x.dtype)
         return out if bias is None else out + bias

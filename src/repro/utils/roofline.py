@@ -253,6 +253,47 @@ def roofline_terms(per_device_flops: float, per_device_mem_bytes: float,
     return terms
 
 
+def projected_throughput(m: int, k: int, n: int, p: int,
+                         scheme: str = "ozaki1", backend: str = "gpu",
+                         out_bytes: int = 4) -> dict:
+    """Roofline-projected Top/s of one fused emulated GEMM, per hardware
+    peak of the selected kernel backend (paper Fig. 4/5 framing: fraction
+    of INT8 Tensor Core peak).
+
+    Uses the analytical fused-traffic models (Eq. 10 / Eq. 15) and the
+    per-backend peak tables in ``repro.core.traffic.BACKEND_PEAKS`` — for
+    the 'gpu' backend that means both the Hopper (H100) and Blackwell
+    (B200) entries, so reports show projections for both generations
+    alongside the TPU accounting.
+    """
+    from repro.core import traffic as T
+    s = T.GemmShape(m, n, k)
+    if scheme == "ozaki1":
+        flops = T.scheme1_flops(s, p)
+        bytes_ = T.scheme1_fused_bytes(s, p, out_bytes)
+    elif scheme == "ozaki2":
+        flops = T.scheme2_flops(s, p)
+        bytes_ = p * T.scheme2_fused_bytes_per_modulus(s) \
+            + out_bytes * s.m * s.n
+    else:
+        raise ValueError(f"no projection for scheme {scheme!r}")
+    out = {"backend": backend, "scheme": scheme,
+           "int8_flops": float(flops), "traffic_bytes": float(bytes_),
+           "hardware": {}}
+    for key, peak in T.backend_peaks(backend).items():
+        t_c = flops / peak.int8_ops
+        t_m = bytes_ / peak.hbm_bw
+        t = max(t_c, t_m)
+        out["hardware"][key] = {
+            "name": peak.name,
+            "peak_int8_tops": peak.int8_ops / 1e12,
+            "projected_tops": flops / t / 1e12 if t else 0.0,
+            "fraction_of_peak": (flops / t) / peak.int8_ops if t else 0.0,
+            "bound": "compute" if t_c >= t_m else "memory",
+        }
+    return out
+
+
 def scheme1_decomposition_terms(m: int, k: int, n: int, p: int,
                                 uses: int = 3) -> dict:
     """Decomposition-side HBM bytes (and seconds at HBM_BW) for one

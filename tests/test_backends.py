@@ -1,0 +1,266 @@
+"""The pluggable kernel-backend subsystem: registry semantics, selection
+precedence, capability-driven fallback, and the Mosaic-GPU/Triton
+Scheme-I lowering's bit-parity (interpret mode) against the
+``scheme1.split`` / ``scheme1.matmul`` oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scheme1, scheme2
+from repro.core.precision import EmulationConfig
+from repro.kernels import backends, dispatch
+from repro.kernels.backends import gpu as gpu_backend
+from repro.kernels.common import Blocks, carve_slices
+
+
+# ---------------------------------------------------------------------------
+# Registry: registration, lookup, selection precedence.
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    assert {"tpu", "gpu", "xla"} <= set(backends.available_backends())
+    assert backends.get_backend("tpu").capabilities.align == 128
+    assert backends.get_backend("gpu").capabilities.align == 16
+    assert backends.get_backend("xla").capabilities.align == 1
+    assert backends.get_backend("gpu").capabilities.schemes == {"ozaki1"}
+    assert "ozaki2" in backends.get_backend("tpu").capabilities.schemes
+
+
+def test_get_backend_unknown_raises():
+    with pytest.raises(KeyError):
+        backends.get_backend("hexagon")
+
+
+def test_register_backend_guards_duplicates():
+    class Fake(backends.KernelBackend):
+        name = "tpu"
+        capabilities = backends.get_backend("tpu").capabilities
+
+        def choose_blocks(self, *a, **k):
+            return None
+
+        def matmul(self, *a, **k):
+            raise NotImplementedError
+
+    with pytest.raises(ValueError):
+        backends.register_backend(Fake())
+
+
+def test_register_and_unregister_custom_backend():
+    tpu = backends.get_backend("tpu")
+
+    class Custom(backends.KernelBackend):
+        name = "my-npu"
+
+        @property
+        def capabilities(self):
+            return tpu.capabilities
+
+        def choose_blocks(self, *a, **k):
+            return tpu.choose_blocks(*a, **k)
+
+        def matmul(self, *a, **k):
+            return tpu.matmul(*a, **k)
+
+    try:
+        backends.register_backend(Custom())
+        assert "my-npu" in backends.available_backends()
+        assert backends.resolve_backend_name("my-npu") == "my-npu"
+    finally:
+        backends.unregister_backend("my-npu")
+    assert "my-npu" not in backends.available_backends()
+
+
+def test_resolution_precedence(monkeypatch):
+    monkeypatch.delenv(backends.ENV_VAR, raising=False)
+    cfg = EmulationConfig(scheme="ozaki1", p=4, backend="gpu")
+    # cfg.backend wins over the platform default...
+    assert backends.resolve_backend_name(None, cfg) == "gpu"
+    # ...the env override wins over cfg...
+    monkeypatch.setenv(backends.ENV_VAR, "xla")
+    assert backends.resolve_backend_name(None, cfg) == "xla"
+    # ...and the explicit argument wins over everything.
+    assert backends.resolve_backend_name("tpu", cfg) == "tpu"
+
+
+def test_resolution_falls_back_for_unknown_names(monkeypatch):
+    monkeypatch.delenv(backends.ENV_VAR, raising=False)
+    assert backends.resolve_backend_name("tpu-v5e") == "tpu"
+    default = backends.default_backend_name()
+    assert backends.resolve_backend_name("never-heard-of-it") == default
+    assert backends.resolve_backend_name(None) == default
+
+
+def test_env_override_routes_plan(monkeypatch):
+    monkeypatch.setenv(backends.ENV_VAR, "gpu")
+    a = jnp.zeros((64, 64), jnp.float32)
+    cfg = EmulationConfig(scheme="ozaki1", p=4)
+    plan = dispatch.plan_emulated(a, a, cfg)
+    assert plan.backend == "gpu"
+    assert plan.align == 16
+
+
+# ---------------------------------------------------------------------------
+# Capability fallback: unsupported (scheme, backend) -> 'xla' reference.
+# ---------------------------------------------------------------------------
+
+def test_unsupported_scheme_falls_back_to_xla_reference(make_matrix):
+    a = jnp.asarray(make_matrix((100, 72)))
+    b = jnp.asarray(make_matrix((72, 56)))
+    cfg = EmulationConfig(scheme="ozaki2", p=8, backend="gpu")
+    plan = dispatch.plan_emulated(a, b, cfg)
+    assert plan.backend == "xla"
+    out = dispatch.emulated_matmul(a, b, cfg=cfg)
+    ref = scheme2.matmul(a, b, cfg, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=0)  # bit-identical reference
+
+
+def test_fallback_is_not_offered_to_auto_sites(make_matrix):
+    """maybe_emulated_matmul must return None (let the caller run its own
+    XLA expansion) when the selected backend fell back, instead of
+    pretending the reference path is a fused win."""
+    a = jnp.asarray(make_matrix((64, 64)))
+    cfg = EmulationConfig(scheme="ozaki2", p=8, backend="gpu")
+    assert dispatch.maybe_emulated_matmul(a, a, cfg) is None
+
+
+# ---------------------------------------------------------------------------
+# GPU backend: block search and the Scheme-I bit-parity suite.
+# ---------------------------------------------------------------------------
+
+def test_gpu_blocks_respect_budgets_and_alignment():
+    for p in (3, 4, 6):
+        blocks = gpu_backend.choose_blocks_gpu(256, 256, 256, p)
+        assert blocks is not None
+        assert blocks.bm % 16 == 0 and blocks.bn % 16 == 0 \
+            and blocks.bk % 16 == 0
+        assert 4 * p * blocks.bm * blocks.bn <= gpu_backend.ACC_BUDGET
+        smem = (2 * 4 + p) * (blocks.bm + blocks.bn) * blocks.bk \
+            + 4 * blocks.bm * blocks.bn
+        assert smem <= gpu_backend.SMEM_BUDGET
+
+
+def test_gpu_higher_p_shrinks_accumulator_tile():
+    b1 = gpu_backend.choose_blocks_gpu(512, 512, 512, p=1)
+    b8 = gpu_backend.choose_blocks_gpu(512, 512, 512, p=8)
+    assert b1.bm * b1.bn >= b8.bm * b8.bn
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 96, 80), (128, 128, 128),
+                                   (48, 112, 16)])
+@pytest.mark.parametrize("p", [3, 4, 6])
+def test_gpu_scheme1_bit_parity_aligned(make_matrix, m, k, n, p):
+    """16-aligned shapes: the GPU lowering must be bit-identical to the
+    scheme1.matmul oracle (same slices, same exact int32 interior, same
+    shift-reduce order)."""
+    a = jnp.asarray(make_matrix((m, k)))
+    b = jnp.asarray(make_matrix((k, n)))
+    cfg = EmulationConfig(scheme="ozaki1", p=p, backend="gpu")
+    out = dispatch.emulated_matmul(a, b, cfg=cfg)
+    oracle = scheme1.matmul(a, b, cfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("m,k,n", [(100, 200, 96), (50, 70, 30)])
+@pytest.mark.parametrize("p", [3, 4, 6])
+def test_gpu_scheme1_bit_parity_unaligned_padded(make_matrix, m, k, n, p):
+    """Non-16-aligned shapes pad to the GPU tile, run fused, slice back —
+    still bit-identical to the unpadded oracle (zero rows/cols carve to
+    zero slices and leave every kept row/col scale untouched)."""
+    a = jnp.asarray(make_matrix((m, k)))
+    b = jnp.asarray(make_matrix((k, n)))
+    cfg = EmulationConfig(scheme="ozaki1", p=p, backend="gpu")
+    out = dispatch.emulated_matmul(a, b, cfg=cfg)
+    assert out.shape == (m, n)
+    oracle = scheme1.matmul(a, b, cfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_gpu_kernel_slices_match_scheme1_split(make_matrix):
+    """The in-kernel carve (shared-memory staging prologue) is the same
+    truncate-and-subtract recurrence as scheme1.split: per-tile carving
+    of a/scale reproduces the full-array slices bit-exactly."""
+    a = jnp.asarray(make_matrix((64, 96)))
+    p, beta = 4, 7
+    a_sl, mu = scheme1.split(a, p, beta, axis=1)
+    carved = list(carve_slices(a / mu, p, beta))
+    for got, want in zip(carved, a_sl):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gpu_fused_matmul_rejects_misaligned_blocks(make_matrix):
+    a = jnp.asarray(make_matrix((64, 64)))
+    with pytest.raises(ValueError):
+        gpu_backend.fused_matmul_scheme1(
+            a, a, jnp.ones((64, 1)), jnp.ones((1, 64)), 3, 7,
+            Blocks(48, 48, 48))
+
+
+def test_gpu_out_dtype_and_batching(make_matrix):
+    a = jnp.asarray(make_matrix((2, 3, 32, 64)))
+    b = jnp.asarray(make_matrix((64, 48)))
+    cfg = EmulationConfig(scheme="ozaki1", p=4, backend="gpu",
+                          out_dtype="bfloat16")
+    out = dispatch.emulated_matmul_batched(a, b, cfg=cfg)
+    assert out.shape == (2, 3, 32, 48)
+    assert out.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# resolve_policy: (scheme, backend) clamping.
+# ---------------------------------------------------------------------------
+
+def test_resolve_policy_clamps_unsupported_scheme_backend(monkeypatch):
+    """On a launch target that would otherwise keep fused impls (a
+    single-device host natively compiling the selected backend), a
+    (scheme, backend) pair without a fused lowering pins impl='xla'
+    while supported pairs keep their request."""
+    from repro.models.common import GemmPolicy
+    monkeypatch.delenv(backends.ENV_VAR, raising=False)
+    monkeypatch.setattr(dispatch.jax, "default_backend", lambda: "gpu")
+    pol = GemmPolicy(
+        default=EmulationConfig(scheme="ozaki2", p=8, impl="pallas",
+                                backend="gpu"),
+        overrides=(("ffn", EmulationConfig(scheme="ozaki1", p=4,
+                                           impl="pallas", backend="gpu")),))
+    resolved = dispatch.resolve_policy(pol, mesh=None)
+    assert resolved.default.impl == "xla"          # ozaki2 x gpu: clamped
+    assert dict(resolved.overrides)["ffn"].impl == "pallas"  # supported
+
+
+def test_resolve_policy_clamps_cross_platform_backend(monkeypatch):
+    """A backend the host cannot natively compile (tpu kernels on a GPU
+    host and vice versa) pins impl='xla' even single-device."""
+    from repro.models.common import GemmPolicy
+    monkeypatch.delenv(backends.ENV_VAR, raising=False)
+    monkeypatch.setattr(dispatch.jax, "default_backend", lambda: "gpu")
+    pol = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=4,
+                                             impl="pallas", backend="tpu"))
+    assert dispatch.resolve_policy(pol, mesh=None).default.impl == "xla"
+
+
+# ---------------------------------------------------------------------------
+# Per-backend roofline projection.
+# ---------------------------------------------------------------------------
+
+def test_projected_throughput_tables():
+    from repro.utils import roofline
+    proj = roofline.projected_throughput(4096, 4096, 4096, p=4,
+                                         backend="gpu")
+    hw = proj["hardware"]
+    assert set(hw) == {"h100", "b200"}
+    for cell in hw.values():
+        assert 0.0 < cell["fraction_of_peak"] <= 1.0
+        assert cell["projected_tops"] <= cell["peak_int8_tops"]
+    # Blackwell peak dominates Hopper's
+    assert hw["b200"]["peak_int8_tops"] > hw["h100"]["peak_int8_tops"]
+    tpu = roofline.projected_throughput(4096, 4096, 4096, p=4,
+                                        backend="tpu")["hardware"]
+    assert set(tpu) == {"v5e"}
+    # family-prefixed and unknown names resolve to a table, not a KeyError
+    from repro.core import traffic
+    assert traffic.backend_peaks("tpu-v5e") is traffic.BACKEND_PEAKS["tpu"]
+    assert traffic.backend_peaks("mystery") is traffic.BACKEND_PEAKS["tpu"]

@@ -74,9 +74,9 @@ def test_scalar_prefetch_grid_spec_constructs():
 
 def test_select_blocks_matches_choose_blocks_and_caches():
     dispatch.block_cache_clear()
-    b1 = dispatch.select_blocks(512, 512, 512, p=4)
+    b1 = dispatch.select_blocks(512, 512, 512, p=4, backend="tpu")
     misses = dispatch.block_cache_info().misses
-    b2 = dispatch.select_blocks(512, 512, 512, p=4)
+    b2 = dispatch.select_blocks(512, 512, 512, p=4, backend="tpu")
     assert b1 == b2 == choose_blocks(512, 512, 512, 4)
     assert dispatch.block_cache_info().misses == misses  # second call: hit
     assert dispatch.block_cache_info().hits >= 1
@@ -88,6 +88,35 @@ def test_select_blocks_key_includes_backend():
     m = dispatch.block_cache_info().misses
     dispatch.select_blocks(256, 256, 256, p=2, backend="tpu-v5e")
     assert dispatch.block_cache_info().misses == m + 1
+
+
+def test_block_cache_reports_and_clears_per_backend():
+    dispatch.block_cache_clear()
+    dispatch.select_blocks(512, 512, 512, p=4, backend="tpu")
+    dispatch.select_blocks(512, 512, 512, p=4, backend="gpu")
+    info = dispatch.block_cache_info()
+    assert set(info.per_backend) >= {"tpu", "gpu"}
+    assert info.currsize == 2
+    # per-backend stats are addressable directly
+    assert dispatch.block_cache_info("gpu").currsize == 1
+    # clearing one backend leaves the other's entries alone
+    dispatch.block_cache_clear("gpu")
+    info = dispatch.block_cache_info()
+    assert "gpu" not in info.per_backend and "tpu" in info.per_backend
+    assert dispatch.block_cache_info("tpu").currsize == 1
+    dispatch.block_cache_clear()
+    assert dispatch.block_cache_info().currsize == 0
+
+
+def test_select_blocks_uses_backend_alignment():
+    """The backend's capability drives alignment: a 16-lane GPU problem
+    that the 128-lane TPU search refuses still gets GPU tiles."""
+    dispatch.block_cache_clear()
+    assert dispatch.select_blocks(48, 80, 64, p=4, backend="tpu") is None
+    gpu_blocks = dispatch.select_blocks(48, 80, 64, p=4, backend="gpu")
+    assert gpu_blocks is not None
+    assert gpu_blocks.bm % 16 == 0 and gpu_blocks.bn % 16 == 0
+    assert gpu_blocks.aligned(48, 80, 64)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,145 @@
+"""Once-per-step weight preparation under gradient accumulation.
+
+The microbatch scan in launch/steps.py must not re-run Scheme-I weight
+decomposition per microbatch: with ``cache_weights`` policies the
+PreparedOperand is built *outside* the scan body (once per optimizer
+step) and the scan closes over the finished slices.  Asserted with a
+runtime prep-call counter (a host callback fires once per executed
+``prepare_rhs``, so scan iterations — which share one trace — are
+counted per execution, not per trace)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig, ModelConfig, ShapeSpec, TrainPolicy
+from repro.kernels import prepared
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.optim import make_optimizer
+
+N_MICRO = 4
+
+
+def _tiny_arch(n_micro: int) -> ArchConfig:
+    mcfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab=128)
+    return ArchConfig(model=mcfg,
+                      train=TrainPolicy(microbatches=n_micro, remat=False))
+
+
+def _run_one_step(arch, policy, counter):
+    shape = ShapeSpec("train_tiny", 16, 8, "train")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    step = S.make_train_step(arch, mesh, shape, policy, donate=False)
+    params = jax.jit(lambda k: M.init_params(k, mcfg=arch.model))(
+        jax.random.PRNGKey(0))
+    opt_init, _ = make_optimizer(arch.train.optimizer)
+    state = {"params": params, "opt": jax.jit(opt_init)(params)}
+    batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+             "labels": jnp.ones((8, 16), jnp.int32)}
+    counter["n"] = 0
+    state, metrics = step(state, batch)
+    jax.block_until_ready(metrics["loss"])
+    first = counter["n"]
+    counter["n"] = 0
+    state, metrics = step(state, batch)  # steady state: no retrace
+    jax.block_until_ready(metrics["loss"])
+    return first, counter["n"], params, float(metrics["loss"])
+
+
+@pytest.fixture
+def prep_counter(monkeypatch):
+    """Count runtime executions of prepare_rhs via a host callback."""
+    counter = {"n": 0}
+    orig = prepared.prepare_rhs
+
+    def counting(b, cfg, **kw):
+        jax.debug.callback(lambda: counter.__setitem__("n", counter["n"] + 1))
+        return orig(b, cfg, **kw)
+
+    monkeypatch.setattr(prepared, "prepare_rhs", counting)
+    return counter
+
+
+def _expected_preps(params, policy) -> int:
+    """One prep per cacheable weight per step: stacked layer groups count
+    once per layer (they were prepared per layer per *microbatch* before
+    the hoist), unstacked weights once."""
+    preps = prepared.build_step_preps(params, policy)
+    total = 0
+    for prep in preps.values():
+        sl = prep.slices
+        # stacked-over-layers preps carry a leading group axis
+        total += sl.shape[0] if sl.ndim == 4 else 1
+    return total
+
+
+def test_prepared_once_per_step_under_grad_accum(prep_counter):
+    arch = _tiny_arch(N_MICRO)
+    policy = GemmPolicy(default=parse_gemm_spec("ozaki1-p3-cached"))
+    first, steady, params, loss = _run_one_step(arch, policy, prep_counter)
+    assert np.isfinite(loss)
+    expected = _expected_preps(params, policy)
+    assert expected > 0
+    # Exactly once per optimizer step — NOT once per microbatch.
+    assert first == expected, (first, expected)
+    assert steady == expected, (steady, expected)
+    assert first < expected * N_MICRO
+
+
+def test_grad_accum_matches_unaccumulated_loss(prep_counter):
+    """The hoisted prepared path computes the same loss as n_micro=1
+    (same weights, same decomposition artifact)."""
+    policy = GemmPolicy(default=parse_gemm_spec("ozaki1-p3-cached"))
+    _, _, _, loss_acc = _run_one_step(_tiny_arch(N_MICRO), policy,
+                                      prep_counter)
+    _, _, _, loss_one = _run_one_step(_tiny_arch(1), policy, prep_counter)
+    np.testing.assert_allclose(loss_acc, loss_one, rtol=1e-5)
+
+
+def test_native_policy_builds_no_preps(prep_counter):
+    arch = _tiny_arch(N_MICRO)
+    first, steady, _, loss = _run_one_step(arch, GemmPolicy(), prep_counter)
+    assert first == 0 and steady == 0
+    assert np.isfinite(loss)
+
+
+def test_step_prepared_gradients_flow(make_matrix):
+    """emulated_dot_prepared: forward from the prep, dB to the weight —
+    gradients agree with the native float path to emulation precision."""
+    from repro.core.emulated import emulated_dot_prepared
+    a = jnp.asarray(make_matrix((16, 32)))
+    b = jnp.asarray(make_matrix((32, 24)))
+    cfg = parse_gemm_spec("ozaki1-p4-cached")
+    prep = prepared.prepare_rhs(b, cfg, with_twin=True)
+
+    def f_emu(a, b):
+        return jnp.sum(jnp.sin(emulated_dot_prepared(a, b, prep, cfg)))
+
+    def f_nat(a, b):
+        return jnp.sum(jnp.sin(a @ b))
+
+    ga_e, gb_e = jax.grad(f_emu, argnums=(0, 1))(a, b)
+    ga_n, gb_n = jax.grad(f_nat, argnums=(0, 1))(a, b)
+    for ge, gn in ((ga_e, ga_n), (gb_e, gb_n)):
+        np.testing.assert_allclose(
+            np.asarray(ge), np.asarray(gn), rtol=1e-2,
+            atol=1e-2 * float(jnp.abs(gn).max() + 1e-9))
+
+
+def test_attach_step_preps_roundtrip():
+    """attach_step_preps swaps exactly the prepared leaves and leaves the
+    rest of the tree untouched."""
+    params = {"head": jnp.ones((32, 16)), "ln": {"scale": jnp.ones((4,))}}
+    policy = GemmPolicy(default=parse_gemm_spec("ozaki1-p3-cached"))
+    preps = prepared.build_step_preps(params, policy)
+    assert set(preps) == {"head"}
+    wrapped = prepared.attach_step_preps(params, preps)
+    assert isinstance(wrapped["head"], prepared.StepPrepared)
+    assert wrapped["ln"]["scale"] is params["ln"]["scale"]
+    # no preps -> identity
+    assert prepared.attach_step_preps(params, {}) is params
