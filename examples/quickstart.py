@@ -1,18 +1,20 @@
-"""Quickstart: emulated high-precision GEMM from int8 building blocks.
+"""Quickstart: emulated high-precision GEMM through the unified API.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Kernel-backend selection (TPU Mosaic / Mosaic-GPU-Triton / XLA
-reference) is documented in docs/backends.md; set REPRO_BACKEND=gpu or
-EmulationConfig(backend="gpu") to route through the GPU Scheme-I
-lowering (interpret mode off-GPU — bit-identical results).
+Everything below runs through the three pillars of the public surface
+(docs/api.md): precision specs (`repro.precision`), ambient emulation
+scopes (`with repro.emulation(...)`), and the emulated `repro.einsum` /
+`repro.dot_general` front door. Kernel-backend selection is documented
+in docs/backends.md; the `@gpu` spec suffix (or REPRO_BACKEND=gpu)
+routes through the GPU Scheme-I lowering — interpret mode off-GPU,
+bit-identical results.
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import emulated_dot
-from repro.core.precision import EmulationConfig, plan_precision
+import repro
 
 rng = np.random.default_rng(0)
 n = 512
@@ -22,31 +24,53 @@ a = ((rng.random((n, n)) - 0.5) * np.exp(4 * rng.standard_normal((n, n)))
 b = ((rng.random((n, n)) - 0.5) * np.exp(4 * rng.standard_normal((n, n)))
      ).astype(np.float32)
 ref = a.astype(np.float64) @ b.astype(np.float64)
+aj, bj = jnp.asarray(a), jnp.asarray(b)
 
 
 def bits(c):
     return -np.log2(np.abs(np.asarray(c) - ref).max() / np.abs(ref).max())
 
 
+# Precision specs are loggable one-liners: scheme + slice/modulus count,
+# parsed by repro.precision (grammar in docs/api.md).
 print(f"native fp32 matmul:              {bits(a @ b):5.1f} bits")
-for p in (2, 3, 4):
-    cfg = EmulationConfig(scheme="ozaki1", p=p)   # mantissa slicing
-    c = emulated_dot(jnp.asarray(a), jnp.asarray(b), cfg)
-    print(f"Ozaki-I  p={p} ({cfg.gemm_count():2d} int8 GEMMs): "
+for spec in ("ozaki1-p2", "ozaki1-p3", "ozaki1-p4"):   # mantissa slicing
+    cfg = repro.precision(spec)
+    c = repro.einsum("ij,jk->ik", aj, bj, precision=spec)
+    print(f"Ozaki-I  {spec} ({cfg.gemm_count():2d} int8 GEMMs): "
           f"{bits(c):5.1f} bits")
-for p in (8, 12):
-    cfg = EmulationConfig(scheme="ozaki2", p=p)   # CRT modular
-    c = emulated_dot(jnp.asarray(a), jnp.asarray(b), cfg)
-    print(f"Ozaki-II p={p:2d} ({cfg.gemm_count():2d} int8 GEMMs): "
+for spec in ("ozaki2-m8", "ozaki2-m12"):               # CRT modular
+    cfg = repro.precision(spec)
+    c = repro.einsum("ij,jk->ik", aj, bj, precision=spec)
+    print(f"Ozaki-II {spec} ({cfg.gemm_count():2d} int8 GEMMs): "
           f"{bits(c):5.1f} bits")
 
-# The precision planner (paper Fig. 7 crossover, automated):
+# 'bits=N' specs route through the planner (paper Fig. 7 crossover,
+# automated): name the precision you need, get the cheaper scheme.
 for target in (16, 22, 40):
-    cfg = plan_precision(target_bits=target, k_dim=n)
-    print(f"planner: {target} bits at K={n} -> {cfg.scheme} p={cfg.p}")
+    cfg = repro.precision(f"bits={target}:k{n}")
+    print(f"planner: bits={target}:k{n} -> {cfg.to_spec()}")
+
+# Ambient scopes: emulate a whole block without threading configs —
+# every emulation-aware call-site inside resolves to the scoped spec
+# (explicit arg > innermost scope > REPRO_EMULATION env > native).
+with repro.emulation("ozaki2-m8"):
+    c = repro.einsum("ij,jk->ik", aj, bj)
+print(f"ambient scope ozaki2-m8:          {bits(c):5.1f} bits")
+
+# General contractions: einsum shapes beyond plain 2-D — batch dims,
+# multi-axis contractions, attention-style patterns — lower onto the
+# same fused kernels via transpose/reshape/vmap canonicalization.
+q = jnp.asarray(rng.standard_normal((2, 64, 4, 32)).astype(np.float32))
+k = jnp.asarray(rng.standard_normal((2, 64, 4, 32)).astype(np.float32))
+scores = repro.einsum("bqhd,bkhd->bhqk", q, k, precision="ozaki1-p4")
+ref_scores = np.einsum("bqhd,bkhd->bhqk", np.asarray(q, np.float64),
+                       np.asarray(k, np.float64))
+err = np.abs(np.asarray(scores) - ref_scores).max() / np.abs(ref_scores).max()
+print(f"attention scores (bqhd,bkhd->bhqk): {-np.log2(err):5.1f} bits, "
+      f"shape {scores.shape}")
 
 # Kernel backends (docs/backends.md): the same GEMM through the GPU
 # Scheme-I lowering — bit-identical slicing, 16-lane tiles.
-cfg = EmulationConfig(scheme="ozaki1", p=4, backend="gpu")
-c = emulated_dot(jnp.asarray(a), jnp.asarray(b), cfg)
-print(f"Ozaki-I  p=4 via backend='gpu':   {bits(c):5.1f} bits")
+c = repro.einsum("ij,jk->ik", aj, bj, precision="ozaki1-p4@gpu")
+print(f"Ozaki-I  ozaki1-p4@gpu:           {bits(c):5.1f} bits")

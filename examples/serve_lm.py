@@ -10,10 +10,11 @@ import time
 
 import numpy as np
 
+import repro
 from repro import configs
 from repro.launch.mesh import make_host_mesh
 from repro.launch.serve import ServeEngine
-from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.models.common import GemmPolicy
 
 
 def main(argv=None):
@@ -22,7 +23,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--gemm", default="native")
+    ap.add_argument("--gemm", default=None,
+                    help="precision spec (repro.precision grammar); "
+                         "omitted, REPRO_EMULATION / the ambient scope "
+                         "decides")
     ap.add_argument("--int8-cache", action="store_true")
     args = ap.parse_args(argv)
 
@@ -35,8 +39,9 @@ def main(argv=None):
                            (args.requests, args.prompt_len)).astype(np.int32)
     mesh = make_host_mesh()
     with mesh:
+        gemm = repro.precision(args.gemm) if args.gemm else None
         eng = ServeEngine(arch, mesh, args.prompt_len + args.gen,
-                          GemmPolicy(default=parse_gemm_spec(args.gemm)))
+                          GemmPolicy(default=gemm))
         t0 = time.time()
         toks = eng.generate(prompts, args.gen)
         dt = time.time() - t0

@@ -14,12 +14,13 @@ import dataclasses
 
 import jax
 
+import repro
 from repro.configs.base import ArchConfig, ModelConfig, ShapeSpec, TrainPolicy
 from repro.data import make_batch_iterator
 from repro.launch import steps as S
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
-from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.models.common import GemmPolicy
 from repro.optim import make_optimizer
 from repro.runtime import Trainer
 
@@ -51,7 +52,7 @@ def main(argv=None):
             d_ff=1024, vocab=4096))
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
     mesh = make_host_mesh()
-    policy = GemmPolicy(default=parse_gemm_spec(args.gemm))
+    policy = GemmPolicy(default=repro.precision(args.gemm))
     opt_init, _ = make_optimizer(arch.train.optimizer)
 
     def init_state():

@@ -1,3 +1,81 @@
-"""repro: EmuGEMM (Ozaki Scheme I/II precision emulation) on TPU in JAX."""
+"""repro: EmuGEMM (Ozaki Scheme I/II precision emulation) on TPU in JAX.
 
-__version__ = "1.0.0"
+The public surface (see docs/api.md):
+
+  repro.precision("ozaki1-p4")          spec string -> EmulationConfig
+  with repro.emulation("ozaki2-m6"):    ambient emulation scope
+  repro.einsum("bik,bkj->bij", a, b)    emulated general contractions
+  repro.dot_general(a, b, dnums)        ... in lax dimension-number form
+  repro.emulated_matmul(a, b, cfg=...)  the 2-D kernel front door
+  repro.emulated_dot(a, b, cfg)         (..., K) @ (K, N) with custom VJP
+  repro.plan_precision(bits, k)         Fig.-7 scheme/slice planner
+  repro.GemmPolicy / repro.prepare_rhs  model policies / prepared weights
+"""
+
+from repro.api import (
+    EMULATION_ENV_VAR,
+    current_emulation,
+    dot_general,
+    einsum,
+    emulation,
+    precision,
+    resolve_config,
+)
+from repro.core.precision import (
+    EmulationConfig,
+    NATIVE,
+    plan_precision,
+)
+
+__version__ = "1.1.0"
+
+__all__ = [
+    # precision specs + planning
+    "EmulationConfig",
+    "NATIVE",
+    "precision",
+    "plan_precision",
+    # ambient scopes + the resolver
+    "EMULATION_ENV_VAR",
+    "emulation",
+    "current_emulation",
+    "resolve_config",
+    # contractions
+    "dot_general",
+    "einsum",
+    "emulated_dot",
+    "emulated_matmul",
+    "emulated_matmul_batched",
+    # model policies + prepared weights
+    "GemmPolicy",
+    "prepare_rhs",
+    "PreparedOperand",
+]
+
+# Heavy re-exports (they pull the Pallas kernel stack) resolve lazily so
+# `import repro` stays cheap for spec/scope-only users.
+_LAZY = {
+    "emulated_dot": ("repro.core.emulated", "emulated_dot"),
+    "emulated_matmul": ("repro.kernels.dispatch", "emulated_matmul"),
+    "emulated_matmul_batched": ("repro.kernels.dispatch",
+                                "emulated_matmul_batched"),
+    "GemmPolicy": ("repro.models.common", "GemmPolicy"),
+    "prepare_rhs": ("repro.kernels.prepared", "prepare_rhs"),
+    "PreparedOperand": ("repro.kernels.prepared", "PreparedOperand"),
+}
+
+
+def __getattr__(name):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    import importlib
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

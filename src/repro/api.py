@@ -1,0 +1,470 @@
+"""The unified precision API: specs, ambient scopes, and emulated einsum.
+
+This module is the package's front door (re-exported from ``repro``):
+
+* :func:`precision` — normalize a spec string (the mini-language parsed
+  by :meth:`EmulationConfig.parse`: ``"ozaki1-p4"``, ``"ozaki2-m6"``,
+  ``"bits=50"``, ``"native"``, with ``@backend`` / ``+cached`` /
+  ``+xla`` / ``+pallas`` suffixes) or an EmulationConfig into an
+  EmulationConfig, so configs are loggable one-liners.
+* :func:`emulation` — an ambient scope, modeled on
+  ``jax.default_matmul_precision``: ``with repro.emulation("ozaki1-p4"):``
+  makes every emulation-aware call-site inside the block (model dense
+  projections, ``repro.dot_general``/``einsum``, the kernel dispatcher)
+  that was not given an explicit config use the scoped one. The stack is
+  thread-local; scopes nest, innermost wins.
+* :func:`resolve_config` — THE resolver. One documented precedence,
+  consumed by every emulation-aware call-site::
+
+      explicit argument > innermost emulation() scope
+                        > REPRO_EMULATION env var > platform default
+
+  The platform default is ``NATIVE`` (no emulation): emulation is always
+  an opt-in, per call, per scope, or per process.
+* :func:`dot_general` / :func:`einsum` — emulated general contractions.
+  Arbitrary batched/multi-axis problems canonicalize (transpose +
+  reshape + vmap over batch axes) onto the 2-D emulated GEMM core, so
+  any ``jnp.einsum`` call-site can switch to emulation by swapping the
+  namespace. Both are differentiable (the 2-D core carries the custom
+  VJP) and accept a :class:`repro.kernels.prepared.PreparedOperand` rhs
+  for pre-decomposed weights.
+
+Deprecated entry points (``emulated_matmul(scheme=..., precision=...)``,
+``maybe_emulated_matmul``, ``parse_gemm_spec``) keep working through
+shims that emit DeprecationWarning; see docs/api.md for the migration
+table.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import math
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import EmulationConfig, NATIVE
+
+__all__ = [
+    "EMULATION_ENV_VAR",
+    "precision",
+    "emulation",
+    "current_emulation",
+    "resolve_config",
+    "dot_general",
+    "einsum",
+]
+
+# Process-wide spec override, the env leg of the resolver. Parsed
+# per-resolve through a small cache (the string is almost always
+# identical across calls).
+EMULATION_ENV_VAR = "REPRO_EMULATION"
+
+
+# ---------------------------------------------------------------------------
+# Pillar 1: precision specs.
+# ---------------------------------------------------------------------------
+
+def precision(spec: str | EmulationConfig, /, **overrides) -> EmulationConfig:
+    """Normalize a spec string or EmulationConfig into an EmulationConfig.
+
+    ``overrides`` are dataclass field replacements applied on top, for
+    the fields the grammar does not carry::
+
+        repro.precision("ozaki1-p4", bwd_p=2)   # fewer backward slices
+    """
+    if isinstance(spec, EmulationConfig):
+        cfg = spec
+    elif isinstance(spec, str):
+        cfg = EmulationConfig.parse(spec)
+    else:
+        raise TypeError("precision spec must be a str or EmulationConfig, "
+                        f"got {type(spec).__name__}")
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Pillar 2: ambient emulation scopes + the one resolver.
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+def _scope_stack() -> list:
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
+
+
+@functools.lru_cache(maxsize=32)
+def _parse_env_spec(spec: str) -> EmulationConfig:
+    return EmulationConfig.parse(spec)
+
+
+@contextlib.contextmanager
+def emulation(spec_or_cfg: str | EmulationConfig):
+    """Ambient emulation scope: ``with repro.emulation("ozaki1-p4"): ...``.
+
+    Every emulation-aware call-site inside the block that received no
+    explicit config resolves to the scoped one. Scopes nest (innermost
+    wins) and are thread-local: a scope entered on one thread is
+    invisible to others, and threads spawned inside a scope start with
+    an empty stack (hand the config over explicitly if a worker should
+    inherit it). ``with repro.emulation("native")`` re-disables emulation
+    inside an outer emulated scope.
+
+    Note the config is read at *trace* time: entering a scope does not
+    retroactively change already-jitted computations, exactly like
+    ``jax.default_matmul_precision``.
+    """
+    cfg = precision(spec_or_cfg)
+    stack = _scope_stack()
+    stack.append(cfg)
+    try:
+        yield cfg
+    finally:
+        stack.pop()
+
+
+def current_emulation() -> EmulationConfig | None:
+    """The ambient config: innermost scope, else the env spec, else None."""
+    stack = _scope_stack()
+    if stack:
+        return stack[-1]
+    env = os.environ.get(EMULATION_ENV_VAR)
+    if env:
+        return _parse_env_spec(env)
+    return None
+
+
+def resolve_config(explicit: str | EmulationConfig | None = None, *,
+                   default: str | EmulationConfig | None = None,
+                   ) -> EmulationConfig:
+    """The one emulation-config resolver (see module doc for precedence).
+
+    ``explicit`` is the call-site's own argument (a spec string or
+    config); ``default`` replaces the platform default (``NATIVE``) for
+    entry points whose historical no-argument behavior was emulated
+    (``emulated_matmul``) — it ranks *below* the ambient scope and env.
+    """
+    if explicit is not None:
+        return precision(explicit)
+    ambient = current_emulation()
+    if ambient is not None:
+        return ambient
+    if default is not None:
+        return precision(default)
+    return NATIVE
+
+
+# ---------------------------------------------------------------------------
+# Pillar 3: general contractions.
+# ---------------------------------------------------------------------------
+
+def _is_prepared(x) -> bool:
+    from repro.kernels.prepared import PreparedOperand
+    return isinstance(x, PreparedOperand)
+
+
+def _with_out_dtype(cfg: EmulationConfig, out_dtype) -> EmulationConfig:
+    if out_dtype is None:
+        return cfg
+    return dataclasses.replace(cfg, out_dtype=jnp.dtype(out_dtype).name)
+
+
+def _norm_dnums(dimension_numbers, a_ndim: int, b_ndim: int):
+    (lc, rc), (lb, rb) = dimension_numbers
+
+    def norm(dims, ndim, what, side):
+        dims = tuple(int(d) for d in dims)
+        for d in dims:
+            if not -ndim <= d < ndim:
+                raise ValueError(f"{side} {what} dim {d} out of range for "
+                                 f"rank-{ndim} operand")
+        dims = tuple(d % ndim for d in dims)
+        if len(set(dims)) != len(dims):
+            raise ValueError(f"repeated {side} {what} dims {dims}")
+        return dims
+
+    lc = norm(lc, a_ndim, "contracting", "lhs")
+    rc = norm(rc, b_ndim, "contracting", "rhs")
+    lb = norm(lb, a_ndim, "batch", "lhs")
+    rb = norm(rb, b_ndim, "batch", "rhs")
+    if len(lc) != len(rc):
+        raise ValueError(f"contracting dim count mismatch: {lc} vs {rc}")
+    if len(lb) != len(rb):
+        raise ValueError(f"batch dim count mismatch: {lb} vs {rb}")
+    if set(lc) & set(lb):
+        raise ValueError(f"lhs dims {set(lc) & set(lb)} are both "
+                         "contracting and batch")
+    if set(rc) & set(rb):
+        raise ValueError(f"rhs dims {set(rc) & set(rb)} are both "
+                         "contracting and batch")
+    return lc, rc, lb, rb
+
+
+def _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype):
+    """PreparedOperand rhs: only (..., K) x prepared (K, N) shapes exist —
+    the slices were laid out at prepare time and cannot be transposed."""
+    from repro.core.emulated import prepared_dot
+    (lc, rc), (lb, rb) = dimension_numbers
+    lc, rc, lb, rb = (tuple(lc), tuple(rc), tuple(lb), tuple(rb))
+    if lb or rb or rc != (0,) or len(lc) != 1:
+        raise ValueError(
+            "a PreparedOperand rhs supports only dimension_numbers "
+            f"(((k,), (0,)), ((), ())); got {dimension_numbers} — "
+            "prepare_rhs fixes the (K, N) layout at decomposition time")
+    if cfg.scheme == "native":
+        raise ValueError("a PreparedOperand rhs is Scheme-I data; it cannot "
+                         "be consumed under a 'native' precision spec")
+    if not -a.ndim <= lc[0] < a.ndim:
+        raise ValueError(f"lhs contracting dim {lc[0]} out of range for "
+                         f"rank-{a.ndim} operand")
+    k_axis = lc[0] % a.ndim
+    if a.shape[k_axis] != b.k:
+        raise ValueError(f"lhs contracting dim {a.shape[k_axis]} vs "
+                         f"prepared K={b.k}")
+    if k_axis != a.ndim - 1:
+        a = jnp.moveaxis(a, k_axis, -1)
+    if out_dtype is None and cfg.out_dtype is not None:
+        out_dtype = cfg.out_dtype
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(a.dtype, jnp.float32)
+    return prepared_dot(a, b, out_dtype=out_dtype)
+
+
+def dot_general(a: jax.Array, b, dimension_numbers, *,
+                precision: str | EmulationConfig | None = None,
+                out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Emulated ``jax.lax.dot_general``: any batched/multi-axis contraction.
+
+    ``dimension_numbers`` follows the lax convention
+    ``((lhs_contract, rhs_contract), (lhs_batch, rhs_batch))`` and the
+    output is laid out ``(*batch, *lhs_free, *rhs_free)``. ``precision``
+    is a spec string or EmulationConfig; when omitted, the ambient
+    resolver decides (innermost ``repro.emulation`` scope, then the
+    ``REPRO_EMULATION`` env var, then native). The contraction
+    canonicalizes — transpose + reshape to (M, K) @ (K, N), vmapped over
+    batch axes — onto the emulated 2-D core, which carries the custom
+    VJP, so the result is differentiable under every scheme.
+
+    ``b`` may be a :class:`repro.kernels.prepared.PreparedOperand`
+    (pre-decomposed Scheme-I weight); the dimension numbers must then
+    name its fixed (K, N) layout: ``(((k_axis,), (0,)), ((), ()))``.
+    """
+    cfg = resolve_config(precision)
+    if backend is not None:
+        cfg = dataclasses.replace(cfg, backend=backend)
+    if _is_prepared(b):
+        return _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype)
+
+    lc, rc, lb, rb = _norm_dnums(dimension_numbers, a.ndim, b.ndim)
+    for i, (dl, dr) in enumerate(zip(lc, rc)):
+        if a.shape[dl] != b.shape[dr]:
+            raise ValueError(
+                f"contracting dim {i} mismatch: lhs axis {dl} has "
+                f"{a.shape[dl]}, rhs axis {dr} has {b.shape[dr]}")
+    for i, (dl, dr) in enumerate(zip(lb, rb)):
+        if a.shape[dl] != b.shape[dr]:
+            raise ValueError(
+                f"batch dim {i} mismatch: lhs axis {dl} has "
+                f"{a.shape[dl]}, rhs axis {dr} has {b.shape[dr]}")
+
+    if cfg.scheme == "native":
+        pet = out_dtype or cfg.out_dtype
+        return jax.lax.dot_general(
+            a, b, ((lc, rc), (lb, rb)),
+            preferred_element_type=None if pet is None else jnp.dtype(pet))
+
+    from repro.core.emulated import emulated_dot
+
+    cfg2 = _with_out_dtype(cfg, out_dtype)
+    a_free = tuple(d for d in range(a.ndim) if d not in lc and d not in lb)
+    b_free = tuple(d for d in range(b.ndim) if d not in rc and d not in rb)
+    batch_shape = tuple(a.shape[d] for d in lb)
+    a_free_shape = tuple(a.shape[d] for d in a_free)
+    b_free_shape = tuple(b.shape[d] for d in b_free)
+    k = math.prod(a.shape[d] for d in lc)
+    n = math.prod(b_free_shape)
+
+    # Canonical layouts: lhs (batch..., free..., K), rhs (batch..., K, N).
+    a_t = jnp.transpose(a, lb + a_free + lc)
+    b_t = jnp.transpose(b, rb + rc + b_free)
+    a2 = a_t.reshape(batch_shape + a_free_shape + (k,))
+    b2 = b_t.reshape(batch_shape + (k, n))
+
+    if not lb:
+        out = emulated_dot(a2, b2, cfg2)
+    else:
+        nb = len(lb)
+        a3 = a2.reshape((-1,) + a2.shape[nb:])
+        b3 = b2.reshape((-1,) + b2.shape[nb:])
+        out = jax.vmap(lambda x, y: emulated_dot(x, y, cfg2))(a3, b3)
+    return out.reshape(batch_shape + a_free_shape + b_free_shape)
+
+
+# -- einsum -----------------------------------------------------------------
+
+_EINSUM_HINT = ("repro.einsum covers two-operand contractions without "
+                "repeated in-operand labels; use jnp.einsum for "
+                "diagonals/traces and >2 operands")
+
+
+def _expand_operand(part: str, ndim: int, what: str):
+    """One operand's subscript -> per-axis labels ('...<i>' for ellipsis
+    dims, right-aligned like numpy)."""
+    if part.count(".") not in (0, 3) or (".." in part and "..." not in part):
+        raise ValueError(f"bad ellipsis in {what} subscript {part!r}")
+    if "..." in part:
+        head, _, tail = part.partition("...")
+        n_ell = ndim - len(head) - len(tail)
+        if n_ell < 0:
+            raise ValueError(
+                f"{what} subscript {part!r} names more axes than the "
+                f"rank-{ndim} operand has")
+        labels = (list(head)
+                  + [f"...{i}" for i in range(-n_ell, 0)]
+                  + list(tail))
+    else:
+        if len(part) != ndim:
+            raise ValueError(
+                f"{what} subscript {part!r} names {len(part)} axes for a "
+                f"rank-{ndim} operand")
+        labels = list(part)
+    for lab in labels:
+        if len(lab) == 1 and not lab.isalpha():
+            raise ValueError(f"bad label {lab!r} in {what} subscript "
+                             f"{part!r}")
+    single = [lab for lab in labels if len(lab) == 1]
+    if len(set(single)) != len(single):
+        raise ValueError(f"repeated label in {what} subscript {part!r}; "
+                         + _EINSUM_HINT)
+    return labels
+
+
+def _parse_einsum(subscripts: str, a_ndim: int, b_ndim: int):
+    """'bik,bkj->bij' -> (a_labels, b_labels, out_labels)."""
+    s = subscripts.replace(" ", "")
+    if "->" in s:
+        ins, _, out = s.partition("->")
+    else:
+        ins, out = s, None
+    parts = ins.split(",")
+    if len(parts) != 2:
+        raise ValueError(f"repro.einsum takes exactly two operands; got "
+                         f"{len(parts)} in {subscripts!r} ({_EINSUM_HINT})")
+    a_labels = _expand_operand(parts[0], a_ndim, "lhs")
+    b_labels = _expand_operand(parts[1], b_ndim, "rhs")
+    ell = [lab for lab in a_labels + b_labels if lab.startswith("...")]
+    ell_out = sorted(set(ell), key=lambda lab: int(lab[3:]))
+    if out is None:
+        # numpy implicit output: ellipsis dims first, then the letters
+        # appearing exactly once across both operands, alphabetically.
+        letters = [lab for lab in a_labels + b_labels
+                   if not lab.startswith("...")]
+        once = sorted(lab for lab in set(letters)
+                      if letters.count(lab) == 1)
+        out_labels = ell_out + once
+    else:
+        if "..." in out:
+            head, _, tail = out.partition("...")
+            out_labels = list(head) + ell_out + list(tail)
+        else:
+            if ell_out:
+                raise ValueError(
+                    f"output subscript of {subscripts!r} drops ellipsis "
+                    f"dims; {_EINSUM_HINT}")
+            out_labels = list(out)
+        if len(set(out_labels)) != len(out_labels):
+            raise ValueError(f"repeated output label in {subscripts!r}")
+        for lab in out_labels:
+            if lab not in a_labels and lab not in b_labels:
+                raise ValueError(f"output label {lab!r} of {subscripts!r} "
+                                 "appears in neither operand")
+    return a_labels, b_labels, out_labels
+
+
+def einsum(subscripts: str, a: jax.Array, b, *,
+           precision: str | EmulationConfig | None = None,
+           out_dtype=None, backend: str | None = None) -> jax.Array:
+    """Emulated two-operand ``jnp.einsum``.
+
+    Supports batch dims, multiple contraction axes, ellipses and summed
+    free axes — everything a two-operand einsum without in-operand
+    repeats (diagonals) can express. The contraction lowers through
+    :func:`dot_general`, so precision resolution, differentiability and
+    PreparedOperand handling are identical. Example::
+
+        with repro.emulation("ozaki2-m8"):
+            attn = repro.einsum("bqhd,bkhd->bhqk", q, k)
+    """
+    if _is_prepared(b):
+        a_labels, b_labels, out_labels = _parse_einsum(subscripts, a.ndim, 2)
+    else:
+        a_labels, b_labels, out_labels = _parse_einsum(subscripts, a.ndim,
+                                                       b.ndim)
+    a_set, b_set, out_set = set(a_labels), set(b_labels), set(out_labels)
+
+    # Sum out free axes that the output drops (e.g. 'ij,jk->k' sums i) —
+    # they do not interact with the contraction.
+    def presum(x, labels, other_set):
+        drop = [i for i, lab in enumerate(labels)
+                if lab not in other_set and lab not in out_set]
+        if drop:
+            x = x.sum(axis=tuple(drop))
+            labels = [lab for lab in labels if lab in other_set
+                      or lab in out_set]
+        return x, labels
+
+    if _is_prepared(b):
+        ok = (len(b_labels) == 2
+              and b_labels[0] in a_set and b_labels[0] not in out_set
+              and b_labels[1] in out_set and b_labels[1] not in a_set)
+        if not ok:
+            raise ValueError(
+                f"a PreparedOperand rhs supports only '...k,kn->...n'-shaped "
+                f"subscripts (fixed (K, N) layout); got {subscripts!r}")
+        a, a_labels = presum(a, a_labels, b_set)
+        k_axis = a_labels.index(b_labels[0])
+        dnums = (((k_axis,), (0,)), ((), ()))
+        out = dot_general(a, b, dnums, precision=precision,
+                          out_dtype=out_dtype, backend=backend)
+        canon = [lab for lab in a_labels if lab != b_labels[0]] \
+            + [b_labels[1]]
+    else:
+        a, a_labels = presum(a, a_labels, b_set)
+        b, b_labels = presum(b, b_labels, a_set)
+        shared = [lab for lab in a_labels if lab in b_labels]
+        batch = [lab for lab in shared if lab in out_set]
+        contract = [lab for lab in shared if lab not in out_set]
+        lc = tuple(a_labels.index(lab) for lab in contract)
+        rc = tuple(b_labels.index(lab) for lab in contract)
+        lb = tuple(a_labels.index(lab) for lab in batch)
+        rb = tuple(b_labels.index(lab) for lab in batch)
+        # einsum broadcasts a size-1 dim that meets a larger dim under the
+        # same label; mirror that here — dot_general stays strict like lax.
+        a_shape, b_shape = list(a.shape), list(b.shape)
+        for dl, dr in zip(lb + lc, rb + rc):
+            if a_shape[dl] == 1 and b_shape[dr] != 1:
+                a_shape[dl] = b_shape[dr]
+            elif b_shape[dr] == 1 and a_shape[dl] != 1:
+                b_shape[dr] = a_shape[dl]
+        if a_shape != list(a.shape):
+            a = jnp.broadcast_to(a, a_shape)
+        if b_shape != list(b.shape):
+            b = jnp.broadcast_to(b, b_shape)
+        out = dot_general(a, b, ((lc, rc), (lb, rb)), precision=precision,
+                          out_dtype=out_dtype, backend=backend)
+        canon = batch + [lab for lab in a_labels if lab not in shared] \
+            + [lab for lab in b_labels if lab not in shared]
+    if canon != out_labels:
+        out = jnp.transpose(out, tuple(canon.index(lab)
+                                       for lab in out_labels))
+    return out

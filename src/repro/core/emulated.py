@@ -74,7 +74,7 @@ def _dot_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig) -> jax.Array:
             preferred_element_type=out_dtype)
     if cfg.impl in ("auto", "pallas"):
         from repro.kernels import dispatch  # lazy: pallas import
-        out = dispatch.maybe_emulated_matmul(a, b, cfg)
+        out = dispatch.auto_fused_matmul(a, b, cfg)
         if out is not None:
             return out
         if cfg.impl == "pallas":

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 from typing import Literal, Sequence
 
 # Pairwise coprime moduli <= 256, descending. 256 = 2^8; 255 = 3*5*17;
@@ -26,6 +27,16 @@ DEFAULT_MODULI: tuple[int, ...] = (
 )
 
 Scheme = Literal["native", "ozaki1", "ozaki2"]
+
+# K the spec mini-language assumes when a ``bits=N`` spec names no ``:kK``
+# suffix — plan_precision needs a contraction length to budget slices
+# against, and 4096 is the model zoo's typical projection K.
+DEFAULT_PLAN_K = 4096
+
+# Largest slice/modulus count the planner searches (the moduli table
+# bounds Scheme II exactly; Scheme I shares the cap so the planner never
+# returns a slice count whose GEMM count is off the paper's Table II).
+MAX_PLAN_P = 16
 
 
 def safe_beta(k_dim: int, max_beta: int = 7) -> int:
@@ -137,6 +148,135 @@ class EmulationConfig:
             return self.p
         return 1
 
+    # -- the precision-spec mini-language (see docs/api.md) -----------------
+    #
+    #   spec   := base suffix*
+    #   base   := "native" | "ozaki1-p" INT | "ozaki2-m" INT
+    #           | "bits=" INT [":k" INT]        (routes via plan_precision)
+    #   suffix := "@" BACKEND                   (kernel-backend name)
+    #           | "+cached"                     (Scheme-I per-step cache)
+    #           | "+xla" | "+pallas"            (pin impl; default 'auto')
+    #
+    # ``ozaki2-m6`` pins ``moduli=default_moduli(6)`` so parse/to_spec
+    # round-trips survive plan_precision's explicit moduli. ``ozaki2-p6``
+    # is accepted as a legacy alias and canonicalized to ``-m``.
+
+    _SPEC_RE = re.compile(r"(?P<base>[^@+\s]+)(?P<suffixes>(?:[@+][^@+\s]+)*)")
+
+    @classmethod
+    def parse(cls, spec: "str | EmulationConfig") -> "EmulationConfig":
+        """Parse a precision-spec string into an EmulationConfig.
+
+        An EmulationConfig passes through unchanged, so call-sites can
+        accept either form. Raises ValueError with the offending token
+        for anything outside the grammar.
+        """
+        if isinstance(spec, cls):
+            return spec
+        if not isinstance(spec, str):
+            raise TypeError(f"precision spec must be a str or "
+                            f"EmulationConfig, got {type(spec).__name__}")
+        m = cls._SPEC_RE.fullmatch(spec.strip())
+        if m is None:
+            raise ValueError(f"bad precision spec {spec!r}")
+        base = m.group("base")
+        backend: str | None = None
+        cached = False
+        impl = "auto"
+        for tok in re.findall(r"[@+][^@+]+", m.group("suffixes")):
+            if tok[0] == "@":
+                if backend is not None:
+                    raise ValueError(f"duplicate '@backend' in {spec!r}")
+                backend = tok[1:]
+            elif tok[1:] == "cached":
+                cached = True
+            elif tok[1:] in ("xla", "pallas"):
+                impl = tok[1:]
+            else:
+                raise ValueError(
+                    f"unknown suffix {tok!r} in {spec!r} (expected "
+                    "'@<backend>', '+cached', '+xla' or '+pallas')")
+
+        if base == "native":
+            cfg = cls(scheme="native", impl=impl, backend=backend)
+        elif base.startswith("bits="):
+            bm = re.fullmatch(r"bits=(\d+)(?::k(\d+))?", base)
+            if bm is None:
+                raise ValueError(f"bad 'bits=' base in {spec!r} (expected "
+                                 "'bits=<N>' or 'bits=<N>:k<K>')")
+            planned = plan_precision(int(bm.group(1)),
+                                     int(bm.group(2) or DEFAULT_PLAN_K))
+            cfg = dataclasses.replace(planned, impl=impl, backend=backend)
+        else:
+            sm = re.fullmatch(r"(ozaki[12])-([pm])(\d+)", base)
+            if sm is None:
+                raise ValueError(
+                    f"bad precision spec {spec!r}: base must be 'native', "
+                    "'ozaki1-p<N>', 'ozaki2-m<N>' or 'bits=<N>[:k<K>]'")
+            scheme, kind, num = sm.group(1), sm.group(2), int(sm.group(3))
+            if scheme == "ozaki1" and kind != "p":
+                raise ValueError(f"{spec!r}: ozaki1 counts slices with "
+                                 "'-p<N>'")
+            if num < 1:
+                raise ValueError(f"{spec!r}: count must be >= 1")
+            if scheme == "ozaki2":
+                # -m pins the moduli so the config round-trips to_spec.
+                cfg = cls(scheme="ozaki2", p=num, moduli=default_moduli(num),
+                          impl=impl, backend=backend)
+            else:
+                cfg = cls(scheme="ozaki1", p=num, impl=impl, backend=backend)
+        if cached:
+            if cfg.scheme != "ozaki1":
+                raise ValueError(f"{spec!r}: '+cached' is a Scheme-I "
+                                 "(ozaki1) feature")
+            cfg = dataclasses.replace(cfg, cache_weights=True)
+        return cfg
+
+    def to_spec(self) -> str:
+        """Print this config as a canonical spec string.
+
+        Inverse of :meth:`parse` on its image: ``parse(cfg.to_spec()) ==
+        cfg`` for every config parse can produce. Configs carrying fields
+        the grammar cannot express (explicit beta, custom moduli,
+        out_dtype, bwd_p, decomp, fused=False) raise ValueError naming
+        the field.
+        """
+        blockers = []
+        if self.beta is not None:
+            blockers.append("beta")
+        if self.out_dtype is not None:
+            blockers.append("out_dtype")
+        if self.bwd_p:
+            blockers.append("bwd_p")
+        if not self.fused:
+            blockers.append("fused")
+        if self.decomp != "auto":
+            blockers.append("decomp")
+        if self.moduli is not None and (
+                self.scheme != "ozaki2"
+                or tuple(self.moduli) != default_moduli(self.p)):
+            blockers.append("moduli")
+        if self.cache_weights and self.scheme != "ozaki1":
+            blockers.append("cache_weights")
+        if blockers:
+            raise ValueError(
+                f"config not expressible as a spec (non-default "
+                f"{', '.join(blockers)}): {self!r}")
+        if self.scheme == "native":
+            base = "native"
+        elif self.scheme == "ozaki1":
+            base = f"ozaki1-p{self.p}"
+        else:
+            base = f"ozaki2-m{self.p}"
+        out = base
+        if self.backend:
+            out += f"@{self.backend}"
+        if self.impl != "auto":
+            out += f"+{self.impl}"
+        if self.cache_weights:
+            out += "+cached"
+        return out
+
 
 NATIVE = EmulationConfig(scheme="native")
 
@@ -147,28 +287,56 @@ def plan_precision(target_bits: int, k_dim: int,
 
     Implements the paper's Fig.-7 crossover: Scheme I wins below ~FP32
     precision (its GEMM count grows quadratically), Scheme II above.
+
+    ``prefer`` pins the scheme instead of cost-comparing; a preferred
+    scheme that cannot reach ``target_bits`` raises (naming the maximum
+    it can deliver at this K) rather than silently handing the choice
+    back to the cost comparison. Returned ozaki2 configs pin ``moduli``
+    explicitly so they survive a ``to_spec``/``parse`` round-trip.
     """
+    if prefer not in (None, "ozaki1", "ozaki2"):
+        raise ValueError(f"prefer must be 'ozaki1' or 'ozaki2', "
+                         f"got {prefer!r}")
     beta = safe_beta(k_dim)
     p1 = max(1, math.ceil(target_bits / beta))
+    max1 = MAX_PLAN_P * beta
     # Smallest Scheme-II modulus count that meets the target.
     p2 = None
     for p in range(2, len(DEFAULT_MODULI) + 1):
         if scheme2_bits(default_moduli(p), k_dim) >= target_bits:
             p2 = p
             break
-    cost1 = p1 * (p1 + 1) / 2 if p1 * beta >= target_bits else math.inf
+    max2 = scheme2_bits(DEFAULT_MODULI, k_dim)
+    cost1 = p1 * (p1 + 1) / 2 if p1 <= MAX_PLAN_P else math.inf
     # Scheme II pays residue generation + CRT reconstruction on top of its p
     # GEMMs; empirically ~25% per-GEMM overhead (paper Fig. 7 crossover).
     cost2 = 1.25 * p2 if p2 is not None else math.inf
-    if prefer == "ozaki1" and cost1 < math.inf:
+
+    def scheme1_cfg():
         return EmulationConfig(scheme="ozaki1", p=p1)
-    if prefer == "ozaki2" and cost2 < math.inf:
-        return EmulationConfig(scheme="ozaki2", p=p2)
+
+    def scheme2_cfg():
+        return EmulationConfig(scheme="ozaki2", p=p2,
+                               moduli=default_moduli(p2))
+
+    if prefer == "ozaki1":
+        if cost1 == math.inf:
+            raise ValueError(
+                f"prefer='ozaki1' cannot reach target_bits={target_bits} "
+                f"at K={k_dim}: p<={MAX_PLAN_P} slices of beta={beta} bits "
+                f"deliver at most {max1} bits")
+        return scheme1_cfg()
+    if prefer == "ozaki2":
+        if cost2 == math.inf:
+            raise ValueError(
+                f"prefer='ozaki2' cannot reach target_bits={target_bits} "
+                f"at K={k_dim}: the full {len(DEFAULT_MODULI)}-modulus "
+                f"table delivers at most {max2} bits")
+        return scheme2_cfg()
     if cost1 == math.inf and cost2 == math.inf:
         raise ValueError(
             f"target_bits={target_bits} unreachable at K={k_dim} "
-            f"(scheme1 max {len(DEFAULT_MODULI) * beta}, "
-            f"scheme2 max {scheme2_bits(DEFAULT_MODULI, k_dim)})")
+            f"(scheme1 max {max1}, scheme2 max {max2})")
     if cost1 <= cost2:
-        return EmulationConfig(scheme="ozaki1", p=p1)
-    return EmulationConfig(scheme="ozaki2", p=p2)
+        return scheme1_cfg()
+    return scheme2_cfg()

@@ -37,6 +37,7 @@ from repro.kernels.backends import (  # noqa: F401
     resolve_backend,
 )
 from repro.kernels.dispatch import (  # noqa: F401
+    auto_fused_matmul,
     build_pallas_call,
     emulated_matmul,
     emulated_matmul_batched,

@@ -17,7 +17,7 @@ since the backend-registry subsystem landed is expressed per
   ``block_cache_info()`` / ``block_cache_clear()`` report and clear
   per-backend entries.
 * :func:`plan_emulated` — one (backend, dtype, blocks) resolution per
-  call, shared by ``emulated_matmul`` and ``maybe_emulated_matmul`` and
+  call, shared by ``emulated_matmul`` and ``auto_fused_matmul`` and
   threaded down to the fused wrappers.  Backend selection precedence:
   explicit argument > ``REPRO_BACKEND`` env var > ``cfg.backend`` >
   platform default; a backend with no fused kernel for the requested
@@ -45,6 +45,7 @@ import collections
 import dataclasses
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -186,11 +187,34 @@ def _is_complex(x) -> bool:
     return jnp.issubdtype(x.dtype, jnp.complexfloating)
 
 
+# Historical no-argument behavior of emulated_matmul: Scheme I at p=4.
+# Ranks below the ambient scope / env in the resolver — an explicit
+# `with repro.emulation(...)` or REPRO_EMULATION spec wins.
+_LEGACY_DEFAULT = EmulationConfig(scheme="ozaki1", p=4)
+
+
 def _resolve_cfg(cfg, scheme, precision) -> EmulationConfig:
-    if cfg is not None:
-        return cfg
-    return EmulationConfig(scheme=scheme,
-                           p=precision if precision is not None else 4)
+    """Resolve this call's config through repro.api.resolve_config.
+
+    ``scheme=``/``precision=`` are the deprecated pre-spec kwargs; they
+    keep working (with a DeprecationWarning) so old call-sites survive,
+    but new code passes ``cfg=`` (an EmulationConfig or a spec string)
+    or relies on the ambient scope.
+    """
+    from repro import api
+    if scheme is not None or precision is not None:
+        if cfg is not None:
+            raise TypeError("pass either cfg= or the deprecated "
+                            "scheme=/precision= kwargs, not both")
+        warnings.warn(
+            "emulated_matmul(scheme=..., precision=...) is deprecated; "
+            "pass cfg=repro.precision('<scheme>-p<N>') or wrap the call "
+            "in `with repro.emulation(...)`",
+            DeprecationWarning, stacklevel=3)
+        return EmulationConfig(
+            scheme=scheme if scheme is not None else "ozaki1",
+            p=precision if precision is not None else 4)
+    return api.resolve_config(cfg, default=_LEGACY_DEFAULT)
 
 
 def _prologue(cfg: EmulationConfig) -> bool:
@@ -203,7 +227,7 @@ class GemmPlan:
     """One backend + block-selection + dtype resolution per GEMM.
 
     Built by :func:`plan_emulated`; both ``emulated_matmul`` and
-    ``maybe_emulated_matmul`` consume the same plan, and the fused
+    ``auto_fused_matmul`` consume the same plan, and the fused
     wrappers receive ``blocks`` instead of re-running the staging-budget
     search on the padded problem.  ``backend`` is the *resolved* name —
     after the env override and the unsupported-(scheme, dtype) fallback
@@ -301,13 +325,19 @@ def _is_prepared(b) -> bool:
 
 
 def emulated_matmul(a: jax.Array, b, *,
-                    scheme: str = "ozaki1", precision: int | None = None,
-                    cfg: EmulationConfig | None = None,
-                    out_dtype=None, backend: str | None = None) -> jax.Array:
+                    cfg: "EmulationConfig | str | None" = None,
+                    out_dtype=None, backend: str | None = None,
+                    scheme: str | None = None,
+                    precision: int | None = None) -> jax.Array:
     """Emulated (M, K) @ (K, N) through the fused kernels of the selected
     backend (``backend`` arg > ``REPRO_BACKEND`` > ``cfg.backend`` >
     platform default; unsupported (scheme, dtype) pairs fall back to the
     'xla' reference backend).
+
+    ``cfg`` is an EmulationConfig or a precision-spec string; omitted, it
+    resolves through the ambient scope / ``REPRO_EMULATION`` env (see
+    ``repro.resolve_config``), defaulting to the historical ozaki1-p4.
+    ``scheme=``/``precision=`` are deprecated shims for pre-spec callers.
 
     Blocks come from the per-(shape, p, dtype, backend) cache; operands
     not aligned to the backend's capability are zero-padded to the
@@ -320,17 +350,29 @@ def emulated_matmul(a: jax.Array, b, *,
     cfg = _resolve_cfg(cfg, scheme, precision)
     if _is_prepared(b):
         from repro.kernels import prepared
+        if cfg.scheme == "native":
+            # Mirrors repro.dot_general: the slices are Scheme-I data, so
+            # honoring a native request is impossible — refuse rather than
+            # silently emulate.
+            raise ValueError(
+                "a PreparedOperand rhs is Scheme-I data; it cannot be "
+                "consumed under a 'native' config (pass the float weight "
+                "instead)")
         if a.ndim != 2:
-            raise ValueError(f"emulated_matmul is 2-D; got lhs {a.shape} "
-                             "(use emulated_matmul_batched)")
+            raise ValueError(
+                f"emulated_matmul is strictly 2-D; got lhs {a.shape} — use "
+                "repro.dot_general / repro.einsum for batched or "
+                "higher-rank contractions (or emulated_matmul_batched)")
         if out_dtype is None:
             out_dtype = cfg.out_dtype
         if out_dtype is None:
             out_dtype = jnp.promote_types(a.dtype, jnp.float32)
         return prepared.matmul_prepared(a, b, out_dtype=out_dtype)
     if a.ndim != 2 or b.ndim != 2:
-        raise ValueError(f"emulated_matmul is 2-D; got {a.shape} @ {b.shape} "
-                         "(use emulated_matmul_batched)")
+        raise ValueError(
+            f"emulated_matmul is strictly 2-D; got {a.shape} @ {b.shape} — "
+            "use repro.dot_general / repro.einsum for batched or "
+            "higher-rank contractions (or emulated_matmul_batched)")
     if cfg.scheme == "native":
         out_dtype = (out_dtype or cfg.out_dtype
                      or jnp.promote_types(a.dtype, b.dtype))
@@ -366,12 +408,16 @@ def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
         out = emulated_matmul(a.reshape(-1, a.shape[-1]), b, **kw)
         return out.reshape(*lead, b.shape[-1])
     if a.ndim != b.ndim or a.shape[:-2] != b.shape[:-2]:
-        raise ValueError(f"incompatible batch dims {a.shape} @ {b.shape}")
+        raise ValueError(
+            f"emulated_matmul_batched needs matching leading (batch) axes; "
+            f"got lhs {a.shape} (leading {a.shape[:-2]}) @ rhs {b.shape} "
+            f"(leading {b.shape[:-2]}) — repro.dot_general handles "
+            "asymmetric batch/contraction layouts")
     fn = functools.partial(emulated_matmul_batched, **kw)
     return jax.vmap(fn)(a, b)
 
 
-def maybe_emulated_matmul(a: jax.Array, b, cfg: EmulationConfig):
+def auto_fused_matmul(a: jax.Array, b, cfg: EmulationConfig):
     """'auto'-impl hook: the fused kernel when the 2-D problem is naturally
     tile-aligned for the selected backend, else None (caller falls back to
     the XLA expansion — padding is reserved for explicit ``impl='pallas'``
@@ -394,6 +440,15 @@ def maybe_emulated_matmul(a: jax.Array, b, cfg: EmulationConfig):
     if not plan.aligned:
         return None
     return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks, plan.backend)
+
+
+def maybe_emulated_matmul(a: jax.Array, b, cfg: EmulationConfig):
+    """Deprecated name for :func:`auto_fused_matmul`."""
+    warnings.warn(
+        "maybe_emulated_matmul is deprecated; call auto_fused_matmul "
+        "(or the repro.dot_general/einsum front door)",
+        DeprecationWarning, stacklevel=2)
+    return auto_fused_matmul(a, b, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -428,8 +483,23 @@ def resolve_policy(policy, mesh=None):
        'gpu' backend); every other combination — multi-device meshes,
        CPU hosts, cross-platform backend requests — rewrites to 'xla' so
        the emulation partitions like any other dot.
+
+    A policy whose ``default`` is None (unset) first materializes the
+    ambient config through ``repro.resolve_config`` — the launch layer
+    consumes the documented resolver, so ``with repro.emulation(...)``
+    and ``REPRO_EMULATION`` configure whole training/serving runs and
+    still pass through the clamps above.
     """
-    sites = [policy.default] + [cfg for _, cfg in policy.overrides]
+    default = policy.default
+    if default is None:
+        from repro import api
+        default = api.resolve_config()
+        if default.scheme != "native":
+            # Materialize the ambient config NOW (even when no clamp will
+            # fire, e.g. '+xla' specs): the step functions built from this
+            # policy trace lazily, possibly after the scope has exited.
+            policy = dataclasses.replace(policy, default=default)
+    sites = [default] + [cfg for _, cfg in policy.overrides]
     if all(c.scheme == "native" or c.impl == "xla" for c in sites):
         return policy
 

@@ -16,12 +16,16 @@ that *does* tile (slicing, interleaving, the INT32 accumulation, modular
 reduction) now runs inside the kernels.
 
 Routing (alignment checks, block caching, padding, batching) lives in
-repro.kernels.dispatch; ``maybe_fused_matmul`` is kept as a thin alias of
-``dispatch.maybe_emulated_matmul`` for existing callers.
+repro.kernels.dispatch.  ``cfg`` is optional on every wrapper here: when
+omitted (or given as a spec string) it resolves through the one
+documented resolver, ``repro.resolve_config`` — explicit arg > innermost
+``repro.emulation`` scope > ``REPRO_EMULATION`` env > the wrapper's own
+scheme default — instead of each call-site threading cfg kwargs by hand.
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -33,14 +37,32 @@ from repro.kernels import dispatch, ozaki1, ozaki2, ozaki3m
 from repro.kernels.matmul_int8 import int8_matmul  # noqa: F401  (re-export)
 
 
-@partial(jax.jit, static_argnames=("cfg", "out_dtype", "blocks"))
-def fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
-                         out_dtype=jnp.float32, blocks=None) -> jax.Array:
-    """End-to-end EmuGEMM-I: (M,K) x (K,N) float -> (M,N) out_dtype.
+def _resolve(cfg, scheme: str, p: int) -> EmulationConfig:
+    """Resolve an optional cfg/spec for a scheme-pinned wrapper.
 
-    ``blocks`` (from ``dispatch.plan_emulated``) skips the re-search; the
-    decomposition site follows ``cfg.decomp``.
+    Resolution happens *before* the jitted body (cfg is a static
+    argument): a cached trace can never capture a stale ambient scope.
+    An *explicit* cfg of the wrong scheme is a caller error; an ambient
+    config of another scheme (REPRO_EMULATION=native, an ozaki2 scope
+    around a scheme1 wrapper) is simply not for this wrapper — it falls
+    back to the pinned default rather than break explicit kernel calls.
     """
+    from repro import api
+    if cfg is not None:
+        cfg = api.precision(cfg)
+        if cfg.scheme != scheme:
+            raise ValueError(f"this wrapper is {scheme}-only; got "
+                             f"scheme={cfg.scheme!r}")
+        return cfg
+    ambient = api.current_emulation()
+    if ambient is not None and ambient.scheme == scheme:
+        return ambient
+    return EmulationConfig(scheme=scheme, p=p)
+
+
+@partial(jax.jit, static_argnames=("cfg", "out_dtype", "blocks"))
+def _fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                          out_dtype=jnp.float32, blocks=None) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
     p = cfg.p
@@ -76,6 +98,19 @@ def fused_scheme1_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
         p, beta, blocks, out_dtype=out_dtype)
 
 
+def fused_scheme1_matmul(a: jax.Array, b: jax.Array,
+                         cfg: "EmulationConfig | str | None" = None,
+                         out_dtype=jnp.float32, blocks=None) -> jax.Array:
+    """End-to-end EmuGEMM-I: (M,K) x (K,N) float -> (M,N) out_dtype.
+
+    ``cfg`` resolves through ``repro.resolve_config`` (ozaki1-p4 when
+    nothing is configured); ``blocks`` (from ``dispatch.plan_emulated``)
+    skips the re-search; the decomposition site follows ``cfg.decomp``.
+    """
+    return _fused_scheme1_matmul(a, b, _resolve(cfg, "ozaki1", 4),
+                                 out_dtype=out_dtype, blocks=blocks)
+
+
 def _canonical_residues(res8: jax.Array, moduli) -> jax.Array:
     """Balanced (p, M, N) int8 residues -> canonical [0, m_l) int32.
 
@@ -88,9 +123,8 @@ def _canonical_residues(res8: jax.Array, moduli) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("cfg", "out_dtype"))
-def fused_scheme2_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
-                         out_dtype=jnp.float32) -> jax.Array:
-    """End-to-end EmuGEMM-II real GEMM."""
+def _fused_scheme2_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                          out_dtype=jnp.float32) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
     moduli = cfg.resolved_moduli()
@@ -106,10 +140,18 @@ def fused_scheme2_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     return c_int / (mu.astype(out_t) * nu.astype(out_t))
 
 
+def fused_scheme2_matmul(a: jax.Array, b: jax.Array,
+                         cfg: "EmulationConfig | str | None" = None,
+                         out_dtype=jnp.float32) -> jax.Array:
+    """End-to-end EmuGEMM-II real GEMM (cfg via ``repro.resolve_config``,
+    ozaki2 with the default 8-modulus set when nothing is configured)."""
+    return _fused_scheme2_matmul(a, b, _resolve(cfg, "ozaki2", 8),
+                                 out_dtype=out_dtype)
+
+
 @partial(jax.jit, static_argnames=("cfg", "out_dtype"))
-def fused_3m_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
-                    out_dtype=None) -> jax.Array:
-    """End-to-end EmuGEMM-II complex GEMM via fused 3M."""
+def _fused_3m_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                     out_dtype=None) -> jax.Array:
     if out_dtype is None:
         out_dtype = jnp.float64 if a.dtype == jnp.complex128 else jnp.float32
     out_t = jnp.dtype(out_dtype).type
@@ -151,6 +193,19 @@ def fused_3m_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     return jax.lax.complex(cr * inv, ci * inv)
 
 
+def fused_3m_matmul(a: jax.Array, b: jax.Array,
+                    cfg: "EmulationConfig | str | None" = None,
+                    out_dtype=None) -> jax.Array:
+    """End-to-end EmuGEMM-II complex GEMM via fused 3M (cfg via
+    ``repro.resolve_config``)."""
+    return _fused_3m_matmul(a, b, _resolve(cfg, "ozaki2", 8),
+                            out_dtype=out_dtype)
+
+
 def maybe_fused_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig):
-    """Dispatch hook for repro.core.emulated: fused kernel or None."""
-    return dispatch.maybe_emulated_matmul(a, b, cfg)
+    """Deprecated dispatch hook; use ``dispatch.auto_fused_matmul``."""
+    warnings.warn(
+        "ops.maybe_fused_matmul is deprecated; call "
+        "dispatch.auto_fused_matmul (or repro.dot_general/einsum)",
+        DeprecationWarning, stacklevel=2)
+    return dispatch.auto_fused_matmul(a, b, cfg)

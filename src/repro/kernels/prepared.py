@@ -262,8 +262,16 @@ def _step_cacheable(cfg) -> bool:
 
 
 def policy_caches_weights(policy) -> bool:
-    """Does any call-site family of this GemmPolicy cache weights?"""
+    """Does any call-site family of this GemmPolicy cache weights?
+
+    An unset (None) default defers to the ambient resolver, exactly as
+    ``for_site`` would; launch callers run ``dispatch.resolve_policy``
+    first, which materializes the ambient config into ``default``.
+    """
     sites = [policy.default] + [cfg for _, cfg in policy.overrides]
+    if policy.default is None:
+        from repro import api
+        sites[0] = api.resolve_config()
     return any(_step_cacheable(cfg) for cfg in sites)
 
 

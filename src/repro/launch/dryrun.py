@@ -29,7 +29,8 @@ from repro import configs
 from repro.configs.base import ShapeSpec
 from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
-from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro import api
+from repro.models.common import GemmPolicy
 from repro.utils import roofline
 
 
@@ -38,7 +39,7 @@ def run_cell(arch_id: str, shape: ShapeSpec, multi_pod: bool,
     arch = configs.get_config(arch_id)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
-    policy = GemmPolicy(default=parse_gemm_spec(gemm))
+    policy = GemmPolicy(default=api.precision(gemm))
     rec = {"arch": arch_id, "shape": shape.name,
            "mesh": "2x16x16" if multi_pod else "16x16", "gemm": gemm,
            "kind": shape.kind}

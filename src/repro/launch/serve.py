@@ -17,10 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import api, configs
+from repro.kernels import dispatch
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
-from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.models.common import GemmPolicy
 
 
 class ServeEngine:
@@ -30,7 +31,11 @@ class ServeEngine:
         self.mcfg = arch.model
         self.mesh = mesh
         self.max_seq = max_seq
-        self.policy = policy or GemmPolicy()
+        # The one resolver decides the engine's emulation: an explicit
+        # policy wins, else the ambient repro.emulation scope /
+        # REPRO_EMULATION env configures the whole serving session;
+        # resolve_policy then clamps impls to what this mesh executes.
+        self.policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
         self.params = params if params is not None else M.init_params(
             jax.random.PRNGKey(seed), self.mcfg)
         if prepare:
@@ -69,7 +74,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--gemm", default="native")
+    ap.add_argument("--gemm", default=None,
+                    help="precision spec (e.g. ozaki1-p4, ozaki2-m8, "
+                         "bits=40); omitted, the ambient REPRO_EMULATION "
+                         "env / repro.emulation scope decides")
     ap.add_argument("--prepare", action="store_true",
                     help="decompose Scheme-I projection weights once per "
                          "session (PreparedOperand serving)")
@@ -84,8 +92,9 @@ def main(argv=None):
     prompts = rng.integers(0, arch.model.vocab,
                            (args.requests, args.prompt_len)).astype(np.int32)
     with mesh:
+        gemm = api.precision(args.gemm) if args.gemm else None
         eng = ServeEngine(arch, mesh, args.prompt_len + args.gen,
-                          GemmPolicy(default=parse_gemm_spec(args.gemm)),
+                          GemmPolicy(default=gemm),
                           prepare=args.prepare)
         t0 = time.time()
         toks = eng.generate(prompts, args.gen)

@@ -17,8 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.kernels import dispatch
 from repro.models import model as M
-from repro.models.common import (GemmPolicy, NATIVE_POLICY,
-                                 cross_entropy_loss)
+from repro.models.common import GemmPolicy, cross_entropy_loss
 from repro.optim import clip_by_global_norm, make_optimizer, warmup_cosine
 from repro.parallel import sharding as shd
 
@@ -104,17 +103,20 @@ def make_loss_fn(arch: ArchConfig, policy: GemmPolicy):
 
 
 def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
-                    policy: GemmPolicy = NATIVE_POLICY,
+                    policy: GemmPolicy | None = None,
                     donate: bool = True):
-    # The dispatcher owns impl selection: fused Pallas call-sites are
-    # rewritten to the XLA expansion wherever GSPMD must partition them.
+    # The dispatcher owns emulation selection: resolve_policy first
+    # materializes an unset policy default through the one resolver
+    # (explicit policy > ambient repro.emulation scope > REPRO_EMULATION
+    # env > native), then rewrites fused Pallas call-sites to the XLA
+    # expansion wherever GSPMD must partition them.
     # cfg.cache_weights survives that rewrite: under impl='xla' the
     # once-per-step PreparedOperand slices are plain int8 arrays the
     # partitioner handles like any other operand, so emulated training
     # still decomposes each projection weight once per step (the VJP
     # prepares in forward, the backward dA consumes the twin) instead of
     # 3x per layer (forward, remat re-forward, backward B^T re-split).
-    policy = dispatch.resolve_policy(policy, mesh)
+    policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
     loss_fn = make_loss_fn(arch, policy)
     _, opt_update = make_optimizer(arch.train.optimizer)
     n_micro = arch.train.microbatches
@@ -192,8 +194,8 @@ def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
 # ---------------------------------------------------------------------------
 
 def make_prefill_step(arch: ArchConfig, shape: ShapeSpec, mesh,
-                      policy: GemmPolicy = NATIVE_POLICY):
-    policy = dispatch.resolve_policy(policy, mesh)
+                      policy: GemmPolicy | None = None):
+    policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
     mcfg = arch.model
 
     if not mcfg.causal:   # encoder: 'prefill' is a plain forward pass
@@ -222,9 +224,9 @@ def make_prefill_step(arch: ArchConfig, shape: ShapeSpec, mesh,
 
 
 def make_decode_step(arch: ArchConfig, shape: ShapeSpec, mesh,
-                     policy: GemmPolicy = NATIVE_POLICY,
+                     policy: GemmPolicy | None = None,
                      donate: bool = True):
-    policy = dispatch.resolve_policy(policy, mesh)
+    policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
     mcfg = arch.model
 
     def decode(params, cache, tokens, pos):

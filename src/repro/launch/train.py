@@ -21,13 +21,13 @@ import dataclasses
 
 import jax
 
-from repro import configs
+from repro import api, configs
 from repro.configs.base import ShapeSpec
 from repro.data import make_batch_iterator
 from repro.launch import steps as S
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
-from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro.models.common import GemmPolicy
 from repro.optim import make_optimizer
 from repro.runtime import Trainer
 from repro.runtime.trainer import FailureInjector
@@ -43,7 +43,10 @@ def main(argv=None):
                          "the remainder")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--gemm", default="native")
+    ap.add_argument("--gemm", default=None,
+                    help="precision spec (e.g. ozaki1-p3, ozaki1-p4+cached, "
+                         "bits=30); omitted, the ambient REPRO_EMULATION "
+                         "env / repro.emulation scope decides")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--fail-at", type=int, default=None)
@@ -55,7 +58,8 @@ def main(argv=None):
             else configs.get_config(args.arch))
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
     mesh = make_host_mesh(args.model_parallel)
-    policy = GemmPolicy(default=parse_gemm_spec(args.gemm))
+    policy = GemmPolicy(
+        default=api.precision(args.gemm) if args.gemm else None)
 
     opt_init, _ = make_optimizer(arch.train.optimizer)
 

@@ -9,6 +9,7 @@ backend is a first-class, per-call-site-configurable feature of every model
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Mapping
 
 import jax
@@ -29,36 +30,46 @@ class GemmPolicy:
 
     Families: 'attn' (q/k/v/o projections), 'ffn' (MLP/expert matmuls),
     'logits' (output head), 'emb' (input projections of stub frontends).
-    Anything absent falls back to ``default``.
+    Anything absent falls back to ``default``; a ``default`` of None
+    (unset) defers to the ambient resolver (``repro.resolve_config``:
+    innermost ``repro.emulation`` scope > ``REPRO_EMULATION`` env >
+    native), so a model built with the bare ``GemmPolicy()`` becomes
+    emulated simply by running it inside a scope.
     """
-    default: EmulationConfig = NATIVE
+    default: EmulationConfig | None = None
     overrides: tuple[tuple[str, EmulationConfig], ...] = ()
 
     def for_site(self, site: str) -> EmulationConfig:
         for name, cfg in self.overrides:
             if name == site:
                 return cfg
-        return self.default
+        if self.default is not None:
+            return self.default
+        from repro import api
+        return api.resolve_config()
 
 
-NATIVE_POLICY = GemmPolicy()
+# Pins native explicitly — reference/oracle paths stay exact fp32 even
+# inside an ambient emulation scope. (A bare GemmPolicy() is the
+# ambient-deferring policy; this named constant must not defer.)
+NATIVE_POLICY = GemmPolicy(default=NATIVE)
 
 
 def parse_gemm_spec(spec: str) -> EmulationConfig:
-    """'native' | 'ozaki1-p4' | 'ozaki2-p9' [+ '-cached'] -> EmulationConfig.
+    """Deprecated: use ``repro.precision`` (the unified spec grammar).
 
-    Model-level emulation always uses the XLA expansion (impl='xla'): it
-    partitions under pjit/GSPMD like any other dot. The fused Pallas
-    kernels are invoked explicitly (repro.kernels.ops) on TPU, and in
-    interpret mode they lower to a sequential grid loop that GSPMD cannot
-    partition — never route a distributed model through them on CPU.
-
-    The '-cached' suffix (Scheme I) turns on the per-step weight cache:
-    the custom VJP decomposes each rhs once per step and the backward
-    consumes the K-transposed twin (repro.kernels.prepared) — valid under
-    the XLA expansion too, where the cached slices are plain int8 arrays
-    GSPMD partitions like any other operand.
+    Kept for pre-spec callers; accepts the historical grammar ('native',
+    'ozaki1-p4', 'ozaki2-p9', '-cached' suffix) and pins ``impl='xla'``
+    the way model-level call-sites always did. ``repro.precision`` +
+    ``dispatch.resolve_policy`` subsume both jobs: the new specs carry
+    '+cached'/'+xla' suffixes and the policy resolver clamps fused impls
+    wherever GSPMD must partition.
     """
+    warnings.warn(
+        "parse_gemm_spec is deprecated; use repro.precision('<spec>') "
+        "(note the '+cached' spelling) — resolve_policy pins impl where "
+        "partitioning requires it",
+        DeprecationWarning, stacklevel=2)
     if spec == "native":
         return NATIVE
     cached = spec.endswith("-cached")

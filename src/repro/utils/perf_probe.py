@@ -18,7 +18,8 @@ import jax
 from repro import configs
 from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
-from repro.models.common import GemmPolicy, parse_gemm_spec
+from repro import api
+from repro.models.common import GemmPolicy
 from repro.utils import roofline
 
 
@@ -26,7 +27,7 @@ def compile_cell(arch_id, shape_name, gemm="native", multi=False):
     arch = configs.get_config(arch_id)
     shape = [s for s in arch.shapes() if s.name == shape_name][0]
     mesh = make_production_mesh(multi_pod=multi)
-    policy = GemmPolicy(default=parse_gemm_spec(gemm))
+    policy = GemmPolicy(default=api.precision(gemm))
     with mesh:
         if shape.kind == "train":
             step = S.make_train_step(arch, mesh, shape, policy, donate=False)

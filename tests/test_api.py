@@ -1,0 +1,623 @@
+"""The unified precision API: specs, ambient scopes, einsum/dot_general.
+
+Covers the three pillars of repro.api plus the public-surface snapshot:
+
+* parse/print round-trip properties of the precision-spec mini-language,
+  and the plan_precision routing (``bits=N`` specs);
+* scope nesting / threading semantics of ``repro.emulation`` and the
+  documented resolver precedence (explicit > scope > env > default);
+* ``repro.einsum``/``dot_general`` vs the ``jnp.einsum`` oracle across
+  the contraction-pattern zoo (batch dims, multi-axis contractions,
+  implicit outputs, ellipses, complex, PreparedOperand rhs), plus
+  bit-identity with the 2-D dispatcher where the fused path is exact;
+* the deprecation shims (old entry points warn but keep working);
+* an API snapshot so public-surface drift fails loudly.
+"""
+
+import inspect
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.precision import (DEFAULT_MODULI, EmulationConfig,
+                                  default_moduli, plan_precision)
+from repro.kernels import dispatch, prepared
+
+# ---------------------------------------------------------------------------
+# Pillar 1: precision specs.
+# ---------------------------------------------------------------------------
+
+CANONICAL_SPECS = [
+    "native",
+    "ozaki1-p2",
+    "ozaki1-p4",
+    "ozaki2-m6",
+    "ozaki2-m12",
+    "ozaki1-p4@gpu",
+    "ozaki1-p3+cached",
+    "ozaki1-p4@gpu+cached",
+    "ozaki1-p4+xla",
+    "ozaki2-m8@tpu+pallas",
+    "native@xla",
+]
+
+
+@pytest.mark.parametrize("spec", CANONICAL_SPECS)
+def test_spec_roundtrip(spec):
+    """to_spec is the inverse of parse on canonical specs."""
+    cfg = repro.precision(spec)
+    assert cfg.to_spec() == spec
+    assert EmulationConfig.parse(cfg.to_spec()) == cfg
+
+
+def test_parse_is_idempotent_on_configs():
+    cfg = repro.precision("ozaki1-p4")
+    assert repro.precision(cfg) is cfg
+    assert EmulationConfig.parse(cfg) is cfg
+
+
+def test_spec_suffix_order_is_canonicalized():
+    a = repro.precision("ozaki1-p4+cached@gpu")
+    b = repro.precision("ozaki1-p4@gpu+cached")
+    assert a == b
+    assert a.to_spec() == "ozaki1-p4@gpu+cached"
+
+
+def test_ozaki2_spec_pins_moduli():
+    cfg = repro.precision("ozaki2-m6")
+    assert cfg.moduli == default_moduli(6)
+    # legacy '-p' alias accepted, canonicalized to '-m'
+    assert repro.precision("ozaki2-p6") == cfg
+    assert cfg.to_spec() == "ozaki2-m6"
+
+
+def test_bits_spec_routes_through_plan_precision():
+    cfg = repro.precision("bits=40")
+    assert cfg == plan_precision(40, 4096)
+    assert cfg.scheme == "ozaki2" and cfg.moduli is not None
+    # planned configs round-trip (the pinned moduli make this hold)
+    assert EmulationConfig.parse(cfg.to_spec()) == cfg
+    cfg_k = repro.precision("bits=20:k256")
+    assert cfg_k == plan_precision(20, 256)
+
+
+def test_precision_overrides_kwargs():
+    cfg = repro.precision("ozaki1-p4", bwd_p=2)
+    assert cfg.p == 4 and cfg.bwd_p == 2
+
+
+@pytest.mark.parametrize("bad", [
+    "ozaki3-p4",        # unknown scheme
+    "ozaki1-m4",        # ozaki1 counts slices with -p
+    "ozaki1-p0",        # count must be >= 1
+    "ozaki1p4",         # missing dash
+    "bits=",            # missing number
+    "native+cached",    # cached is Scheme-I-only
+    "ozaki2-m6+cached",
+    "ozaki1-p4+frobnicate",
+    "ozaki1-p4@gpu@tpu",
+    "",
+])
+def test_bad_specs_raise(bad):
+    with pytest.raises(ValueError):
+        repro.precision(bad)
+
+
+def test_precision_rejects_non_spec_types():
+    with pytest.raises(TypeError):
+        repro.precision(42)
+
+
+def test_to_spec_names_unrepresentable_fields():
+    cfg = EmulationConfig(scheme="ozaki1", p=4, beta=5, bwd_p=2)
+    with pytest.raises(ValueError, match="beta.*bwd_p"):
+        cfg.to_spec()
+    with pytest.raises(ValueError, match="moduli"):
+        EmulationConfig(scheme="ozaki2", p=2, moduli=(251, 241)).to_spec()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: plan_precision prefer semantics + pinned moduli.
+# ---------------------------------------------------------------------------
+
+def test_plan_precision_pins_ozaki2_moduli():
+    cfg = plan_precision(48, 4096)
+    assert cfg.scheme == "ozaki2"
+    assert cfg.moduli == default_moduli(cfg.p)
+
+
+def test_plan_precision_prefer_unreachable_raises():
+    max2 = EmulationConfig(
+        scheme="ozaki2", p=len(DEFAULT_MODULI)).bits(4096)
+    with pytest.raises(ValueError, match=f"at most {max2} bits"):
+        plan_precision(max2 + 10, 4096, prefer="ozaki2")
+    with pytest.raises(ValueError, match="ozaki1.*at most"):
+        plan_precision(1000, 4096, prefer="ozaki1")
+    with pytest.raises(ValueError, match="prefer"):
+        plan_precision(20, 4096, prefer="native")
+
+
+def test_plan_precision_prefer_reachable_is_honored():
+    cfg = plan_precision(20, 4096, prefer="ozaki2")
+    assert cfg.scheme == "ozaki2" and cfg.bits(4096) >= 20
+
+
+# ---------------------------------------------------------------------------
+# Pillar 2: ambient scopes + the resolver.
+# ---------------------------------------------------------------------------
+
+def test_scope_nesting_innermost_wins():
+    assert repro.current_emulation() is None
+    with repro.emulation("ozaki1-p4") as outer:
+        assert repro.resolve_config() is outer
+        with repro.emulation("ozaki2-m6") as inner:
+            assert repro.resolve_config() is inner
+        with repro.emulation("native"):
+            assert repro.resolve_config().scheme == "native"
+        assert repro.resolve_config() is outer
+    assert repro.current_emulation() is None
+    assert repro.resolve_config().scheme == "native"
+
+
+def test_scope_pops_on_exception():
+    with pytest.raises(RuntimeError):
+        with repro.emulation("ozaki1-p4"):
+            raise RuntimeError("boom")
+    assert repro.current_emulation() is None
+
+
+def test_resolver_precedence(monkeypatch):
+    """explicit arg > innermost scope > env > (call-site) default."""
+    monkeypatch.setenv(repro.EMULATION_ENV_VAR, "ozaki2-m8")
+    assert repro.resolve_config().scheme == "ozaki2"      # env
+    with repro.emulation("ozaki1-p3"):
+        assert repro.resolve_config().p == 3              # scope beats env
+        assert repro.resolve_config("ozaki1-p5").p == 5   # arg beats scope
+    monkeypatch.delenv(repro.EMULATION_ENV_VAR)
+    assert repro.resolve_config().scheme == "native"      # platform default
+    assert repro.resolve_config(default="ozaki1-p2").p == 2
+
+
+def test_scopes_are_thread_local():
+    seen = {}
+
+    def worker():
+        seen["ambient"] = repro.current_emulation()
+        with repro.emulation("ozaki2-m6"):
+            seen["scoped"] = repro.resolve_config().scheme
+
+    with repro.emulation("ozaki1-p4"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        # the worker never saw this thread's scope...
+        assert seen["ambient"] is None
+        assert seen["scoped"] == "ozaki2"
+        # ...and its scope never leaked back
+        assert repro.resolve_config().scheme == "ozaki1"
+
+
+def test_gemm_policy_defers_to_ambient():
+    from repro.models.common import GemmPolicy
+    pol = GemmPolicy()
+    assert pol.for_site("ffn").scheme == "native"
+    with repro.emulation("ozaki1-p4"):
+        assert pol.for_site("ffn").scheme == "ozaki1"
+        # an explicit default still wins over the scope
+        pinned = GemmPolicy(default=repro.precision("ozaki2-m6"))
+        assert pinned.for_site("ffn").scheme == "ozaki2"
+
+
+def test_resolve_policy_materializes_ambient():
+    from repro.models.common import GemmPolicy
+    with repro.emulation("ozaki1-p3"):
+        resolved = dispatch.resolve_policy(GemmPolicy(), mesh=None)
+    assert resolved.default is not None
+    assert resolved.default.scheme == "ozaki1" and resolved.default.p == 3
+    # '+xla' specs short-circuit the clamps but must still materialize:
+    # the step functions trace lazily, possibly after the scope exits
+    with repro.emulation("ozaki1-p3+xla+cached"):
+        resolved = dispatch.resolve_policy(GemmPolicy(), mesh=None)
+    assert resolved.default is not None and resolved.default.cache_weights
+    assert resolved.default.p == 3
+    # native ambient: pass-through untouched (identity preserved)
+    pol = GemmPolicy()
+    assert dispatch.resolve_policy(pol, mesh=None) is pol
+
+
+def test_native_policy_pins_native_inside_scope(make_matrix):
+    """NATIVE_POLICY is the oracle policy: it must stay exact fp32 even
+    inside an ambient emulation scope (unlike the deferring GemmPolicy())."""
+    from repro.models.common import NATIVE_POLICY, dense
+    x = jnp.asarray(make_matrix((4, 32)))
+    w = jnp.asarray(make_matrix((32, 16)))
+    with repro.emulation("ozaki1-p2"):
+        assert NATIVE_POLICY.for_site("ffn").scheme == "native"
+        out = dense(x, w, NATIVE_POLICY, "ffn")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.einsum("ij,jk->ik", x, w)))
+
+
+def test_ops_wrappers_survive_mismatched_ambient(make_matrix, monkeypatch):
+    """An ambient config of another scheme is not for a scheme-pinned
+    wrapper: it falls back to its own default instead of erroring."""
+    from repro.kernels import ops
+    a = jnp.asarray(make_matrix((128, 128)))
+    b = jnp.asarray(make_matrix((128, 128)))
+    monkeypatch.setenv(repro.EMULATION_ENV_VAR, "native")
+    out_env = np.asarray(ops.fused_scheme1_matmul(a, b))
+    monkeypatch.delenv(repro.EMULATION_ENV_VAR)
+    expected = np.asarray(ops.fused_scheme1_matmul(
+        a, b, EmulationConfig(scheme="ozaki1", p=4)))
+    np.testing.assert_array_equal(out_env, expected)
+    with repro.emulation("ozaki2-m8"):
+        out_scope = np.asarray(ops.fused_scheme1_matmul(a, b))
+    np.testing.assert_array_equal(out_scope, expected)
+    # a *matching* ambient scope is consumed
+    with repro.emulation("ozaki1-p3"):
+        out_p3 = np.asarray(ops.fused_scheme1_matmul(a, b))
+    np.testing.assert_array_equal(
+        out_p3, np.asarray(ops.fused_scheme1_matmul(
+            a, b, EmulationConfig(scheme="ozaki1", p=3))))
+    # an explicit wrong-scheme cfg is still a caller error
+    with pytest.raises(ValueError, match="ozaki1-only"):
+        ops.fused_scheme1_matmul(a, b, EmulationConfig(scheme="ozaki2", p=8))
+
+
+def test_prepared_rhs_refused_under_native_everywhere(make_matrix):
+    cfg = repro.precision("ozaki1-p4")
+    prep = prepared.prepare_rhs(jnp.asarray(make_matrix((32, 16))), cfg)
+    a = jnp.asarray(make_matrix((4, 32)))
+    with pytest.raises(ValueError, match="native"):
+        dispatch.emulated_matmul(a, prep, cfg="native")
+    with repro.emulation("native"):
+        with pytest.raises(ValueError, match="native"):
+            dispatch.emulated_matmul(a, prep)
+
+
+def test_einsum_broadcasts_size1_dims(make_matrix):
+    a = jnp.asarray(make_matrix((1, 4, 8)))
+    b = jnp.asarray(make_matrix((3, 8, 5)))
+    ref = np.asarray(jnp.einsum("bij,bjk->bik", a, b))
+    out = np.asarray(repro.einsum("bij,bjk->bik", a, b,
+                                  precision="ozaki1-p4"))
+    assert out.shape == ref.shape == (3, 4, 5)
+    assert np.abs(out - ref).max() / np.abs(ref).max() < 1e-5
+    # size-1 contracted dim broadcasts too
+    a1 = jnp.asarray(make_matrix((4, 1)))
+    b1 = jnp.asarray(make_matrix((8, 5)))
+    ref1 = np.asarray(jnp.einsum("ij,jk->ik", a1, b1))
+    out1 = np.asarray(repro.einsum("ij,jk->ik", a1, b1,
+                                   precision="ozaki1-p4"))
+    assert np.abs(out1 - ref1).max() / np.abs(ref1).max() < 1e-5
+
+
+def test_prepared_dot_general_validates_dims(make_matrix):
+    cfg = repro.precision("ozaki1-p4")
+    prep = prepared.prepare_rhs(jnp.asarray(make_matrix((32, 16))), cfg)
+    x = jnp.asarray(make_matrix((2, 3, 32)))
+    with pytest.raises(ValueError, match="out of range"):
+        repro.dot_general(x, prep, (((5,), (0,)), ((), ())), precision=cfg)
+
+
+def test_dispatch_default_consults_scope(make_matrix):
+    a = jnp.asarray(make_matrix((32, 32)))
+    b = jnp.asarray(make_matrix((32, 32)))
+    with repro.emulation("native"):
+        out = dispatch.emulated_matmul(a, b)
+        assert jnp.array_equal(out, a @ b)
+
+
+def test_dense_under_ambient_scope(make_matrix):
+    from repro.models.common import GemmPolicy, dense
+    x = jnp.asarray(make_matrix((4, 32)))
+    w = jnp.asarray(make_matrix((32, 16)))
+    ref = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    with repro.emulation("ozaki1-p4+xla"):
+        out = np.asarray(dense(x, w, GemmPolicy(), "ffn"))
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert -np.log2(rel) > 18
+    native = np.asarray(dense(x, w, GemmPolicy(), "ffn"))
+    assert np.allclose(native, np.asarray(x @ w))
+
+
+# ---------------------------------------------------------------------------
+# Pillar 3: einsum / dot_general vs the jnp.einsum oracle.
+# ---------------------------------------------------------------------------
+
+# (subscripts, lhs shape, rhs shape) — the contraction-pattern zoo.
+EINSUM_CASES = [
+    ("ij,jk->ik", (24, 48), (48, 16)),          # plain 2-D
+    ("bij,bjk->bik", (3, 16, 32), (3, 32, 8)),  # shared batch axis
+    ("...k,kn->...n", (2, 3, 32), (32, 16)),    # model-zoo projection
+    ("bqhd,bkhd->bhqk", (2, 5, 3, 16), (2, 7, 3, 16)),   # attention scores
+    ("bhqk,bkhd->bqhd", (2, 3, 5, 7), (2, 7, 3, 16)),    # attention values
+    ("abij,abjk->abik", (2, 2, 8, 16), (2, 2, 16, 4)),   # two batch axes
+    ("ijk,kjl->il", (6, 3, 16), (16, 3, 5)),    # two contraction axes
+    ("ij,jk", (16, 24), (24, 8)),               # implicit output
+    ("ij,jk->k", (16, 24), (24, 8)),            # summed-out lhs free axis
+    ("ij,kj->ik", (12, 32), (8, 32)),           # transposed rhs
+    ("i,ij->j", (24,), (24, 8)),                # vector-matrix
+    ("i,j->ij", (9, ), (11,)),                  # outer product (K=1)
+]
+
+
+@pytest.mark.parametrize("sub,sa,sb", EINSUM_CASES,
+                         ids=[c[0] for c in EINSUM_CASES])
+@pytest.mark.parametrize("spec", ["ozaki1-p4", "ozaki2-m8"])
+def test_einsum_matches_oracle(make_matrix, sub, sa, sb, spec):
+    a = jnp.asarray(make_matrix(sa))
+    b = jnp.asarray(make_matrix(sb))
+    ref = np.einsum(sub, np.asarray(a, np.float64), np.asarray(b, np.float64))
+    out = np.asarray(repro.einsum(sub, a, b, precision=spec))
+    assert out.shape == ref.shape
+    rel = np.abs(out - ref).max() / (np.abs(ref).max() + 1e-30)
+    assert rel < 1e-5, (sub, spec, rel)
+
+
+def test_einsum_complex_both_schemes(make_matrix):
+    a = jnp.asarray(make_matrix((16, 32))) \
+        + 1j * jnp.asarray(make_matrix((16, 32)))
+    b = jnp.asarray(make_matrix((32, 8))) \
+        + 1j * jnp.asarray(make_matrix((32, 8)))
+    ref = np.asarray(jnp.einsum("ij,jk->ik", a, b))
+    for spec in ("ozaki1-p4", "ozaki2-m10"):   # 4M and 3M formulations
+        out = np.asarray(repro.einsum("ij,jk->ik", a, b, precision=spec))
+        rel = np.abs(out - ref).max() / np.abs(ref).max()
+        assert rel < 1e-5, (spec, rel)
+
+
+def test_einsum_native_matches_jnp(make_matrix):
+    a = jnp.asarray(make_matrix((8, 16)))
+    b = jnp.asarray(make_matrix((16, 4)))
+    out = repro.einsum("ij,jk->ik", a, b, precision="native")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.einsum("ij,jk->ik", a, b)),
+                               rtol=1e-6)
+
+
+def test_einsum_bit_identical_to_dispatcher_where_fused(make_matrix):
+    """On an aligned 2-D problem the front door lowers through exactly the
+    dispatcher's fused path — bit-identical, not merely close."""
+    a = jnp.asarray(make_matrix((128, 128)))
+    b = jnp.asarray(make_matrix((128, 128)))
+    cfg = repro.precision("ozaki1-p4")
+    via_einsum = np.asarray(repro.einsum("ij,jk->ik", a, b, precision=cfg))
+    via_dispatch = np.asarray(dispatch.emulated_matmul(a, b, cfg=cfg))
+    np.testing.assert_array_equal(via_einsum, via_dispatch)
+
+
+def test_einsum_under_ambient_scope(make_matrix):
+    a = jnp.asarray(make_matrix((16, 32)))
+    b = jnp.asarray(make_matrix((32, 8)))
+    with repro.emulation("ozaki1-p4"):
+        scoped = np.asarray(repro.einsum("ij,jk->ik", a, b))
+    explicit = np.asarray(repro.einsum("ij,jk->ik", a, b,
+                                       precision="ozaki1-p4"))
+    np.testing.assert_array_equal(scoped, explicit)
+    # no scope, no spec -> native
+    native = repro.einsum("ij,jk->ik", a, b)
+    np.testing.assert_allclose(np.asarray(native), np.asarray(a @ b),
+                               rtol=1e-6)
+
+
+def test_einsum_gradients_match_native(make_matrix):
+    a = jnp.asarray(make_matrix((2, 8, 16)))
+    b = jnp.asarray(make_matrix((2, 16, 4)))
+
+    def f_emu(a, b):
+        return jnp.sum(jnp.sin(repro.einsum("bij,bjk->bik", a, b,
+                                            precision="ozaki1-p4")))
+
+    def f_nat(a, b):
+        return jnp.sum(jnp.sin(jnp.einsum("bij,bjk->bik", a, b)))
+
+    ga_e, gb_e = jax.grad(f_emu, argnums=(0, 1))(a, b)
+    ga_n, gb_n = jax.grad(f_nat, argnums=(0, 1))(a, b)
+    for ge, gn in ((ga_e, ga_n), (gb_e, gb_n)):
+        np.testing.assert_allclose(
+            np.asarray(ge), np.asarray(gn), rtol=1e-2,
+            atol=1e-2 * float(jnp.abs(gn).max() + 1e-9))
+
+
+def test_dot_general_matches_lax(make_matrix):
+    a = jnp.asarray(make_matrix((3, 8, 16)))
+    b = jnp.asarray(make_matrix((3, 16, 4)))
+    dnums = (((2,), (1,)), ((0,), (0,)))
+    ref = np.asarray(jax.lax.dot_general(a, b, dnums))
+    out = np.asarray(repro.dot_general(a, b, dnums, precision="ozaki1-p4"))
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert rel < 1e-5
+    # negative axis indices normalize
+    out2 = np.asarray(repro.dot_general(a, b, (((-1,), (-2,)), ((0,), (0,))),
+                                        precision="ozaki1-p4"))
+    np.testing.assert_array_equal(out, out2)
+
+
+def test_dot_general_out_dtype_and_validation(make_matrix):
+    a = jnp.asarray(make_matrix((8, 16)))
+    b = jnp.asarray(make_matrix((16, 4)))
+    out = repro.dot_general(a, b, (((1,), (0,)), ((), ())),
+                            precision="ozaki1-p4", out_dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    with pytest.raises(ValueError, match="contracting dim"):
+        repro.dot_general(a, jnp.asarray(make_matrix((8, 4))),
+                          (((1,), (0,)), ((), ())), precision="ozaki1-p4")
+    with pytest.raises(ValueError, match="batch dim count"):
+        repro.dot_general(a, b, (((1,), (0,)), ((0,), ())),
+                          precision="ozaki1-p4")
+
+
+def test_einsum_prepared_rhs(make_matrix):
+    cfg = repro.precision("ozaki1-p4")
+    w = jnp.asarray(make_matrix((32, 16)))
+    prep = prepared.prepare_rhs(w, cfg)
+    x = jnp.asarray(make_matrix((2, 3, 32)))
+    ref = np.asarray(jnp.einsum("...k,kn->...n", x, w))
+    out = np.asarray(repro.einsum("...k,kn->...n", x, prep, precision=cfg))
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert rel < 1e-5
+    # dot_general spelling of the same contraction
+    out2 = np.asarray(repro.dot_general(x, prep, (((2,), (0,)), ((), ())),
+                                        precision=cfg))
+    np.testing.assert_array_equal(out, out2)
+    # the lhs contraction axis is free to sit anywhere...
+    xt = jnp.asarray(make_matrix((32, 4)))
+    out_t = np.asarray(repro.einsum("kb,kn->bn", xt, prep, precision=cfg))
+    ref_t = np.asarray(jnp.einsum("kb,kn->bn", xt, w))
+    assert np.abs(out_t - ref_t).max() / np.abs(ref_t).max() < 1e-5
+    # ...but the rhs layout is fixed at prepare time: transposing or
+    # batching the prepared operand is refused
+    with pytest.raises(ValueError, match="PreparedOperand"):
+        repro.einsum("bn,kn->bk", jnp.asarray(make_matrix((4, 16))), prep,
+                     precision=cfg)
+    with pytest.raises(ValueError, match="PreparedOperand"):
+        repro.dot_general(x, prep, (((2,), (0,)), ((0,), (0,))),
+                          precision=cfg)
+    with pytest.raises(ValueError, match="native"):
+        repro.einsum("bk,kn->bn", jnp.asarray(make_matrix((4, 32))), prep,
+                     precision="native")
+
+
+@pytest.mark.parametrize("sub,sa,sb", [
+    ("ij,jk,kl->il", (8, 8), (8, 8)),         # three operands
+    ("ii,ij->j", (8, 8), (8, 8)),             # in-operand repeat (diagonal)
+    ("ij,jk->ikz", (8, 8), (8, 8)),           # output label from nowhere
+    ("...ij,...jk->ik", (2, 8, 8), (2, 8, 8)),  # output drops ellipsis dims
+    ("ijk,jk->i", (2, 8), (8, 8)),            # subscript/rank mismatch
+])
+def test_einsum_unsupported_patterns_raise(make_matrix, sub, sa, sb):
+    a = jnp.asarray(make_matrix(sa))
+    b = jnp.asarray(make_matrix(sb))
+    with pytest.raises(ValueError):
+        repro.einsum(sub, a, b, precision="ozaki1-p4")
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims: old entry points warn but keep working.
+# ---------------------------------------------------------------------------
+
+def test_deprecated_scheme_precision_kwargs(make_matrix):
+    a = jnp.asarray(make_matrix((32, 32)))
+    b = jnp.asarray(make_matrix((32, 32)))
+    with pytest.warns(DeprecationWarning, match="repro.precision"):
+        out = dispatch.emulated_matmul(a, b, scheme="ozaki1", precision=3)
+    expected = dispatch.emulated_matmul(
+        a, b, cfg=EmulationConfig(scheme="ozaki1", p=3))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+    with pytest.raises(TypeError, match="not both"):
+        dispatch.emulated_matmul(a, b, cfg="ozaki1-p3", scheme="ozaki1")
+
+
+def test_deprecated_maybe_emulated_matmul(make_matrix):
+    a = jnp.asarray(make_matrix((128, 128)))
+    cfg = EmulationConfig(scheme="ozaki1", p=4)
+    with pytest.warns(DeprecationWarning, match="auto_fused_matmul"):
+        out = dispatch.maybe_emulated_matmul(a, a, cfg)
+    expected = dispatch.auto_fused_matmul(a, a, cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+
+def test_deprecated_parse_gemm_spec():
+    from repro.models.common import parse_gemm_spec
+    with pytest.warns(DeprecationWarning, match="repro.precision"):
+        cfg = parse_gemm_spec("ozaki1-p3-cached")
+    assert cfg == repro.precision("ozaki1-p3+xla+cached")
+
+
+def test_deprecated_ops_maybe_fused(make_matrix):
+    from repro.kernels import ops
+    a = jnp.asarray(make_matrix((128, 128)))
+    with pytest.warns(DeprecationWarning, match="auto_fused_matmul"):
+        ops.maybe_fused_matmul(a, a, EmulationConfig(scheme="ozaki1", p=4))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: improved shape errors.
+# ---------------------------------------------------------------------------
+
+def test_2d_errors_point_at_front_door(make_matrix):
+    a = jnp.asarray(make_matrix((2, 8, 16)))
+    b = jnp.asarray(make_matrix((16, 4)))
+    with pytest.raises(ValueError, match=r"repro\.dot_general"):
+        dispatch.emulated_matmul(a, b, cfg="ozaki1-p4")
+    prep = prepared.prepare_rhs(b, repro.precision("ozaki1-p4"))
+    with pytest.raises(ValueError, match=r"repro\.dot_general"):
+        dispatch.emulated_matmul(a, prep, cfg="ozaki1-p4")
+
+
+def test_batched_mismatch_names_shapes(make_matrix):
+    a = jnp.asarray(make_matrix((2, 8, 16)))
+    b = jnp.asarray(make_matrix((3, 16, 4)))
+    with pytest.raises(ValueError) as ei:
+        dispatch.emulated_matmul_batched(a, b, cfg="ozaki1-p4")
+    msg = str(ei.value)
+    assert "(2, 8, 16)" in msg and "(3, 16, 4)" in msg
+    assert "repro.dot_general" in msg
+
+
+# ---------------------------------------------------------------------------
+# Public-API snapshot: surface drift fails loudly.
+# ---------------------------------------------------------------------------
+
+EXPECTED_ALL = [
+    "EMULATION_ENV_VAR",
+    "EmulationConfig",
+    "GemmPolicy",
+    "NATIVE",
+    "PreparedOperand",
+    "current_emulation",
+    "dot_general",
+    "einsum",
+    "emulated_dot",
+    "emulated_matmul",
+    "emulated_matmul_batched",
+    "emulation",
+    "plan_precision",
+    "precision",
+    "prepare_rhs",
+    "resolve_config",
+]
+
+# (name, kind, has_default) per parameter — annotation-rendering-agnostic.
+EXPECTED_SIGNATURES = {
+    "precision": [("spec", "POSITIONAL_ONLY", False),
+                  ("overrides", "VAR_KEYWORD", False)],
+    "resolve_config": [("explicit", "POSITIONAL_OR_KEYWORD", True),
+                       ("default", "KEYWORD_ONLY", True)],
+    "dot_general": [("a", "POSITIONAL_OR_KEYWORD", False),
+                    ("b", "POSITIONAL_OR_KEYWORD", False),
+                    ("dimension_numbers", "POSITIONAL_OR_KEYWORD", False),
+                    ("precision", "KEYWORD_ONLY", True),
+                    ("out_dtype", "KEYWORD_ONLY", True),
+                    ("backend", "KEYWORD_ONLY", True)],
+    "einsum": [("subscripts", "POSITIONAL_OR_KEYWORD", False),
+               ("a", "POSITIONAL_OR_KEYWORD", False),
+               ("b", "POSITIONAL_OR_KEYWORD", False),
+               ("precision", "KEYWORD_ONLY", True),
+               ("out_dtype", "KEYWORD_ONLY", True),
+               ("backend", "KEYWORD_ONLY", True)],
+    "emulated_matmul": [("a", "POSITIONAL_OR_KEYWORD", False),
+                        ("b", "POSITIONAL_OR_KEYWORD", False),
+                        ("cfg", "KEYWORD_ONLY", True),
+                        ("out_dtype", "KEYWORD_ONLY", True),
+                        ("backend", "KEYWORD_ONLY", True),
+                        ("scheme", "KEYWORD_ONLY", True),
+                        ("precision", "KEYWORD_ONLY", True)],
+}
+
+
+def test_public_api_snapshot():
+    assert sorted(repro.__all__) == EXPECTED_ALL
+    for name in EXPECTED_ALL:
+        assert getattr(repro, name) is not None, name
+    for name, expected in EXPECTED_SIGNATURES.items():
+        fn = getattr(repro, name)
+        got = [(p.name, p.kind.name,
+                p.default is not inspect.Parameter.empty)
+               for p in inspect.signature(fn).parameters.values()]
+        assert got == expected, (name, got)

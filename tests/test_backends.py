@@ -119,12 +119,12 @@ def test_unsupported_scheme_falls_back_to_xla_reference(make_matrix):
 
 
 def test_fallback_is_not_offered_to_auto_sites(make_matrix):
-    """maybe_emulated_matmul must return None (let the caller run its own
+    """auto_fused_matmul must return None (let the caller run its own
     XLA expansion) when the selected backend fell back, instead of
     pretending the reference path is a fused win."""
     a = jnp.asarray(make_matrix((64, 64)))
     cfg = EmulationConfig(scheme="ozaki2", p=8, backend="gpu")
-    assert dispatch.maybe_emulated_matmul(a, a, cfg) is None
+    assert dispatch.auto_fused_matmul(a, a, cfg) is None
 
 
 # ---------------------------------------------------------------------------

@@ -127,8 +127,8 @@ def test_padded_nonaligned_scheme1_matches_oracle(make_matrix):
     a = jnp.asarray(make_matrix((100, 200)))
     b = jnp.asarray(make_matrix((200, 96)))
     # historical behavior: ValueError("no aligned blocks ...") — now padded
-    out = np.asarray(dispatch.emulated_matmul(a, b, scheme="ozaki1",
-                                              precision=4))
+    out = np.asarray(dispatch.emulated_matmul(
+        a, b, cfg=EmulationConfig(scheme="ozaki1", p=4)))
     assert out.shape == (100, 96)
     ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
     rel = np.abs(out - ref).max() / np.abs(ref).max()
@@ -138,8 +138,7 @@ def test_padded_nonaligned_scheme1_matches_oracle(make_matrix):
 def test_padded_nonaligned_scheme2_matches_oracle(make_matrix):
     a = jnp.asarray(make_matrix((100, 200)))
     b = jnp.asarray(make_matrix((200, 96)))
-    out = np.asarray(dispatch.emulated_matmul(a, b, scheme="ozaki2",
-                                              precision=8))
+    out = np.asarray(dispatch.emulated_matmul(a, b, cfg="ozaki2-m8"))
     ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
     rel = np.abs(out - ref).max() / np.abs(ref).max()
     assert -np.log2(rel) > 18
@@ -200,8 +199,7 @@ def test_emulated_matmul_honors_cfg_out_dtype(make_matrix):
 def test_batched_leading_dims_flatten(make_matrix):
     a = jnp.asarray(make_matrix((2, 3, 64, 128)))
     b = jnp.asarray(make_matrix((128, 128)))
-    out = np.asarray(dispatch.emulated_matmul_batched(
-        a, b, scheme="ozaki2", precision=8))
+    out = np.asarray(dispatch.emulated_matmul_batched(a, b, cfg="ozaki2-m8"))
     assert out.shape == (2, 3, 64, 128)
     ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
     rel = np.abs(out - ref).max() / np.abs(ref).max()
@@ -211,8 +209,7 @@ def test_batched_leading_dims_flatten(make_matrix):
 def test_batched_vmap_over_shared_axis(make_matrix):
     a = jnp.asarray(make_matrix((3, 128, 128)))
     b = jnp.asarray(make_matrix((3, 128, 128)))
-    out = np.asarray(dispatch.emulated_matmul_batched(
-        a, b, scheme="ozaki1", precision=3))
+    out = np.asarray(dispatch.emulated_matmul_batched(a, b, cfg="ozaki1-p3"))
     ref = np.einsum("bij,bjk->bik", np.asarray(a, np.float64),
                     np.asarray(b, np.float64))
     rel = np.abs(out - ref).max() / np.abs(ref).max()

@@ -18,7 +18,8 @@ from repro.configs.base import ArchConfig, ModelConfig, ShapeSpec, TrainPolicy
 from repro.kernels import prepared
 from repro.launch import steps as S
 from repro.models import model as M
-from repro.models.common import GemmPolicy, parse_gemm_spec
+import repro
+from repro.models.common import GemmPolicy
 from repro.optim import make_optimizer
 
 N_MICRO = 4
@@ -80,7 +81,7 @@ def _expected_preps(params, policy) -> int:
 
 def test_prepared_once_per_step_under_grad_accum(prep_counter):
     arch = _tiny_arch(N_MICRO)
-    policy = GemmPolicy(default=parse_gemm_spec("ozaki1-p3-cached"))
+    policy = GemmPolicy(default=repro.precision("ozaki1-p3+xla+cached"))
     first, steady, params, loss = _run_one_step(arch, policy, prep_counter)
     assert np.isfinite(loss)
     expected = _expected_preps(params, policy)
@@ -94,7 +95,7 @@ def test_prepared_once_per_step_under_grad_accum(prep_counter):
 def test_grad_accum_matches_unaccumulated_loss(prep_counter):
     """The hoisted prepared path computes the same loss as n_micro=1
     (same weights, same decomposition artifact)."""
-    policy = GemmPolicy(default=parse_gemm_spec("ozaki1-p3-cached"))
+    policy = GemmPolicy(default=repro.precision("ozaki1-p3+xla+cached"))
     _, _, _, loss_acc = _run_one_step(_tiny_arch(N_MICRO), policy,
                                       prep_counter)
     _, _, _, loss_one = _run_one_step(_tiny_arch(1), policy, prep_counter)
@@ -114,7 +115,7 @@ def test_step_prepared_gradients_flow(make_matrix):
     from repro.core.emulated import emulated_dot_prepared
     a = jnp.asarray(make_matrix((16, 32)))
     b = jnp.asarray(make_matrix((32, 24)))
-    cfg = parse_gemm_spec("ozaki1-p4-cached")
+    cfg = repro.precision("ozaki1-p4+xla+cached")
     prep = prepared.prepare_rhs(b, cfg, with_twin=True)
 
     def f_emu(a, b):
@@ -135,7 +136,7 @@ def test_attach_step_preps_roundtrip():
     """attach_step_preps swaps exactly the prepared leaves and leaves the
     rest of the tree untouched."""
     params = {"head": jnp.ones((32, 16)), "ln": {"scale": jnp.ones((4,))}}
-    policy = GemmPolicy(default=parse_gemm_spec("ozaki1-p3-cached"))
+    policy = GemmPolicy(default=repro.precision("ozaki1-p3+xla+cached"))
     preps = prepared.build_step_preps(params, policy)
     assert set(preps) == {"head"}
     wrapped = prepared.attach_step_preps(params, preps)
