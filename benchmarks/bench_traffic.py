@@ -1,21 +1,24 @@
-"""Decomposition-side HBM traffic: decompose-in-XLA vs fused prologue vs
-PreparedOperand weight reuse.
+"""Decomposition/residue-side HBM traffic: the XLA reference pipelines
+vs the fused prologues vs prepared-weight reuse.
 
 Seeds the bench trajectory with a deterministic, interpret-mode-safe
-metric: the analytic decomposition-byte model
-(repro.core.traffic.scheme1_decomp_*_bytes, surfaced through
-repro.utils.roofline.scheme1_decomposition_terms), corroborated by
-measured compiled-HLO bytes/op-counts of the XLA-visible decomposition
-stages, and a bit-identity check of the in-kernel prologue against the
-split -> interleave -> kernel pipeline.
+metric: the analytic byte models (repro.core.traffic
+.scheme{1,2}_decomp_*_bytes, surfaced through repro.utils.roofline
+.scheme{1,2}_decomposition_terms), corroborated by measured
+compiled-HLO bytes/op-counts of the XLA-visible stages, and bit-identity
+checks of the fused kernels against their XLA oracles — the Scheme-I
+prologue vs the split -> interleave -> kernel pipeline, and the fused
+GPU Scheme-II / complex-3M residue pipeline vs ``scheme2.matmul`` /
+``complex3m.matmul`` (including the PreparedResidues rhs variant).
 
   PYTHONPATH=src python benchmarks/bench_traffic.py \
       [--out BENCH_traffic.json] [--check-baseline benchmarks/traffic_baseline.json]
 
-With --check-baseline the run exits non-zero if any cell's decomposition
-bytes regress above the recorded baseline or the headline reductions
-fall below the acceptance floors (>=2x fused prologue, >=3x
-PreparedOperand weight reuse at p=4) — the CI regression gate.
+With --check-baseline the run exits non-zero if any cell's bytes regress
+above the recorded baseline or the headline reductions fall below the
+acceptance floors (>=2x fused prologue, >=3x PreparedOperand weight
+reuse at p=4; >= p-fold fused residue-side reduction for Scheme II at
+m=6) — the CI regression gate.
 """
 
 from __future__ import annotations
@@ -39,6 +42,12 @@ PS = (3, 4, 6)
 USES = 3  # forward, remat re-forward, backward B^T — per layer per step
 PROLOGUE_FLOOR = 2.0
 PREPARED_FLOOR = 3.0
+
+# Scheme-II cells: output-heavy shapes (the residue win is the (p, M, N)
+# int32/canonical round-trips the fused epilogue keeps on-chip).
+SCHEME2_SHAPES = [(256, 256, 256), (256, 128, 256), (192, 128, 384)]
+MS = (4, 6)                    # moduli counts
+SCHEME2_FLOOR = 6.0            # >= p-fold fused reduction at m=6
 
 
 def _count_ops(hlo_text: str) -> int:
@@ -124,6 +133,73 @@ def run_cell(m: int, k: int, n: int, p: int, verify: bool) -> dict:
     return cell
 
 
+def _bit_identity_scheme2(m: int, k: int, n: int, p: int) -> dict:
+    """Fused GPU Scheme-II (real, complex-3M, prepared rhs) must equal
+    the scheme2.matmul / complex3m.matmul references bitwise."""
+    from repro.core import complex3m, scheme2
+    from repro.kernels import dispatch, prepared
+    rng = np.random.default_rng(p * 6997 + m + k + n)
+
+    def cond(shape):
+        return jnp.asarray(((rng.random(shape) - 0.5)
+                            * np.exp(2.0 * rng.standard_normal(shape)))
+                           .astype(np.float32))
+
+    cfg = EmulationConfig(scheme="ozaki2", p=p, backend="gpu")
+    a, b = cond((m, k)), cond((k, n))
+    fused = dispatch.emulated_matmul(a, b, cfg=cfg)
+    oracle = scheme2.matmul(a, b, cfg, jnp.float32)
+    prep = prepared.prepare_rhs(b, cfg)
+    prepped = dispatch.emulated_matmul(a, prep, cfg=cfg)
+    ac = (cond((m, k)) + 1j * cond((m, k))).astype(jnp.complex64)
+    bc = (cond((k, n)) + 1j * cond((k, n))).astype(jnp.complex64)
+    fused_c = dispatch.emulated_matmul(ac, bc, cfg=cfg,
+                                       out_dtype=jnp.complex64)
+    oracle_c = complex3m.matmul(ac, bc, cfg, jnp.float32)
+    return {
+        "real": bool(jnp.array_equal(fused, oracle)),
+        "prepared": bool(jnp.array_equal(prepped, oracle)),
+        "complex_3m": bool(jnp.array_equal(fused_c, oracle_c)),
+    }
+
+
+def run_scheme2_cell(m: int, k: int, n: int, p: int, verify: bool) -> dict:
+    terms = roofline.scheme2_decomposition_terms(m, k, n, p, uses=USES)
+    terms_3m = roofline.scheme2_decomposition_terms(m, k, n, p, uses=USES,
+                                                    complex_3m=True)
+    cell = {
+        "m": m, "k": k, "n": n, "p": p,
+        "decomp_bytes": {
+            "xla": terms["xla_bytes"],
+            "prologue": terms["prologue_bytes"],
+            "prepared": terms["prepared_bytes"],
+        },
+        "decomp_bytes_3m": {
+            "xla": terms_3m["xla_bytes"],
+            "prologue": terms_3m["prologue_bytes"],
+            "prepared": terms_3m["prepared_bytes"],
+        },
+        "reduction": {
+            "prologue": terms["xla_bytes"] / terms["prologue_bytes"],
+            "prepared": terms["xla_bytes"] / terms["prepared_bytes"],
+            "prologue_3m":
+                terms_3m["xla_bytes"] / terms_3m["prologue_bytes"],
+        },
+        # Paper Sec. V framing: projected Top/s + speedup over the FP64
+        # BLAS baseline (DGEMM real / ZGEMM complex) per gpu hardware.
+        "projection": {
+            "real": roofline.projected_throughput(
+                m, k, n, p, scheme="ozaki2", backend="gpu"),
+            "complex_3m": roofline.projected_throughput(
+                m, k, n, p, scheme="ozaki2", backend="gpu",
+                complex_3m=True),
+        },
+    }
+    if verify:
+        cell["bit_identical"] = _bit_identity_scheme2(m, k, n, p)
+    return cell
+
+
 def check_baseline(report: dict, baseline: dict) -> list[str]:
     errors = []
     base = {(c["m"], c["k"], c["n"], c["p"]): c for c in baseline["cells"]}
@@ -138,6 +214,23 @@ def check_baseline(report: dict, baseline: dict) -> list[str]:
                 errors.append(f"{key} {path}: {cur} > baseline {old}")
         if c.get("bit_identical") is False:
             errors.append(f"{key}: prologue not bit-identical to split")
+    base2 = {(c["m"], c["k"], c["n"], c["p"]): c
+             for c in baseline.get("scheme2_cells", ())}
+    for c in report.get("scheme2_cells", ()):
+        key = (c["m"], c["k"], c["n"], c["p"])
+        ref = base2.get(key)
+        if ref is not None:
+            for field in ("decomp_bytes", "decomp_bytes_3m"):
+                for path, cur in c[field].items():
+                    old = ref[field].get(path)
+                    if old is not None and cur > old:
+                        errors.append(
+                            f"scheme2 {key} {field}/{path}: {cur} > "
+                            f"baseline {old}")
+        for variant, ok in c.get("bit_identical", {}).items():
+            if ok is False:
+                errors.append(f"scheme2 {key}: fused {variant} path not "
+                              "bit-identical to the reference")
     head = report["acceptance"]
     if head["prologue_reduction_p4"] < PROLOGUE_FLOOR:
         errors.append(f"prologue reduction {head['prologue_reduction_p4']:.2f}"
@@ -146,6 +239,11 @@ def check_baseline(report: dict, baseline: dict) -> list[str]:
         errors.append(
             f"prepared weight reduction "
             f"{head['prepared_weight_reduction_p4']:.2f} < {PREPARED_FLOOR}")
+    if head.get("scheme2_fused_reduction_m6", SCHEME2_FLOOR) < SCHEME2_FLOOR:
+        errors.append(
+            f"scheme2 fused reduction "
+            f"{head['scheme2_fused_reduction_m6']:.2f} < {SCHEME2_FLOOR} "
+            "(>= p-fold at m=6)")
     return errors
 
 
@@ -172,11 +270,29 @@ def main(argv=None) -> int:
                   f"H100 {hw['h100']['projected_tops']:.0f}/B200 "
                   f"{hw['b200']['projected_tops']:.0f} Top/s", flush=True)
 
+    cells2 = []
+    for m, k, n in SCHEME2_SHAPES:
+        for p in MS:
+            cell = run_scheme2_cell(m, k, n, p, verify=not args.no_verify)
+            cells2.append(cell)
+            r = cell["reduction"]
+            hw = cell["projection"]["complex_3m"]["hardware"]
+            bits = cell.get("bit_identical", {})
+            print(f"scheme2 ({m},{k},{n}) m={p}: fused {r['prologue']:.2f}x"
+                  f", prepared {r['prepared']:.2f}x, 3M "
+                  f"{r['prologue_3m']:.2f}x, bit_identical="
+                  f"{bits or 'skipped'}, vs ZGEMM H100 "
+                  f"{hw['h100'].get('baseline_speedup', 0):.1f}x / B200 "
+                  f"{hw['b200'].get('baseline_speedup', 0):.1f}x",
+                  flush=True)
+
     p4 = [c for c in cells if c["p"] == 4]
+    m6 = [c for c in cells2 if c["p"] == 6]
     report = {
-        "schema": "bench_traffic/v1",
+        "schema": "bench_traffic/v2",
         "uses_per_step": USES,
         "cells": cells,
+        "scheme2_cells": cells2,
         "acceptance": {
             "prologue_reduction_p4":
                 min(c["reduction"]["prologue"] for c in p4),
@@ -184,6 +300,11 @@ def main(argv=None) -> int:
                 min(c["reduction"]["prepared_weight"] for c in p4),
             "bit_identical":
                 all(c.get("bit_identical", True) for c in cells),
+            "scheme2_fused_reduction_m6":
+                min(c["reduction"]["prologue"] for c in m6),
+            "scheme2_bit_identical":
+                all(ok for c in cells2
+                    for ok in c.get("bit_identical", {}).values()),
         },
     }
     with open(args.out, "w") as f:

@@ -169,8 +169,8 @@ def resolve_config(explicit: str | EmulationConfig | None = None, *,
 # ---------------------------------------------------------------------------
 
 def _is_prepared(x) -> bool:
-    from repro.kernels.prepared import PreparedOperand
-    return isinstance(x, PreparedOperand)
+    from repro.kernels.prepared import PreparedOperand, PreparedResidues
+    return isinstance(x, (PreparedOperand, PreparedResidues))
 
 
 def _with_out_dtype(cfg: EmulationConfig, out_dtype) -> EmulationConfig:
@@ -211,19 +211,29 @@ def _norm_dnums(dimension_numbers, a_ndim: int, b_ndim: int):
 
 
 def _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype):
-    """PreparedOperand rhs: only (..., K) x prepared (K, N) shapes exist —
-    the slices were laid out at prepare time and cannot be transposed."""
+    """Prepared rhs: only (..., K) x prepared (K, N) shapes exist — the
+    slices/residues were laid out at prepare time and cannot be
+    transposed."""
     from repro.core.emulated import prepared_dot
+    from repro.kernels.prepared import PreparedResidues
     (lc, rc), (lb, rb) = dimension_numbers
     lc, rc, lb, rb = (tuple(lc), tuple(rc), tuple(lb), tuple(rb))
     if lb or rb or rc != (0,) or len(lc) != 1:
         raise ValueError(
-            "a PreparedOperand rhs supports only dimension_numbers "
+            "a prepared rhs supports only dimension_numbers "
             f"(((k,), (0,)), ((), ())); got {dimension_numbers} — "
             "prepare_rhs fixes the (K, N) layout at decomposition time")
     if cfg.scheme == "native":
-        raise ValueError("a PreparedOperand rhs is Scheme-I data; it cannot "
-                         "be consumed under a 'native' precision spec")
+        raise ValueError("a prepared rhs is pre-decomposed emulation data; "
+                         "it cannot be consumed under a 'native' precision "
+                         "spec")
+    if isinstance(b, PreparedResidues) and cfg.scheme != "ozaki2":
+        raise ValueError("a PreparedResidues rhs is Scheme-II (ozaki2) "
+                         f"data; it cannot be consumed under "
+                         f"scheme={cfg.scheme!r}")
+    if not isinstance(b, PreparedResidues) and cfg.scheme == "ozaki2":
+        raise ValueError("a PreparedOperand rhs is Scheme-I (ozaki1) data; "
+                         "it cannot be consumed under scheme='ozaki2'")
     if not -a.ndim <= lc[0] < a.ndim:
         raise ValueError(f"lhs contracting dim {lc[0]} out of range for "
                          f"rank-{a.ndim} operand")
@@ -429,7 +439,7 @@ def einsum(subscripts: str, a: jax.Array, b, *,
               and b_labels[1] in out_set and b_labels[1] not in a_set)
         if not ok:
             raise ValueError(
-                f"a PreparedOperand rhs supports only '...k,kn->...n'-shaped "
+                f"a prepared rhs supports only '...k,kn->...n'-shaped "
                 f"subscripts (fixed (K, N) layout); got {subscripts!r}")
         a, a_labels = presum(a, a_labels, b_set)
         k_axis = a_labels.index(b_labels[0])

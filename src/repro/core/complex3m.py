@@ -34,6 +34,7 @@ def matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
         out_dtype = jnp.float64 if a.dtype == jnp.complex128 else jnp.float32
     moduli = cfg.resolved_moduli()
     k_dim = a.shape[-1]
+    scheme2.check_exact_k(k_dim, moduli)
     budget = scheme2_budget(moduli, k_dim, complex_guard=True)
     real_t = jnp.real(a).dtype
     mant = jnp.finfo(real_t).nmant + 1

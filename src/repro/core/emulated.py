@@ -58,9 +58,10 @@ def prepared_dot(x: jax.Array, w, out_dtype=None) -> jax.Array:
 
 
 def _cacheable(a, b, cfg: EmulationConfig) -> bool:
-    # Complex problems route through the 4M expansion, not the real-only
-    # prepared path (a silent cast would drop the imaginary part).
-    return (cfg.scheme == "ozaki1" and cfg.cache_weights
+    # Complex problems route through the 4M/3M expansions, not the
+    # real-only prepared paths (a silent cast would drop the imaginary
+    # part).  Scheme I caches int8 slices, Scheme II balanced residues.
+    return (cfg.scheme in ("ozaki1", "ozaki2") and cfg.cache_weights
             and getattr(b, "ndim", 0) == 2
             and not _is_complex(a) and not _is_complex(b))
 

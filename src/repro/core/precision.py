@@ -103,10 +103,12 @@ class EmulationConfig:
                prologue — no (M, p*K) HBM intermediate), 'xla' keeps the
                historical split -> interleave -> kernel pipeline, 'auto'
                prefers the prologue.
-      cache_weights: Scheme-I training flag — the custom VJP prepares the
-               rhs operand once per step (forward layout + K-transposed
-               twin for dA) instead of re-splitting it in forward, remat
-               re-forward, and backward (see repro.kernels.prepared).
+      cache_weights: training flag — the custom VJP prepares the rhs
+               operand once per step (forward layout + K-transposed
+               twin for dA) instead of re-encoding it in forward, remat
+               re-forward, and backward: Scheme I caches int8 mantissa
+               slices, Scheme II balanced int8 residues (see
+               repro.kernels.prepared).
       backend: kernel-backend name from the registry in
                repro.kernels.backends ('tpu' | 'gpu' | 'xla' | an
                out-of-tree registration); None = platform default.  The
@@ -154,7 +156,8 @@ class EmulationConfig:
     #   base   := "native" | "ozaki1-p" INT | "ozaki2-m" INT
     #           | "bits=" INT [":k" INT]        (routes via plan_precision)
     #   suffix := "@" BACKEND                   (kernel-backend name)
-    #           | "+cached"                     (Scheme-I per-step cache)
+    #           | "+cached"                     (per-step weight cache:
+    #                                            slices / residues)
     #           | "+xla" | "+pallas"            (pin impl; default 'auto')
     #
     # ``ozaki2-m6`` pins ``moduli=default_moduli(6)`` so parse/to_spec
@@ -226,9 +229,10 @@ class EmulationConfig:
             else:
                 cfg = cls(scheme="ozaki1", p=num, impl=impl, backend=backend)
         if cached:
-            if cfg.scheme != "ozaki1":
-                raise ValueError(f"{spec!r}: '+cached' is a Scheme-I "
-                                 "(ozaki1) feature")
+            if cfg.scheme == "native":
+                raise ValueError(f"{spec!r}: '+cached' needs an emulation "
+                                 "scheme (ozaki1 caches int8 slices, "
+                                 "ozaki2 balanced residues)")
             cfg = dataclasses.replace(cfg, cache_weights=True)
         return cfg
 
@@ -256,7 +260,7 @@ class EmulationConfig:
                 self.scheme != "ozaki2"
                 or tuple(self.moduli) != default_moduli(self.p)):
             blockers.append("moduli")
-        if self.cache_weights and self.scheme != "ozaki1":
+        if self.cache_weights and self.scheme == "native":
             blockers.append("cache_weights")
         if blockers:
             raise ValueError(

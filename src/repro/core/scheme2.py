@@ -11,7 +11,8 @@ Pipeline (paper Sec. II-C2):
 TPU adaptation (DESIGN.md Sec. 2): residues are stored in *balanced* form
 r_bal = ((r + m//2) mod m) - m//2 in [-128, 127] so they fit the signed-int8
 MXU path (TPU has no unsigned-int8 matmul). Congruence mod m is preserved, so
-the CRT is unchanged; |r_bal| <= 128 keeps K <= 2^31 / 2^14 = 131072 exact.
+the CRT is unchanged; |r_bal| <= 128 keeps K <= (2^31 - 1) / 2^14 = 131071
+exact (``check_exact_k`` enforces the bound on every pipeline).
 
 CRT reconstruction uses Garner's mixed-radix algorithm: digits d_i < m_i are
 computed in exact int32 arithmetic (O(p^2) elementwise ops), then the
@@ -53,7 +54,16 @@ def balanced_residues(a_int: jax.Array, moduli) -> jax.Array:
     Returns (p, *a.shape) int8. Works on float inputs holding exact integers
     up to 2^52 (float64) / 2^23 (float32) by reducing via float remainder,
     which is exact for power-of-2-scaled integers within the mantissa.
+
+    Moduli must be <= 256: the balanced form is the int8 representation
+    every pipeline here (XLA reference, Mosaic and GPU kernels) carries,
+    and a wider modulus would silently wrap in the cast.
     """
+    oversized = [int(m) for m in moduli if int(m) > 256]
+    if oversized:
+        raise ValueError(
+            f"moduli {oversized} exceed 256: balanced residues must fit "
+            "int8 (DESIGN.md Sec. 2) — no backend lowers wider moduli")
     outs = []
     # Use the widest available int type for the exact mod.
     use_i64 = jax.config.jax_enable_x64 and a_int.dtype == jnp.float64
@@ -64,6 +74,24 @@ def balanced_residues(a_int: jax.Array, moduli) -> jax.Array:
         r = jnp.remainder(ai + half, m) - half  # balanced, in [-half, m-1-half]
         outs.append(r.astype(jnp.int8))
     return jnp.stack(outs)
+
+
+def check_exact_k(k_dim: int, moduli) -> None:
+    """Refuse contraction lengths whose int32 residue accumulation could
+    wrap: a K-long dot of balanced residues is bounded by
+    K * (max m // 2)^2, which must stay below 2^31 (module doc: K <=
+    131071 at m = 256).  Applies to every Scheme-II pipeline — the XLA
+    reference, the Mosaic kernels and the fused GPU lowering share the
+    same int32 accumulators."""
+    half = max(int(m) for m in moduli) // 2
+    if k_dim * half * half >= 2 ** 31:
+        # >=: int32 tops out at 2^31 - 1, and the all-(-half)^2 worst
+        # case reaches exactly K * half^2.
+        raise ValueError(
+            f"Scheme II: K={k_dim} can overflow the int32 residue "
+            f"accumulators (bound K * {half}^2 < 2^31, i.e. K <= "
+            f"{(2 ** 31 - 1) // (half * half)} for these moduli) — "
+            "split the contraction or reduce the modulus magnitudes")
 
 
 def _int8_dot(a8: jax.Array, b8: jax.Array) -> jax.Array:
@@ -159,6 +187,7 @@ def matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
         out_dtype = jnp.promote_types(a.dtype, b.dtype)
     moduli = cfg.resolved_moduli()
     k_dim = a.shape[-1]
+    check_exact_k(k_dim, moduli)
     budget = scheme2_budget(moduli, k_dim)
     # Operand mantissa limits the useful budget (fp32 in -> 24 bits).
     mant = jnp.finfo(a.dtype).nmant + 1

@@ -134,6 +134,81 @@ def scheme1_decomp_reduction(p: int, uses: int = 3) -> tuple[float, float]:
 
 
 # ---------------------------------------------------------------------------
+# Scheme-II residue-side traffic (the scheme1 trio's counterpart).
+#
+# Unlike Scheme I — where the Eq. 9/10 GEMM models already charged the
+# int32 output round-trips and only the *operand* decomposition needed a
+# per-elems model — the Scheme-II reference pipeline round-trips residue
+# intermediates on BOTH sides of the GEMM: the (p, M, K)/(p, K, N)
+# balanced residue stacks on the way in, and the (p, M, N) int32
+# accumulators -> modular-reduced canonical residues on the way out to
+# the CRT.  The fused kernel (gpu backend) keeps all of it on-chip, so
+# the honest model is per-GemmShape, not per-operand-elems:
+#
+#   encode, per operand elem:  4 fp32 scale read + 4 fp32 encode read
+#                              + p int8 residue write          = 8 + p
+#   (3M complex doubles the fp reads and adds the re-balanced sum
+#    phase: 2p int8 reads + p writes                           = 16 + 5p)
+#   output side, per MN elem:  int32 accumulator write + read by the
+#                              modular reduce (8p) + canonical residue
+#                              write + read by the CRT (8p)    = 16p
+#   (3M: three int32 accumulator round-trips per modulus (24p, the
+#    Eq. 17 term) + two canonical residue round-trips (16p)    = 40p)
+#
+# Streaming the finished residues into the GEMM is GEMM-side (the
+# Eq. 14/15 (M+N)K term) and NOT counted — except on the prologue path,
+# where the kernel's operand stream carries the raw fp32, so that read
+# is charged here instead (same convention as the scheme1 trio).
+# ---------------------------------------------------------------------------
+
+
+def scheme2_decomp_xla_bytes(s: GemmShape, p: int, uses: int = 1,
+                             complex_3m: bool = False) -> int:
+    """Residue-side HBM bytes of the XLA reference Scheme-II pipeline
+    (encode both operands + the int32/canonical output round-trips),
+    re-paid ``uses`` times per step."""
+    if complex_3m:
+        operand = (16 + 5 * p) * (s.m + s.n) * s.k
+        out_side = 40 * p * s.m * s.n
+    else:
+        operand = (8 + p) * (s.m + s.n) * s.k
+        out_side = 16 * p * s.m * s.n
+    return uses * (operand + out_side)
+
+
+def scheme2_decomp_prologue_bytes(s: GemmShape, p: int, uses: int = 1,
+                                  complex_3m: bool = False) -> int:
+    """The fused residue pipeline: the scale pass and the fp32 operand
+    stream are all that touches HBM — residues, accumulators, Garner
+    digits and the double-double reconstruction stay on-chip."""
+    del p
+    mult = 2 if complex_3m else 1
+    return uses * 8 * mult * (s.m + s.n) * s.k
+
+
+def scheme2_decomp_prepared_bytes(s: GemmShape, p: int, uses: int = 1,
+                                  preps: int = 1,
+                                  complex_3m: bool = False) -> int:
+    """PreparedResidues: the rhs is encoded ``preps`` times (scale read
+    + encode read + p int8 residue writes) and every use streams the
+    finished stack (GEMM-side); the lhs still runs the fused prologue
+    per use.  The complex model is analytic only — the prepared path is
+    real-valued."""
+    enc = (16 + 5 * p) if complex_3m else (8 + p)
+    lhs_stream = 16 if complex_3m else 8
+    return preps * enc * s.k * s.n + uses * lhs_stream * s.m * s.k
+
+
+def scheme2_decomp_reduction(s: GemmShape, p: int,
+                             uses: int = 3) -> tuple[float, float]:
+    """(fused, prepared) residue-side byte reduction factors vs the XLA
+    reference for one GEMM over ``uses`` per-step encodes."""
+    xla = scheme2_decomp_xla_bytes(s, p, uses)
+    return (xla / scheme2_decomp_prologue_bytes(s, p, uses),
+            xla / scheme2_decomp_prepared_bytes(s, p, uses, 1))
+
+
+# ---------------------------------------------------------------------------
 # Per-backend hardware peak tables.
 #
 # The paper's headline numbers are fractions of INT8 Tensor Core peak on
@@ -147,11 +222,17 @@ def scheme1_decomp_reduction(p: int, uses: int = 3) -> tuple[float, float]:
 
 @dataclasses.dataclass(frozen=True)
 class HardwarePeak:
-    """Dense (non-sparsity) peaks of one accelerator."""
+    """Dense (non-sparsity) peaks of one accelerator.
+
+    ``fp64_flops`` is the native FP64 rate the D/ZGEMM baselines run at
+    (tensor-core FP64 on NVIDIA; 0 for accelerators without FP64 units,
+    which suppresses the baseline-speedup report).
+    """
     name: str
     int8_ops: float      # int8 MAC-pair ops/s (Top/s * 1e12)
     flops: float         # dense fp16/bf16 FLOP/s
     hbm_bw: float        # bytes/s
+    fp64_flops: float = 0.0
 
 
 BACKEND_PEAKS: dict[str, dict[str, HardwarePeak]] = {
@@ -159,8 +240,10 @@ BACKEND_PEAKS: dict[str, dict[str, HardwarePeak]] = {
         "v5e": HardwarePeak("TPU v5e", 394e12, 197e12, 819e9),
     },
     "gpu": {
-        "h100": HardwarePeak("H100 SXM (Hopper)", 1979e12, 989e12, 3350e9),
-        "b200": HardwarePeak("B200 (Blackwell)", 4500e12, 2250e12, 8000e9),
+        "h100": HardwarePeak("H100 SXM (Hopper)", 1979e12, 989e12, 3350e9,
+                             fp64_flops=67e12),
+        "b200": HardwarePeak("B200 (Blackwell)", 4500e12, 2250e12, 8000e9,
+                             fp64_flops=40e12),
     },
 }
 BACKEND_PEAKS["xla"] = BACKEND_PEAKS["tpu"]

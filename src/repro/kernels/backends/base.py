@@ -119,9 +119,16 @@ class KernelBackend(abc.ABC):
     def choose_blocks(self, m: int, n: int, k: int, p: int, *,
                       out_bytes: int = 4, prologue_a: bool = False,
                       prologue_b: bool = False,
-                      fixed_bk: int | None = None) -> Blocks | None:
+                      fixed_bk: int | None = None,
+                      scheme: str = "ozaki1") -> Blocks | None:
         """Largest aligned blocks whose working set fits this backend's
-        staging/accumulator budgets, or None when nothing aligns."""
+        staging/accumulator budgets, or None when nothing aligns.
+
+        ``p`` is the slice count (Scheme I) or modulus count (Scheme
+        II); ``scheme`` ('ozaki1' | 'ozaki2' | 'ozaki2-3m') selects the
+        residue-count-aware resource model on backends whose budgets
+        differ per scheme — backends with one model may ignore it.
+        """
         ...
 
     @abc.abstractmethod

@@ -37,7 +37,11 @@ class TpuBackend(KernelBackend):
         return _CAPS
 
     def choose_blocks(self, m, n, k, p, *, out_bytes=4, prologue_a=False,
-                      prologue_b=False, fixed_bk=None) -> Blocks | None:
+                      prologue_b=False, fixed_bk=None,
+                      scheme="ozaki1") -> Blocks | None:
+        # One VMEM model serves every scheme here (the Mosaic Scheme-II
+        # kernels run a single live accumulator and re-select with p=1).
+        del scheme
         return choose_blocks(m, n, k, p, out_bytes=out_bytes,
                              prologue_a=prologue_a, prologue_b=prologue_b,
                              fixed_bk=fixed_bk)

@@ -36,10 +36,11 @@ class XlaBackend(KernelBackend):
         return _CAPS
 
     def choose_blocks(self, m, n, k, p, *, out_bytes=4, prologue_a=False,
-                      prologue_b=False, fixed_bk=None) -> Blocks | None:
+                      prologue_b=False, fixed_bk=None,
+                      scheme="ozaki1") -> Blocks | None:
         # XLA chooses its own tiling; a unit block makes every shape
         # "aligned" so the dispatcher never pads for this backend.
-        del p, out_bytes, prologue_a, prologue_b
+        del p, out_bytes, prologue_a, prologue_b, scheme
         return Blocks(1, 1, fixed_bk if fixed_bk is not None else 1)
 
     def matmul(self, a, b, cfg, out_dtype, blocks):

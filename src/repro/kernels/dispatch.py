@@ -98,25 +98,37 @@ BlockCacheInfo = collections.namedtuple(
 def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
                   backend: str | None = None, prologue_a: bool = False,
                   prologue_b: bool = False,
-                  fixed_bk: int | None = None) -> Blocks | None:
+                  fixed_bk: int | None = None,
+                  scheme: str = "ozaki1") -> Blocks | None:
     """Cached block selection through the backend registry.
 
     ``backend`` may be any string — platform-qualified names bucket their
     own cache entries ('tpu-v5e' and 'tpu' stay distinct) while resolving
     to the nearest registered backend for the actual tile search.
+    ``scheme`` ('ozaki1' | 'ozaki2' | 'ozaki2-3m') keys the cache and
+    selects the backend's residue-count-aware resource model.
     """
     bucket = backend or backends.resolve_backend_name()
     cache = _BLOCK_CACHES.setdefault(bucket, _BlockCache())
-    key = (m, n, k, p, out_bytes, prologue_a, prologue_b, fixed_bk)
+    key = (m, n, k, p, out_bytes, prologue_a, prologue_b, fixed_bk, scheme)
     try:
         blocks = cache.data[key]
         cache.hits += 1
         return blocks
     except KeyError:
         cache.misses += 1
-    blocks = backends.resolve_backend(bucket).choose_blocks(
-        m, n, k, p, out_bytes=out_bytes, prologue_a=prologue_a,
-        prologue_b=prologue_b, fixed_bk=fixed_bk)
+    bk_obj = backends.resolve_backend(bucket)
+    try:
+        blocks = bk_obj.choose_blocks(
+            m, n, k, p, out_bytes=out_bytes, prologue_a=prologue_a,
+            prologue_b=prologue_b, fixed_bk=fixed_bk, scheme=scheme)
+    except TypeError:
+        # Out-of-tree backends registered before the scheme kwarg grew:
+        # one resource model per backend was the old contract, so the
+        # argument is safely dropped.
+        blocks = bk_obj.choose_blocks(
+            m, n, k, p, out_bytes=out_bytes, prologue_a=prologue_a,
+            prologue_b=prologue_b, fixed_bk=fixed_bk)
     cache.put(key, blocks)
     return blocks
 
@@ -241,6 +253,9 @@ class GemmPlan:
     out_dtype: object
     blocks: Blocks | None
     backend: str = "tpu"
+    # Block-model key: 'ozaki1' | 'ozaki2' | 'ozaki2-3m' (complex inputs
+    # under Scheme II plan for the fused 3M kernel's larger footprint).
+    scheme: str = "ozaki1"
 
     @property
     def aligned(self) -> bool:
@@ -266,20 +281,36 @@ def _plan_backend(cfg: EmulationConfig, a, b,
 
 def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
                   out_dtype=None, backend: str | None = None) -> GemmPlan:
-    """Resolve backend, output dtype and cached blocks for one 2-D GEMM."""
+    """Resolve backend, output dtype and cached blocks for one 2-D GEMM.
+
+    ``p_eff`` is the residue count the block search budgets for: the
+    slice count under Scheme I, the modulus count under Scheme II
+    (backends whose Scheme-II kernels run a single live accumulator —
+    the TPU Mosaic lowering — re-select internally with p=1 and ignore
+    the plan's blocks).
+    """
     m, k = a.shape
     _, n = b.shape
     if out_dtype is None:
         out_dtype = cfg.out_dtype
     if out_dtype is None:
         out_dtype = jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype)
-    p_eff = cfg.p if cfg.scheme == "ozaki1" else 1
+    p_eff = cfg.p
+    scheme = cfg.scheme
+    if scheme == "ozaki2":
+        # The residue count is the moduli count — an explicit tuple may
+        # disagree with cfg.p, and the kernels carve len(moduli)
+        # residues/accumulators.
+        p_eff = len(cfg.resolved_moduli())
+        if _is_complex(a) or _is_complex(b):
+            scheme = "ozaki2-3m"
     name = _plan_backend(cfg, a, b, backend)
     pro = _prologue(cfg)
     blocks = select_blocks(m, n, k, p_eff,
                            out_bytes=jnp.dtype(out_dtype).itemsize,
-                           backend=name, prologue_a=pro, prologue_b=pro)
-    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks, name)
+                           backend=name, prologue_a=pro, prologue_b=pro,
+                           scheme=scheme)
+    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks, name, scheme)
 
 
 def _replan_padded(plan: GemmPlan) -> GemmPlan:
@@ -288,7 +319,7 @@ def _replan_padded(plan: GemmPlan) -> GemmPlan:
     blocks = select_blocks(mp, np_, kp, plan.p_eff,
                            out_bytes=jnp.dtype(plan.out_dtype).itemsize,
                            backend=plan.backend, prologue_a=pro,
-                           prologue_b=pro)
+                           prologue_b=pro, scheme=plan.scheme)
     return dataclasses.replace(plan, m=mp, n=np_, k=kp, blocks=blocks)
 
 
@@ -320,8 +351,13 @@ def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype,
 
 
 def _is_prepared(b) -> bool:
-    from repro.kernels.prepared import PreparedOperand
-    return isinstance(b, PreparedOperand)
+    from repro.kernels.prepared import PreparedOperand, PreparedResidues
+    return isinstance(b, (PreparedOperand, PreparedResidues))
+
+
+def _is_prepared_residues(b) -> bool:
+    from repro.kernels.prepared import PreparedResidues
+    return isinstance(b, PreparedResidues)
 
 
 def emulated_matmul(a: jax.Array, b, *,
@@ -351,13 +387,23 @@ def emulated_matmul(a: jax.Array, b, *,
     if _is_prepared(b):
         from repro.kernels import prepared
         if cfg.scheme == "native":
-            # Mirrors repro.dot_general: the slices are Scheme-I data, so
-            # honoring a native request is impossible — refuse rather than
-            # silently emulate.
+            # Mirrors repro.dot_general: the slices/residues are emulation
+            # data, so honoring a native request is impossible — refuse
+            # rather than silently emulate.
             raise ValueError(
-                "a PreparedOperand rhs is Scheme-I data; it cannot be "
-                "consumed under a 'native' config (pass the float weight "
-                "instead)")
+                "a prepared rhs is pre-decomposed emulation data; it "
+                "cannot be consumed under a 'native' config (pass the "
+                "float weight instead)")
+        if _is_prepared_residues(b) and cfg.scheme != "ozaki2":
+            raise ValueError(
+                "a PreparedResidues rhs is Scheme-II (ozaki2) data; it "
+                f"cannot be consumed under scheme={cfg.scheme!r} (pass "
+                "the float weight, or prepare under the matching config)")
+        if not _is_prepared_residues(b) and cfg.scheme == "ozaki2":
+            raise ValueError(
+                "a PreparedOperand rhs is Scheme-I (ozaki1) data; it "
+                "cannot be consumed under scheme='ozaki2' (pass the "
+                "float weight, or prepare under the matching config)")
         if a.ndim != 2:
             raise ValueError(
                 f"emulated_matmul is strictly 2-D; got lhs {a.shape} — use "
@@ -434,9 +480,23 @@ def auto_fused_matmul(a: jax.Array, b, cfg: EmulationConfig):
     if cfg.scheme == "ozaki1" and (_is_complex(a) or _is_complex(b)):
         return None  # 4x fused launches is not an 'auto' win; XLA path
     plan = plan_emulated(a, b, cfg)
-    if plan.backend == "xla" and backends.resolve_backend_name(
-            None, cfg) != "xla":
-        return None  # fell back — nothing fused to offer the 'auto' site
+    requested = backends.resolve_backend_name(None, cfg)
+    if plan.backend == "xla" and requested != "xla":
+        # Fell back — nothing fused to offer the 'auto' site. Name the
+        # fused path being skipped (and its limits) instead of silently
+        # degrading to the reference expansion.
+        from repro.kernels.backends import gpu as _gpu
+        detail = ""
+        if requested == "gpu" and cfg.scheme == "ozaki2":
+            detail = (f" (the fused gpu Scheme-II kernel takes at most "
+                      f"{_gpu.MAX_MODULI} moduli, each <= 256)")
+        warnings.warn(
+            f"backend {requested!r} has no fused {cfg.scheme} lowering "
+            f"for operands {jnp.dtype(a.dtype).name} @ "
+            f"{jnp.dtype(b.dtype).name}{detail}; this call-site expands "
+            "in XLA instead",
+            RuntimeWarning, stacklevel=2)
+        return None
     if not plan.aligned:
         return None
     return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks, plan.backend)
@@ -473,9 +533,9 @@ def resolve_policy(policy, mesh=None):
     Two clamps, in order:
 
     1. (scheme, backend) pairs the selected kernel backend cannot lower
-       (e.g. Scheme II on the 'gpu' backend) rewrite to ``impl='xla'`` —
-       the reference expansion rather than a run-time registry fallback
-       buried inside a jitted step.
+       (e.g. a >16-moduli Scheme-II set on the 'gpu' backend) rewrite to
+       ``impl='xla'`` — the reference expansion rather than a run-time
+       registry fallback buried inside a jitted step.
     2. The fused kernels' interpret-mode lowering is a sequential grid
        loop that GSPMD cannot partition: 'auto'/'pallas' impls survive
        only on a single-device mesh whose jax platform natively compiles
@@ -509,7 +569,9 @@ def resolve_policy(policy, mesh=None):
         if cfg.scheme == "native" or cfg.impl == "xla":
             return cfg
         bk = backends.resolve_backend(cfg=cfg)
-        if cfg.scheme not in bk.capabilities.schemes:
+        # supports() without dtypes: the scheme-level clamp (including
+        # per-backend limits like the gpu kernels' moduli cap).
+        if not bk.supports(cfg):
             return dataclasses.replace(cfg, impl="xla")
         if single and bk.name == jax.default_backend():
             return cfg  # this host compiles the selected backend natively

@@ -128,6 +128,7 @@ def _fused_scheme2_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     m, k = a.shape
     _, n = b.shape
     moduli = cfg.resolved_moduli()
+    scheme2.check_exact_k(k, moduli)
     budget = min(scheme2_budget(moduli, k), jnp.finfo(a.dtype).nmant + 1)
     a_int, mu = scheme2.integerize(a, axis=1, budget_bits=budget)
     b_int, nu = scheme2.integerize(b, axis=0, budget_bits=budget)
@@ -157,6 +158,7 @@ def _fused_3m_matmul(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     out_t = jnp.dtype(out_dtype).type
     moduli = cfg.resolved_moduli()
     k = a.shape[-1]
+    scheme2.check_exact_k(k, moduli)
     real_t = jnp.real(a).dtype
     budget = min(scheme2_budget(moduli, k, complex_guard=True),
                  jnp.finfo(real_t).nmant + 1)

@@ -1,11 +1,16 @@
-"""PreparedOperand: a pre-decomposed Scheme-I rhs, reused across GEMMs.
+"""Pre-decomposed rhs operands, reused across GEMMs.
 
-The Scheme-I pipeline re-decomposes the *same weight matrix* on every
+The emulation pipelines re-decompose the *same weight matrix* on every
 emulated call: forward, the remat re-forward, and the backward
-dA = dC @ B^T (which splits B^T from scratch) each pay the full
-scale-read + split + interleave round-trips — 3x per layer per step in
-training, and once per decode step in serving.  A ``PreparedOperand``
-holds the finished artifact instead:
+dA = dC @ B^T each pay the full scale-read + encode round-trips — 3x
+per layer per step in training, and once per decode step in serving.
+Two prepared artifacts hold the finished encode instead:
+``PreparedOperand`` (Scheme-I int8 mantissa slices) and
+``PreparedResidues`` (Scheme-II balanced int8 residues — consumed by
+the fused GPU residue kernel, whose prologue then skips the rhs
+encode, or expanded in XLA from the stored residue stack).
+
+A ``PreparedOperand`` holds:
 
   * ``slices``  — the p int8 slices, interleaved ((p*K, N), paper Eq. 11)
                   for the fused kernels or stacked ((p, K, N)) for the XLA
@@ -37,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scheme1
-from repro.core.precision import EmulationConfig
+from repro.core.precision import EmulationConfig, scheme2_budget
 from repro.kernels.common import Blocks
 
 
@@ -89,6 +94,70 @@ class PreparedOperand:
         return cls(slices, scale, p, beta, blocks, layout, k, n, twin)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PreparedResidues:
+    """A pre-encoded Scheme-II rhs: balanced int8 residues of the
+    integerized weight, reused across GEMMs.
+
+    ``residues`` is the (p, Kp, Np) balanced int8 residue stack —
+    16-aligned for the fused GPU residue kernel, which streams it
+    directly while its prologue integerizes only the lhs; ``scale`` is
+    the (1, Np) power-of-two integerization scale and ``budget_bits``
+    the per-operand magnitude budget pinned at encode time (the
+    consumer integerizes the lhs at the *same* budget, exactly as the
+    unprepared ``scheme2.matmul`` shares one budget across operands).
+    Unlike the Scheme-I interleaved layout there is no pinned K
+    granularity: the residue stack is consumable at any ``bK``.
+
+    ``layout`` mirrors the Scheme-I 'interleaved'/'stacked' split: it
+    records at prepare time whether consumption may run the fused GPU
+    kernel ('fused', ``cfg.impl`` auto/pallas) or must stay on the XLA
+    expansion ('stacked', ``cfg.impl='xla'`` — e.g. after
+    ``resolve_policy`` clamped a multi-device launch whose sequential
+    interpret-mode grid GSPMD cannot partition).  The stored stack is
+    identical either way; only the consumption route differs.
+
+    ``twin`` is the same weight encoded in the K-transposed layout of
+    B^T (its own scale axis and budget — the dA GEMM contracts over N),
+    consumed by the backward pass under ``cfg.cache_weights``.
+    """
+    residues: jax.Array
+    scale: jax.Array
+    moduli: tuple
+    budget_bits: int
+    blocks: Blocks | None
+    k: int
+    n: int
+    layout: str = "fused"
+    twin: "PreparedResidues | None" = None
+
+    # Spec-compat with PreparedOperand consumers (p = modulus count).
+    @property
+    def p(self) -> int:
+        return len(self.moduli)
+
+    @property
+    def padded_k(self) -> int:
+        return self.residues.shape[1]
+
+    @property
+    def padded_n(self) -> int:
+        return self.residues.shape[2]
+
+    def tree_flatten(self):
+        return ((self.residues, self.scale, self.twin),
+                (self.moduli, self.budget_bits, self.blocks,
+                 self.k, self.n, self.layout))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        residues, scale, twin = children
+        moduli, budget_bits, blocks, k, n, layout = aux
+        return cls(residues, scale, moduli, budget_bits, blocks, k, n,
+                   layout, twin)
+
+
 def _pad2(x: jax.Array, align: int = 128) -> jax.Array:
     from repro.kernels.dispatch import round_up
     k, n = x.shape
@@ -104,15 +173,24 @@ def _use_kernel(cfg: EmulationConfig) -> bool:
 
 def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
                 with_twin: bool = False,
-                m_hint: int = 512) -> PreparedOperand:
+                m_hint: int = 512):
     """Decompose a (K, N) float rhs once, for reuse across GEMMs.
 
-    With ``with_twin`` the K-transposed layout for the backward dA GEMM is
-    produced too; when forward and backward share p, both layouts come out
-    of one fp32 read (the pair kernel).  ``m_hint`` sizes the lhs the
-    block search assumes — consumers re-select with the granularity
-    pinned, so only bK must be right.
+    Under Scheme I returns a :class:`PreparedOperand` (int8 mantissa
+    slices); under Scheme II a :class:`PreparedResidues` (balanced int8
+    residues — the fused GPU kernel streams them and skips the rhs
+    encode).  With ``with_twin`` the K-transposed layout for the
+    backward dA GEMM is produced too; when forward and backward share p,
+    the Scheme-I pair comes out of one fp32 read (the pair kernel).
+    ``m_hint`` sizes the lhs the block search assumes — consumers
+    re-select with the granularity pinned, so only bK must be right.
     """
+    if cfg.scheme == "ozaki2":
+        return prepare_rhs_scheme2(b, cfg, with_twin=with_twin)
+    if isinstance(b, PreparedResidues):
+        raise ValueError("got a PreparedResidues (Scheme-II) operand "
+                         f"under scheme={cfg.scheme!r}; pass the float "
+                         "weight instead")
     if isinstance(b, PreparedOperand):
         return b
     if b.ndim != 2:
@@ -173,15 +251,149 @@ def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
     return PreparedOperand(hat, nu, p, beta, blocks, "interleaved", k, n)
 
 
-def matmul_prepared(a: jax.Array, prep: PreparedOperand,
+def _encode_residues(b: jax.Array, moduli, k_dim: int):
+    """One Scheme-II rhs encode: 16-aligned balanced residue stack +
+    power-of-two scale + the pinned budget.  The encode mirrors
+    ``scheme2.matmul`` exactly (integerize at the shared budget, then
+    ``balanced_residues``), so consumption is bit-identical to the
+    unprepared pipeline; zero-padded rows/cols encode to zero residues,
+    which contribute nothing mod any m_l.
+    """
+    from repro.core import scheme2
+    from repro.kernels.backends import gpu as gpu_backend
+
+    b_pad = _pad2(b, align=gpu_backend.ALIGN)
+    budget = min(scheme2_budget(moduli, k_dim),
+                 jnp.finfo(b.dtype).nmant + 1)
+    nu = scheme2._pow2_int_scale(b_pad, axis=0, budget_bits=budget)
+    res = scheme2.balanced_residues(jnp.trunc(b_pad * nu), moduli)
+    return res, nu, budget
+
+
+def prepare_rhs_scheme2(b: jax.Array, cfg: EmulationConfig, *,
+                        with_twin: bool = False) -> PreparedResidues:
+    """Encode a (K, N) float rhs's balanced Scheme-II residues once.
+
+    The fused GPU residue kernel streams the stack directly (its
+    prologue skips the rhs encode); off-GPU consumers expand from the
+    same stack in XLA.  ``with_twin`` also encodes B^T for the backward
+    dA GEMM — a separate encode (the twin's scale reduces over the
+    other axis and its budget is set by its own contraction length N).
+    """
+    if isinstance(b, PreparedResidues):
+        return b
+    if isinstance(b, PreparedOperand):
+        raise ValueError("got a PreparedOperand (Scheme-I) operand under "
+                         "scheme='ozaki2'; pass the float weight instead")
+    if b.ndim != 2:
+        raise ValueError(f"prepare_rhs is 2-D; got {b.shape}")
+    if jnp.issubdtype(b.dtype, jnp.complexfloating):
+        raise ValueError("prepare_rhs is real-valued; decompose the real "
+                         "and imaginary parts separately (the complex 3M "
+                         "path re-encodes per call)")
+    if not jnp.issubdtype(b.dtype, jnp.floating):
+        b = b.astype(jnp.float32)
+    k, n = b.shape
+    moduli = tuple(int(m) for m in cfg.resolved_moduli())
+    # The consumption route is pinned now, like the Scheme-I
+    # interleaved/stacked split: the fused GPU kernel is taken only when
+    # the config would run fused AND the backend resolution lands on
+    # 'gpu' — an impl='xla' config (resolve_policy's GSPMD clamp) or a
+    # TPU/CPU launch without an explicit gpu request must never re-enter
+    # an interpret-mode pallas_call at consume time; they expand the
+    # same stack in XLA instead.
+    from repro.kernels import backends
+    layout = ("fused" if _use_kernel(cfg)
+              and backends.resolve_backend_name(None, cfg) == "gpu"
+              else "stacked")
+    res, nu, budget = _encode_residues(b, moduli, k_dim=k)
+    twin = None
+    if with_twin:
+        # Mixed-precision backward: a reduced bwd_p keeps the leading
+        # bwd_p moduli, mirroring _bwd_core's replace(p=bwd_p) on a
+        # default-moduli config.
+        t_moduli = moduli[:cfg.bwd_p] if cfg.bwd_p else moduli
+        t_res, tau, t_budget = _encode_residues(b.T, t_moduli, k_dim=n)
+        twin = PreparedResidues(t_res, tau, t_moduli, t_budget, None, n, k,
+                                layout)
+    return PreparedResidues(res, nu, moduli, budget, None, k, n, layout,
+                            twin)
+
+
+def matmul_prepared_scheme2(a: jax.Array, prep: PreparedResidues,
+                            out_dtype=jnp.float32) -> jax.Array:
+    """(M, K) float @ prepared Scheme-II residues (K, N) -> (M, N).
+
+    The lhs integerizes at the prep's pinned budget and carves its
+    residues in the fused GPU kernel's prologue while the stored rhs
+    stack streams as-is ('fused' layout); a 'stacked' prep (impl='xla'
+    configs) or a missing block fit expands the same stack through the
+    XLA reference ops.  Both routes are bit-identical to
+    ``scheme2.matmul`` on the same operands whenever the lhs mantissa
+    does not bound the shared budget below the encode-time budget (any
+    same-precision pair, e.g. f32 @ f32); a lower-precision lhs stays
+    exact under the CRT bound but integerizes the two operands at
+    different budgets, unlike the single-budget unprepared call.
+    """
+    from repro.core import scheme2
+    from repro.kernels import dispatch
+    from repro.kernels.backends import gpu as gpu_backend
+
+    m, k = a.shape
+    if k != prep.k:
+        raise ValueError(f"lhs K={k} vs prepared K={prep.k}")
+    if jnp.issubdtype(a.dtype, jnp.complexfloating):
+        raise ValueError("matmul_prepared is real-valued; got complex lhs "
+                         f"{a.dtype}")
+    moduli = prep.moduli
+    scheme2.check_exact_k(k, moduli)
+    if not jnp.issubdtype(a.dtype, jnp.floating):
+        a = a.astype(jnp.float32)
+    # The lhs integerizes in its own dtype at the encode-pinned budget,
+    # capped by its own mantissa (mirrors scheme2.matmul's shared cap).
+    budget = min(prep.budget_bits, jnp.finfo(a.dtype).nmant + 1)
+    kp, np_ = prep.padded_k, prep.padded_n
+    mp = dispatch.round_up(m, gpu_backend.ALIGN)
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    mu = scheme2._pow2_int_scale(a, axis=1, budget_bits=budget)
+
+    if prep.layout == "fused":
+        blocks = dispatch.select_blocks(
+            mp, np_, kp, len(moduli),
+            out_bytes=jnp.dtype(out_dtype).itemsize, backend="gpu",
+            scheme="ozaki2")
+        if blocks is not None and blocks.aligned(mp, np_, kp):
+            out = gpu_backend.fused_matmul_scheme2(
+                a, prep.residues, mu, prep.scale, moduli, blocks,
+                out_dtype=out_dtype)
+            return out[:m, :prep.n]
+
+    # XLA expansion from the stored residue stack ('stacked' layout, or
+    # no block fit at the fused tile grid).
+    a_res = scheme2.balanced_residues(jnp.trunc(a * mu), moduli)
+    acc = scheme2.residue_gemms(a_res, prep.residues)
+    c_res = scheme2.modular_reduce(acc, moduli)
+    c_int = scheme2.crt_reconstruct(c_res, moduli, out_dtype)
+    out = c_int / (mu.astype(out_dtype) * prep.scale.astype(out_dtype))
+    return out[:m, :prep.n]
+
+
+def matmul_prepared(a: jax.Array, prep,
                     out_dtype=jnp.float32) -> jax.Array:
     """(M, K) float @ prepared (K, N) -> (M, N) ``out_dtype``.
 
-    The lhs decomposes in the kernel prologue (interleaved layout) or via
-    ``scheme1.split`` (stacked layout); the rhs slices are reused as-is.
-    Non-aligned lhs rows/K are zero-padded and the result sliced back.
+    A :class:`PreparedResidues` rhs streams its Scheme-II residue stack
+    (fused GPU kernel, or the XLA expansion off the tile grid).  For a
+    Scheme-I :class:`PreparedOperand`, the lhs decomposes in the kernel
+    prologue (interleaved layout) or via ``scheme1.split`` (stacked
+    layout); the rhs slices are reused as-is.  Non-aligned lhs rows/K
+    are zero-padded and the result sliced back.
     """
     from repro.kernels import dispatch, ozaki1
+
+    if isinstance(prep, PreparedResidues):
+        return matmul_prepared_scheme2(a, prep, out_dtype=out_dtype)
 
     m, k = a.shape
     if k != prep.k:
@@ -258,7 +470,8 @@ def _site_of(path, site_default: str = "ffn") -> str:
 
 
 def _step_cacheable(cfg) -> bool:
-    return cfg.scheme == "ozaki1" and cfg.cache_weights
+    # Scheme I caches int8 slices, Scheme II balanced residues.
+    return cfg.scheme in ("ozaki1", "ozaki2") and cfg.cache_weights
 
 
 def policy_caches_weights(policy) -> bool:
@@ -370,7 +583,7 @@ def prepare_params(params, policy, *, site_default: str = "ffn",
                 or not jnp.issubdtype(leaf.dtype, jnp.floating)):
             return leaf
         cfg = policy.for_site(_site_of(path, site_default))
-        if cfg.scheme != "ozaki1":
+        if cfg.scheme not in ("ozaki1", "ozaki2"):
             return leaf
         return prepare_rhs(leaf, cfg)
 

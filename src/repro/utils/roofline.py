@@ -255,16 +255,23 @@ def roofline_terms(per_device_flops: float, per_device_mem_bytes: float,
 
 def projected_throughput(m: int, k: int, n: int, p: int,
                          scheme: str = "ozaki1", backend: str = "gpu",
-                         out_bytes: int = 4) -> dict:
+                         out_bytes: int = 4,
+                         complex_3m: bool = False) -> dict:
     """Roofline-projected Top/s of one fused emulated GEMM, per hardware
     peak of the selected kernel backend (paper Fig. 4/5 framing: fraction
     of INT8 Tensor Core peak).
 
-    Uses the analytical fused-traffic models (Eq. 10 / Eq. 15) and the
-    per-backend peak tables in ``repro.core.traffic.BACKEND_PEAKS`` — for
-    the 'gpu' backend that means both the Hopper (H100) and Blackwell
-    (B200) entries, so reports show projections for both generations
-    alongside the TPU accounting.
+    Uses the analytical fused-traffic models (Eq. 10 / Eq. 15 / Eq. 18)
+    and the per-backend peak tables in ``repro.core.traffic
+    .BACKEND_PEAKS`` — for the 'gpu' backend that means both the Hopper
+    (H100) and Blackwell (B200) entries, so reports show projections for
+    both generations alongside the TPU accounting.
+
+    On hardware with a native FP64 rate each entry also carries the
+    paper's headline framing: ``baseline_speedup`` — projected fused
+    time vs an FP64 BLAS baseline (``zgemm`` for ``complex_3m``, else
+    ``dgemm``) of the same logical GEMM at that hardware's FP64 peak
+    (the 2.3x-over-cuBLAS-ZGEMM-on-Hopper number of Sec. V).
     """
     from repro.core import traffic as T
     s = T.GemmShape(m, n, k)
@@ -272,11 +279,20 @@ def projected_throughput(m: int, k: int, n: int, p: int,
         flops = T.scheme1_flops(s, p)
         bytes_ = T.scheme1_fused_bytes(s, p, out_bytes)
     elif scheme == "ozaki2":
-        flops = T.scheme2_flops(s, p)
-        bytes_ = p * T.scheme2_fused_bytes_per_modulus(s) \
-            + out_bytes * s.m * s.n
+        flops = T.scheme2_flops(s, p, complex_3m=complex_3m)
+        per_mod = (T.scheme2_3m_fused_bytes_per_modulus(s) if complex_3m
+                   else T.scheme2_fused_bytes_per_modulus(s))
+        n_out = 2 if complex_3m else 1
+        bytes_ = p * per_mod + n_out * out_bytes * s.m * s.n
     else:
         raise ValueError(f"no projection for scheme {scheme!r}")
+    # FP64 BLAS baseline of the same logical GEMM: ZGEMM does 8 real
+    # flops per complex MAC over complex128 operands, DGEMM 2 over f64.
+    if complex_3m:
+        base_name, base_flops, elem = "zgemm", 8 * s.m * s.n * s.k, 16
+    else:
+        base_name, base_flops, elem = "dgemm", 2 * s.m * s.n * s.k, 8
+    base_bytes = elem * ((s.m + s.n) * s.k + s.m * s.n)
     out = {"backend": backend, "scheme": scheme,
            "int8_flops": float(flops), "traffic_bytes": float(bytes_),
            "hardware": {}}
@@ -284,13 +300,19 @@ def projected_throughput(m: int, k: int, n: int, p: int,
         t_c = flops / peak.int8_ops
         t_m = bytes_ / peak.hbm_bw
         t = max(t_c, t_m)
-        out["hardware"][key] = {
+        cell = {
             "name": peak.name,
             "peak_int8_tops": peak.int8_ops / 1e12,
             "projected_tops": flops / t / 1e12 if t else 0.0,
             "fraction_of_peak": (flops / t) / peak.int8_ops if t else 0.0,
             "bound": "compute" if t_c >= t_m else "memory",
         }
+        if peak.fp64_flops and t:
+            t_base = max(base_flops / peak.fp64_flops,
+                         base_bytes / peak.hbm_bw)
+            cell["fp64_baseline"] = base_name
+            cell["baseline_speedup"] = t_base / t
+        out["hardware"][key] = cell
     return out
 
 
@@ -318,6 +340,35 @@ def scheme1_decomposition_terms(m: int, k: int, n: int, p: int,
                                                             uses)
     out["prepared_bytes"] = (T.scheme1_decomp_prologue_bytes(lhs, p, uses)
                              + T.scheme1_decomp_prepared_bytes(rhs, p, 1))
+    for key in ("xla", "prologue", "prepared"):
+        out[f"{key}_s"] = out[f"{key}_bytes"] / HBM_BW
+    return out
+
+
+def scheme2_decomposition_terms(m: int, k: int, n: int, p: int,
+                                uses: int = 3,
+                                complex_3m: bool = False) -> dict:
+    """Residue-side HBM bytes (and seconds at HBM_BW) for one emulated
+    Scheme-II (M, K) @ (K, N) GEMM per training step, under the three
+    residue data paths (repro.core.traffic counting):
+
+      xla      — encode both operands + round-trip the (p, M, N) int32
+                 accumulators and canonical residues through HBM into
+                 the CRT, re-paid ``uses`` times,
+      fused    — the gpu backend's fused residue pipeline: only the
+                 scale pass and the fp32 operand stream touch HBM,
+      prepared — one rhs residue encode per step (PreparedResidues),
+                 reused by every use; the lhs still runs the prologue.
+    """
+    from repro.core import traffic as T
+    s = T.GemmShape(m, n, k)
+    out = {
+        "xla_bytes": T.scheme2_decomp_xla_bytes(s, p, uses, complex_3m),
+        "prologue_bytes": T.scheme2_decomp_prologue_bytes(
+            s, p, uses, complex_3m),
+        "prepared_bytes": T.scheme2_decomp_prepared_bytes(
+            s, p, uses, 1, complex_3m),
+    }
     for key in ("xla", "prologue", "prepared"):
         out[f"{key}_s"] = out[f"{key}_bytes"] / HBM_BW
     return out

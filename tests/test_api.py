@@ -27,6 +27,15 @@ from repro.core.precision import (DEFAULT_MODULI, EmulationConfig,
                                   default_moduli, plan_precision)
 from repro.kernels import dispatch, prepared
 
+
+@pytest.fixture(autouse=True)
+def _clean_ambient_env(monkeypatch):
+    """These tests probe the resolver's *own* semantics: an externally
+    set REPRO_EMULATION (e.g. the CI row that runs the whole suite under
+    ambient ozaki2-m6) must not leak in.  Tests that exercise the env
+    rank set it explicitly via monkeypatch, which runs after this."""
+    monkeypatch.delenv(repro.EMULATION_ENV_VAR, raising=False)
+
 # ---------------------------------------------------------------------------
 # Pillar 1: precision specs.
 # ---------------------------------------------------------------------------
@@ -40,6 +49,8 @@ CANONICAL_SPECS = [
     "ozaki1-p4@gpu",
     "ozaki1-p3+cached",
     "ozaki1-p4@gpu+cached",
+    "ozaki2-m6+cached",
+    "ozaki2-m4@gpu+cached",
     "ozaki1-p4+xla",
     "ozaki2-m8@tpu+pallas",
     "native@xla",
@@ -96,8 +107,7 @@ def test_precision_overrides_kwargs():
     "ozaki1-p0",        # count must be >= 1
     "ozaki1p4",         # missing dash
     "bits=",            # missing number
-    "native+cached",    # cached is Scheme-I-only
-    "ozaki2-m6+cached",
+    "native+cached",    # cached needs an emulation scheme
     "ozaki1-p4+frobnicate",
     "ozaki1-p4@gpu@tpu",
     "",
@@ -472,15 +482,33 @@ def test_einsum_prepared_rhs(make_matrix):
     assert np.abs(out_t - ref_t).max() / np.abs(ref_t).max() < 1e-5
     # ...but the rhs layout is fixed at prepare time: transposing or
     # batching the prepared operand is refused
-    with pytest.raises(ValueError, match="PreparedOperand"):
+    with pytest.raises(ValueError, match="prepared rhs"):
         repro.einsum("bn,kn->bk", jnp.asarray(make_matrix((4, 16))), prep,
                      precision=cfg)
-    with pytest.raises(ValueError, match="PreparedOperand"):
+    with pytest.raises(ValueError, match="prepared rhs"):
         repro.dot_general(x, prep, (((2,), (0,)), ((0,), (0,))),
                           precision=cfg)
     with pytest.raises(ValueError, match="native"):
         repro.einsum("bk,kn->bn", jnp.asarray(make_matrix((4, 32))), prep,
                      precision="native")
+
+
+def test_einsum_prepared_residues_rhs(make_matrix):
+    """A Scheme-II PreparedResidues rhs rides the same front door: the
+    stored residue stack streams through the fused consumption path and
+    mismatched schemes are refused."""
+    from repro.core import scheme2
+    cfg = repro.precision("ozaki2-m6")
+    w = jnp.asarray(make_matrix((32, 16)))
+    prep = prepared.prepare_rhs(w, cfg)
+    assert isinstance(prep, prepared.PreparedResidues)
+    x = jnp.asarray(make_matrix((2, 3, 32)))
+    out = np.asarray(repro.einsum("...k,kn->...n", x, prep, precision=cfg))
+    oracle = np.asarray(scheme2.matmul(x.reshape(-1, 32), w, cfg,
+                                       jnp.float32)).reshape(2, 3, 16)
+    np.testing.assert_array_equal(out, oracle)
+    with pytest.raises(ValueError, match="Scheme-II"):
+        repro.einsum("...k,kn->...n", x, prep, precision="ozaki1-p4")
 
 
 @pytest.mark.parametrize("sub,sa,sb", [

@@ -24,7 +24,8 @@ def test_builtin_backends_registered():
     assert backends.get_backend("tpu").capabilities.align == 128
     assert backends.get_backend("gpu").capabilities.align == 16
     assert backends.get_backend("xla").capabilities.align == 1
-    assert backends.get_backend("gpu").capabilities.schemes == {"ozaki1"}
+    assert backends.get_backend("gpu").capabilities.schemes \
+        == {"ozaki1", "ozaki2"}
     assert "ozaki2" in backends.get_backend("tpu").capabilities.schemes
 
 
@@ -106,10 +107,19 @@ def test_env_override_routes_plan(monkeypatch):
 # Capability fallback: unsupported (scheme, backend) -> 'xla' reference.
 # ---------------------------------------------------------------------------
 
-def test_unsupported_scheme_falls_back_to_xla_reference(make_matrix):
+# A moduli set the fused GPU Scheme-II kernel cannot carry (count >
+# MAX_MODULI=16) but that is still valid Scheme-II data everywhere
+# else: the 16-entry default table plus one more coprime prime.
+from repro.core.precision import DEFAULT_MODULI  # noqa: E402
+
+_WIDE_MODULI = DEFAULT_MODULI + (181,)
+
+
+def test_unsupported_moduli_fall_back_to_xla_reference(make_matrix):
     a = jnp.asarray(make_matrix((100, 72)))
     b = jnp.asarray(make_matrix((72, 56)))
-    cfg = EmulationConfig(scheme="ozaki2", p=8, backend="gpu")
+    cfg = EmulationConfig(scheme="ozaki2", p=4, moduli=_WIDE_MODULI,
+                          backend="gpu")
     plan = dispatch.plan_emulated(a, b, cfg)
     assert plan.backend == "xla"
     out = dispatch.emulated_matmul(a, b, cfg=cfg)
@@ -120,11 +130,21 @@ def test_unsupported_scheme_falls_back_to_xla_reference(make_matrix):
 
 def test_fallback_is_not_offered_to_auto_sites(make_matrix):
     """auto_fused_matmul must return None (let the caller run its own
-    XLA expansion) when the selected backend fell back, instead of
-    pretending the reference path is a fused win."""
+    XLA expansion) when the selected backend fell back — but loudly,
+    naming the fused path being skipped and its moduli limit."""
     a = jnp.asarray(make_matrix((64, 64)))
-    cfg = EmulationConfig(scheme="ozaki2", p=8, backend="gpu")
-    assert dispatch.auto_fused_matmul(a, a, cfg) is None
+    cfg = EmulationConfig(scheme="ozaki2", p=4, moduli=_WIDE_MODULI,
+                          backend="gpu")
+    with pytest.warns(RuntimeWarning, match="moduli"):
+        assert dispatch.auto_fused_matmul(a, a, cfg) is None
+
+
+def test_gpu_matmul_names_moduli_limit(make_matrix):
+    from repro.kernels.backends.gpu import MAX_MODULI
+    a = jnp.asarray(make_matrix((64, 64)))
+    cfg = EmulationConfig(scheme="ozaki2", p=4, moduli=_WIDE_MODULI)
+    with pytest.raises(ValueError, match=str(MAX_MODULI)):
+        backends.get_backend("gpu").matmul(a, a, cfg, jnp.float32, None)
 
 
 # ---------------------------------------------------------------------------
@@ -210,25 +230,165 @@ def test_gpu_out_dtype_and_batching(make_matrix):
 
 
 # ---------------------------------------------------------------------------
+# GPU backend: the fused Scheme-II residue pipeline's bit-parity suite.
+# ---------------------------------------------------------------------------
+
+def _complex(make_matrix, shape):
+    return (jnp.asarray(make_matrix(shape))
+            + 1j * jnp.asarray(make_matrix(shape))).astype(jnp.complex64)
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 96, 80), (128, 128, 128),
+                                   (100, 200, 96)])
+@pytest.mark.parametrize("p", [4, 6])
+def test_gpu_scheme2_bit_parity(make_matrix, m, k, n, p):
+    """The fused residue pipeline (integerize + carve prologue, p modular
+    int8 MMAs, in-register modular reduce + Garner + double-double CRT
+    epilogue) must be bit-identical to the scheme2.matmul oracle —
+    aligned shapes run fused directly, non-16-aligned shapes pad, run
+    fused, and slice back (zero rows/cols encode to zero residues)."""
+    a = jnp.asarray(make_matrix((m, k)))
+    b = jnp.asarray(make_matrix((k, n)))
+    cfg = EmulationConfig(scheme="ozaki2", p=p, backend="gpu")
+    plan = dispatch.plan_emulated(a, b, cfg)
+    assert plan.backend == "gpu"          # no more (ozaki2, gpu) clamp
+    out = dispatch.emulated_matmul(a, b, cfg=cfg)
+    oracle = scheme2.matmul(a, b, cfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_gpu_scheme2_bit_parity_bf16(make_matrix):
+    """Half-precision operands budget from their own mantissa (8 bits
+    for bf16), exactly like the oracle — the widened-f32 kernel interior
+    is value-identical because every recurrence step is exact."""
+    a = jnp.asarray(make_matrix((32, 64))).astype(jnp.bfloat16)
+    b = jnp.asarray(make_matrix((64, 48))).astype(jnp.bfloat16)
+    cfg = EmulationConfig(scheme="ozaki2", p=4, backend="gpu")
+    out = dispatch.emulated_matmul(a, b, cfg=cfg)
+    oracle = scheme2.matmul(a, b, cfg)
+    assert out.dtype == oracle.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out.astype(jnp.float32)),
+                                  np.asarray(oracle.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 96, 80), (50, 70, 30)])
+@pytest.mark.parametrize("p", [4, 6])
+def test_gpu_complex3m_bit_parity(make_matrix, m, k, n, p):
+    """Complex Scheme II rides the fused 3M kernel: the three residue
+    phases carve from one staged read, and the modular 3M combination +
+    two CRT reconstructions run in the epilogue — bit-identical to
+    complex3m.matmul, aligned and padded."""
+    from repro.core import complex3m
+    a = _complex(make_matrix, (m, k))
+    b = _complex(make_matrix, (k, n))
+    cfg = EmulationConfig(scheme="ozaki2", p=p, backend="gpu")
+    out = dispatch.emulated_matmul(a, b, cfg=cfg, out_dtype=jnp.complex64)
+    assert out.shape == (m, n) and out.dtype == jnp.complex64
+    oracle = complex3m.matmul(a, b, cfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 96, 80), (100, 200, 96)])
+@pytest.mark.parametrize("p", [4, 6])
+def test_gpu_scheme2_prepared_rhs_bit_parity(make_matrix, m, k, n, p):
+    """A PreparedResidues rhs streams its stored residue stack while the
+    prologue encodes only the lhs — still bit-identical to the
+    unprepared oracle on the same float operands."""
+    from repro.kernels import prepared
+    a = jnp.asarray(make_matrix((m, k)))
+    b = jnp.asarray(make_matrix((k, n)))
+    cfg = EmulationConfig(scheme="ozaki2", p=p, backend="gpu")
+    prep = prepared.prepare_rhs(b, cfg)
+    assert isinstance(prep, prepared.PreparedResidues)
+    assert prep.p == p and prep.k == k and prep.n == n
+    assert prep.residues.dtype == jnp.int8
+    out = dispatch.emulated_matmul(a, prep, cfg=cfg)
+    oracle = scheme2.matmul(a, b, cfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_gpu_scheme2_blocks_respect_residue_budgets():
+    """The residue-count-aware block search must charge p (3p for 3M)
+    int32 accumulators and the CRT epilogue's double-double pair."""
+    for p in (4, 6, 8):
+        b2 = gpu_backend.choose_blocks_gpu(256, 256, 256, p,
+                                           scheme="ozaki2")
+        assert b2 is not None
+        assert 4 * p * b2.bm * b2.bn <= gpu_backend.ACC_BUDGET
+        smem = (2 * 4 + p) * (b2.bm + b2.bn) * b2.bk \
+            + (4 + 8) * b2.bm * b2.bn
+        assert smem <= gpu_backend.SMEM_BUDGET
+        b3 = gpu_backend.choose_blocks_gpu(256, 256, 256, p,
+                                           scheme="ozaki2-3m")
+        assert b3 is not None
+        assert 4 * 3 * p * b3.bm * b3.bn <= gpu_backend.ACC_BUDGET
+        assert b3.bm * b3.bn <= b2.bm * b2.bn  # 3x accumulators bind
+
+
+def test_scheme2_invariant_guards():
+    """Moduli > 256 (no int8 residue representation) and K past the
+    int32 accumulator bound are refused loudly on every pipeline, not
+    silently wrapped."""
+    from repro.core import scheme2
+    with pytest.raises(ValueError, match="256"):
+        scheme2.balanced_residues(jnp.ones((4, 4)), (521, 523))
+    with pytest.raises(ValueError, match="int32"):
+        scheme2.check_exact_k(200_000, (256, 255))
+    scheme2.check_exact_k(131_071, (256, 255))   # at the documented bound
+    with pytest.raises(ValueError, match="int32"):
+        # K * 128^2 == 2^31 already wraps (int32 max is 2^31 - 1)
+        scheme2.check_exact_k(131_072, (256, 255))
+    with pytest.raises(ValueError, match="int32"):
+        scheme2.matmul(jnp.ones((4, 200_000), jnp.float32),
+                       jnp.ones((200_000, 4), jnp.float32),
+                       EmulationConfig(scheme="ozaki2", p=4))
+
+
+def test_prepared_residues_cross_jit_and_refuse_mismatched_scheme(
+        make_matrix):
+    from repro.kernels import prepared
+    b = jnp.asarray(make_matrix((64, 48)))
+    cfg2 = EmulationConfig(scheme="ozaki2", p=4)
+    cfg1 = EmulationConfig(scheme="ozaki1", p=4)
+    prep = prepared.prepare_rhs(b, cfg2)
+    a = jnp.asarray(make_matrix((32, 64)))
+    # PreparedResidues is a pytree: it crosses a jit boundary
+    out = jax.jit(lambda a, w: prepared.matmul_prepared(a, w))(a, prep)
+    assert out.shape == (32, 48)
+    # scheme mismatches are refused loudly, both ways
+    with pytest.raises(ValueError, match="Scheme-II"):
+        dispatch.emulated_matmul(a, prep, cfg=cfg1)
+    prep1 = prepared.prepare_rhs(b, cfg1)
+    with pytest.raises(ValueError, match="Scheme-I"):
+        dispatch.emulated_matmul(a, prep1, cfg=cfg2)
+
+
+# ---------------------------------------------------------------------------
 # resolve_policy: (scheme, backend) clamping.
 # ---------------------------------------------------------------------------
 
 def test_resolve_policy_clamps_unsupported_scheme_backend(monkeypatch):
     """On a launch target that would otherwise keep fused impls (a
     single-device host natively compiling the selected backend), a
-    (scheme, backend) pair without a fused lowering pins impl='xla'
-    while supported pairs keep their request."""
+    (scheme, backend) pair without a fused lowering — a >int8 moduli set
+    on the gpu backend — pins impl='xla' while supported pairs
+    (including ozaki2 on the fused gpu residue kernel) keep their
+    request."""
     from repro.models.common import GemmPolicy
     monkeypatch.delenv(backends.ENV_VAR, raising=False)
     monkeypatch.setattr(dispatch.jax, "default_backend", lambda: "gpu")
     pol = GemmPolicy(
-        default=EmulationConfig(scheme="ozaki2", p=8, impl="pallas",
-                                backend="gpu"),
+        default=EmulationConfig(scheme="ozaki2", p=4, moduli=_WIDE_MODULI,
+                                impl="pallas", backend="gpu"),
         overrides=(("ffn", EmulationConfig(scheme="ozaki1", p=4,
-                                           impl="pallas", backend="gpu")),))
+                                           impl="pallas", backend="gpu")),
+                   ("attn", EmulationConfig(scheme="ozaki2", p=6,
+                                            impl="pallas",
+                                            backend="gpu"))))
     resolved = dispatch.resolve_policy(pol, mesh=None)
-    assert resolved.default.impl == "xla"          # ozaki2 x gpu: clamped
-    assert dict(resolved.overrides)["ffn"].impl == "pallas"  # supported
+    assert resolved.default.impl == "xla"      # wide moduli: clamped
+    assert dict(resolved.overrides)["ffn"].impl == "pallas"   # supported
+    assert dict(resolved.overrides)["attn"].impl == "pallas"  # fused II
 
 
 def test_resolve_policy_clamps_cross_platform_backend(monkeypatch):

@@ -220,8 +220,13 @@ def test_batched_vmap_over_shared_axis(make_matrix):
 # dispatch: launch-policy resolution.
 # ---------------------------------------------------------------------------
 
-def test_resolve_policy_pins_xla_off_tpu():
+def test_resolve_policy_pins_xla_off_tpu(monkeypatch):
+    from repro import EMULATION_ENV_VAR
     from repro.models.common import GemmPolicy
+    # An externally set ambient spec (the CI row running the suite under
+    # REPRO_EMULATION=ozaki2-m6) would be materialized into the unset
+    # policy below — this test is about the clamps, not the resolver.
+    monkeypatch.delenv(EMULATION_ENV_VAR, raising=False)
     pol = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=3,
                                              impl="pallas"),
                      overrides=(("ffn", EmulationConfig(scheme="ozaki2",

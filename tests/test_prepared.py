@@ -201,6 +201,115 @@ def test_prepared_dot_jits_as_pytree():
     assert -np.log2(rel) > 12
 
 
+# ---------------------------------------------------------------------------
+# Scheme-II PreparedResidues: pre-encoded residue stacks.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 96),      # aligned
+                                   (100, 200, 72)])    # padded
+def test_prepared_residues_forward_bit_identical(m, k, n):
+    """A PreparedResidues rhs (encode once, stream forever) must equal
+    the unprepared scheme2.matmul bitwise — the stored stack is the same
+    balanced encode the reference runs per call."""
+    from repro.core import scheme2
+    # 6 moduli: ~19 bits per operand at these K (4 moduli would only
+    # budget ~11 — the accuracy floor below is budget-dependent).
+    cfg = EmulationConfig(scheme="ozaki2", p=6)
+    a = _conditioned(30, (m, k))
+    b = _conditioned(31, (k, n))
+    prep = prepared.prepare_rhs(b, cfg, with_twin=True)
+    assert isinstance(prep, prepared.PreparedResidues)
+    assert prep.moduli == cfg.resolved_moduli()
+    assert prep.residues.shape[0] == 6
+    out = np.asarray(prepared.matmul_prepared(a, prep))
+    oracle = np.asarray(scheme2.matmul(a, b, cfg, jnp.float32))
+    np.testing.assert_array_equal(out, oracle)
+    # the twin computes dC @ B^T at its own contraction budget
+    g = _conditioned(32, (m, n))
+    da = np.asarray(prepared.matmul_prepared(g, prep.twin))
+    ref_da = np.asarray(g, np.float64) @ np.asarray(b, np.float64).T
+    rel = np.abs(da - ref_da).max() / np.abs(ref_da).max()
+    # ~19-bit operand budget at these K; conditioned matrices eat a few
+    # bits of headroom.
+    assert -np.log2(rel) > 12
+
+
+def test_cached_vjp_ozaki2_matches_uncached():
+    """'ozaki2-mN+cached' reroutes forward + dA through PreparedResidues;
+    gradients must agree with the re-encoding path to emulation
+    precision."""
+    a = _conditioned(33, (60, 100))
+    b = _conditioned(34, (100, 72))
+
+    def loss(cfg):
+        def f(a, b):
+            return jnp.sum(jnp.sin(emulated_dot(a, b, cfg)))
+        return jax.grad(f, argnums=(0, 1))(a, b)
+
+    base = EmulationConfig(scheme="ozaki2", p=4, impl="xla")
+    ga_c, gb_c = loss(EmulationConfig(scheme="ozaki2", p=4, impl="xla",
+                                      cache_weights=True))
+    ga_u, gb_u = loss(base)
+    for gc, gu in ((ga_c, ga_u), (gb_c, gb_u)):
+        np.testing.assert_allclose(np.asarray(gc), np.asarray(gu),
+                                   rtol=1e-4, atol=1e-4 * float(
+                                       jnp.abs(gu).max() + 1e-9))
+
+
+def test_prepared_residues_refuse_complex_and_non2d():
+    cfg = EmulationConfig(scheme="ozaki2", p=4)
+    with pytest.raises(ValueError, match="real-valued"):
+        prepared.prepare_rhs(
+            jnp.ones((8, 8), jnp.complex64), cfg)
+    with pytest.raises(ValueError, match="2-D"):
+        prepared.prepare_rhs(jnp.ones((2, 8, 8)), cfg)
+    prep = prepared.prepare_rhs(_conditioned(35, (64, 48)), cfg)
+    with pytest.raises(ValueError, match="complex"):
+        prepared.matmul_prepared(
+            jnp.ones((8, 64), jnp.complex64), prep)
+    with pytest.raises(ValueError, match="K="):
+        prepared.matmul_prepared(jnp.ones((8, 32)), prep)
+
+
+def test_prepared_residues_respect_bwd_p():
+    """Mixed-precision backward: the twin keeps the leading bwd_p
+    moduli, mirroring _bwd_core's replace(p=bwd_p)."""
+    cfg = EmulationConfig(scheme="ozaki2", p=6, bwd_p=3,
+                          cache_weights=True)
+    prep = prepared.prepare_rhs(_conditioned(38, (64, 64)), cfg,
+                                with_twin=True)
+    assert prep.p == 6 and prep.twin.p == 3
+    assert prep.twin.moduli == prep.moduli[:3]
+
+
+def test_prepared_residues_layout_follows_impl_and_backend():
+    """The consume route is pinned at prepare time: impl='xla' (the
+    resolve_policy GSPMD clamp) or a non-gpu backend resolution stays on
+    the XLA expansion; a gpu resolution takes the fused kernel."""
+    b = _conditioned(39, (64, 48))
+    stacked = prepared.prepare_rhs(
+        b, EmulationConfig(scheme="ozaki2", p=4, impl="xla"))
+    assert stacked.layout == "stacked"
+    fused = prepared.prepare_rhs(
+        b, EmulationConfig(scheme="ozaki2", p=4, backend="gpu"))
+    assert fused.layout == "fused"
+    # a Scheme-I artifact under an ozaki2 config is refused cleanly
+    prep1 = prepared.prepare_rhs(b, EmulationConfig(scheme="ozaki1", p=4))
+    with pytest.raises(ValueError, match="Scheme-I"):
+        prepared.prepare_rhs(prep1, EmulationConfig(scheme="ozaki2", p=4))
+
+
+def test_prepare_params_wraps_ozaki2_projections():
+    from repro.models.common import GemmPolicy
+    policy = GemmPolicy(default=EmulationConfig(scheme="ozaki2", p=4,
+                                                impl="xla"))
+    params = {"ffn": {"wi": _conditioned(36, (64, 128))},
+              "mixer": {"w_r": _conditioned(37, (64, 64))}}
+    out = prepared.prepare_params(params, policy)
+    assert isinstance(out["ffn"]["wi"], prepared.PreparedResidues)
+    assert isinstance(out["mixer"]["w_r"], jax.Array)  # einsum-consumed
+
+
 def test_prepare_params_wraps_only_dense_projections():
     from repro.models.common import GemmPolicy
     policy = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=3,

@@ -92,3 +92,60 @@ def test_decomposition_terms_match_component_model():
         (traffic.scheme1_decomp_prologue_bytes(m * k, p, 3)
          + traffic.scheme1_decomp_prepared_bytes(k * n, p, 1))
     assert t["xla_bytes"] > t["prologue_bytes"] > t["prepared_bytes"]
+
+
+@pytest.mark.parametrize("p", [4, 6])
+def test_scheme2_residue_traffic_reductions(p):
+    """The fused residue pipeline kills both the (p, M, K) residue
+    encodes and the (p, M, N) int32/canonical round-trips: on
+    output-heavy shapes the modelled reduction is >= p-fold, and the
+    prepared-rhs path beats the per-call fused encode."""
+    s = GemmShape(256, 256, 128)
+    xla = traffic.scheme2_decomp_xla_bytes(s, p, uses=3)
+    pro = traffic.scheme2_decomp_prologue_bytes(s, p, uses=3)
+    prep = traffic.scheme2_decomp_prepared_bytes(s, p, uses=3, preps=1)
+    assert xla / pro >= p
+    assert prep < pro < xla
+    r_pro, r_prep = traffic.scheme2_decomp_reduction(s, p, uses=3)
+    assert abs(r_pro - xla / pro) < 1e-9
+    assert abs(r_prep - xla / prep) < 1e-9
+    # 3M: more int32 round-trips vanish (Eq. 17's 24MN term per modulus)
+    xla_3m = traffic.scheme2_decomp_xla_bytes(s, p, uses=3,
+                                              complex_3m=True)
+    pro_3m = traffic.scheme2_decomp_prologue_bytes(s, p, uses=3,
+                                                   complex_3m=True)
+    assert xla_3m / pro_3m > xla / pro
+
+
+def test_scheme2_decomposition_terms_match_component_model():
+    from repro.utils import roofline
+    m, k, n, p = 256, 512, 1024, 6
+    s = GemmShape(m, n, k)
+    t = roofline.scheme2_decomposition_terms(m, k, n, p, uses=3)
+    assert t["xla_bytes"] == traffic.scheme2_decomp_xla_bytes(s, p, 3)
+    assert t["prologue_bytes"] == \
+        traffic.scheme2_decomp_prologue_bytes(s, p, 3)
+    assert t["prepared_bytes"] == \
+        traffic.scheme2_decomp_prepared_bytes(s, p, 3, 1)
+    assert t["xla_bytes"] > t["prologue_bytes"] > t["prepared_bytes"]
+
+
+def test_projected_throughput_zgemm_baseline():
+    """GPU hardware entries carry the paper's headline framing: fused
+    Scheme-II (real/3M) projected time vs the FP64 D/ZGEMM baseline."""
+    from repro.utils import roofline
+    proj = roofline.projected_throughput(4096, 4096, 4096, p=6,
+                                         scheme="ozaki2", backend="gpu",
+                                         complex_3m=True)
+    for cell in proj["hardware"].values():
+        assert cell["fp64_baseline"] == "zgemm"
+        assert cell["baseline_speedup"] > 1.0
+    real = roofline.projected_throughput(4096, 4096, 4096, p=6,
+                                         scheme="ozaki2", backend="gpu")
+    assert all(c["fp64_baseline"] == "dgemm"
+               for c in real["hardware"].values())
+    # no FP64 units -> no baseline report (TPU v5e)
+    tpu = roofline.projected_throughput(4096, 4096, 4096, p=6,
+                                        scheme="ozaki2", backend="tpu")
+    assert all("baseline_speedup" not in c
+               for c in tpu["hardware"].values())
