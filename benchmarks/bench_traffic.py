@@ -19,6 +19,13 @@ above the recorded baseline or the headline reductions fall below the
 acceptance floors (>=2x fused prologue, >=3x PreparedOperand weight
 reuse at p=4; >= p-fold fused residue-side reduction for Scheme II at
 m=6) — the CI regression gate.
+
+The sharded cell family reports the shard_map'ed fused GEMM (repro
+.parallel.shard_gemm) on two 8-device mesh layouts: per-shard fused
+decomposition bytes next to the collective bytes each tensor-parallel
+partitioning adds (column must stay collective-free; row pays a ring
+all-reduce of the output partials), with the roofline-effective Top/s
+per gpu hardware table.
 """
 
 from __future__ import annotations
@@ -48,6 +55,13 @@ PREPARED_FLOOR = 3.0
 SCHEME2_SHAPES = [(256, 256, 256), (256, 128, 256), (192, 128, 384)]
 MS = (4, 6)                    # moduli counts
 SCHEME2_FLOOR = 6.0            # >= p-fold fused reduction at m=6
+
+# Shard_map'ed cells: per-shard fused decomposition bytes next to the
+# collective bytes each mesh layout adds (repro.parallel.shard_gemm
+# partitioning; analytic models in traffic.sharded_gemm_traffic).
+SHARDED_SHAPES = [(256, 256, 512), (512, 384, 1024), (256, 512, 2048)]
+MESH_LAYOUTS = [(("data", 1), ("model", 8)), (("data", 2), ("model", 4))]
+SHARDED_P = 4
 
 
 def _count_ops(hlo_text: str) -> int:
@@ -200,6 +214,28 @@ def run_scheme2_cell(m: int, k: int, n: int, p: int, verify: bool) -> dict:
     return cell
 
 
+def run_sharded_cell(m: int, k: int, n: int, p: int, layout) -> dict:
+    """Per-shard fused bytes + collective bytes of one shard_map'ed GEMM
+    on one mesh layout, under both tensor-parallel partitionings."""
+    s = traffic.GemmShape(m, n, k)
+    cell = {"m": m, "k": k, "n": n, "p": p,
+            "mesh": {a: sz for a, sz in layout}, "partitions": {}}
+    for part in ("column", "row"):
+        t = traffic.sharded_gemm_traffic(s, p, layout, part)
+        proj = roofline.sharded_projected_throughput(m, k, n, p, layout,
+                                                     part)
+        cell["partitions"][part] = {
+            "shard_shape": [t["shard_m"], t["shard_k"], t["shard_n"]],
+            "fused_bytes_per_shard": t["fused_bytes_per_shard"],
+            "collective_bytes_per_device": t["collective_bytes_per_device"],
+            "collective_s": proj["collective_s"],
+            "effective_tops": {
+                hw: c["effective_tops"]
+                for hw, c in proj["hardware"].items()},
+        }
+    return cell
+
+
 def check_baseline(report: dict, baseline: dict) -> list[str]:
     errors = []
     base = {(c["m"], c["k"], c["n"], c["p"]): c for c in baseline["cells"]}
@@ -231,6 +267,25 @@ def check_baseline(report: dict, baseline: dict) -> list[str]:
             if ok is False:
                 errors.append(f"scheme2 {key}: fused {variant} path not "
                               "bit-identical to the reference")
+    base_sh = {(c["m"], c["k"], c["n"], c["p"],
+                tuple(sorted(c["mesh"].items()))): c
+               for c in baseline.get("sharded_cells", ())}
+    for c in report.get("sharded_cells", ()):
+        key = (c["m"], c["k"], c["n"], c["p"],
+               tuple(sorted(c["mesh"].items())))
+        ref = base_sh.get(key)
+        for part, cur in c["partitions"].items():
+            if cur["collective_bytes_per_device"] and part == "column":
+                errors.append(f"sharded {key}: column layout grew a "
+                              "collective")
+            if ref is None or part not in ref["partitions"]:
+                continue
+            old = ref["partitions"][part]
+            for field in ("fused_bytes_per_shard",
+                          "collective_bytes_per_device"):
+                if cur[field] > old[field]:
+                    errors.append(f"sharded {key} {part} {field}: "
+                                  f"{cur[field]} > baseline {old[field]}")
     head = report["acceptance"]
     if head["prologue_reduction_p4"] < PROLOGUE_FLOOR:
         errors.append(f"prologue reduction {head['prologue_reduction_p4']:.2f}"
@@ -286,14 +341,34 @@ def main(argv=None) -> int:
                   f"{hw['b200'].get('baseline_speedup', 0):.1f}x",
                   flush=True)
 
+    cells_sh = []
+    for m, k, n in SHARDED_SHAPES:
+        for layout in MESH_LAYOUTS:
+            cell = run_sharded_cell(m, k, n, SHARDED_P, layout)
+            cells_sh.append(cell)
+            col = cell["partitions"]["column"]
+            row = cell["partitions"]["row"]
+            print(f"sharded ({m},{k},{n}) p={SHARDED_P} "
+                  f"mesh={cell['mesh']}: column "
+                  f"{col['fused_bytes_per_shard']/1e6:.2f}MB/shard + "
+                  f"{col['collective_bytes_per_device']/1e6:.2f}MB coll, "
+                  f"row {row['fused_bytes_per_shard']/1e6:.2f}MB/shard + "
+                  f"{row['collective_bytes_per_device']/1e6:.2f}MB coll "
+                  f"(H100 eff {col['effective_tops']['h100']:.0f}/"
+                  f"{row['effective_tops']['h100']:.0f} Top/s)", flush=True)
+
     p4 = [c for c in cells if c["p"] == 4]
     m6 = [c for c in cells2 if c["p"] == 6]
     report = {
-        "schema": "bench_traffic/v2",
+        "schema": "bench_traffic/v3",
         "uses_per_step": USES,
         "cells": cells,
         "scheme2_cells": cells2,
+        "sharded_cells": cells_sh,
         "acceptance": {
+            "sharded_column_collective_free": all(
+                c["partitions"]["column"]["collective_bytes_per_device"]
+                == 0 for c in cells_sh),
             "prologue_reduction_p4":
                 min(c["reduction"]["prologue"] for c in p4),
             "prepared_weight_reduction_p4":

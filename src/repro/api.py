@@ -210,7 +210,22 @@ def _norm_dnums(dimension_numbers, a_ndim: int, b_ndim: int):
     return lc, rc, lb, rb
 
 
-def _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype):
+def _sharded_2d(a2, b, cfg, mesh):
+    """Route (..., K) @ (K, N) through the shard_map wrapper when the
+    mesh is concrete + multi-device and the config is fused; None means
+    'not partitioned here' and the caller takes the unsharded route."""
+    if mesh is None:
+        return None
+    from repro.kernels import dispatch
+    if not dispatch._shardable_mesh(mesh) \
+            or cfg.impl not in ("auto", "pallas") or cfg.scheme == "native":
+        return None
+    from repro.parallel import shard_gemm
+    return shard_gemm.sharded_dense(a2, b, cfg, mesh)
+
+
+def _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype,
+                          mesh=None):
     """Prepared rhs: only (..., K) x prepared (K, N) shapes exist — the
     slices/residues were laid out at prepare time and cannot be
     transposed."""
@@ -247,12 +262,16 @@ def _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype):
         out_dtype = cfg.out_dtype
     if out_dtype is None:
         out_dtype = jnp.promote_types(a.dtype, jnp.float32)
+    out = _sharded_2d(a, b, cfg, mesh)
+    if out is not None:
+        return out.astype(out_dtype)
     return prepared_dot(a, b, out_dtype=out_dtype)
 
 
 def dot_general(a: jax.Array, b, dimension_numbers, *,
                 precision: str | EmulationConfig | None = None,
-                out_dtype=None, backend: str | None = None) -> jax.Array:
+                out_dtype=None, backend: str | None = None,
+                mesh=None) -> jax.Array:
     """Emulated ``jax.lax.dot_general``: any batched/multi-axis contraction.
 
     ``dimension_numbers`` follows the lax convention
@@ -268,12 +287,24 @@ def dot_general(a: jax.Array, b, dimension_numbers, *,
     ``b`` may be a :class:`repro.kernels.prepared.PreparedOperand`
     (pre-decomposed Scheme-I weight); the dimension numbers must then
     name its fixed (K, N) layout: ``(((k_axis,), (0,)), ((), ()))``.
+
+    ``mesh`` (a concrete multi-device ``jax.sharding.Mesh`` with the
+    launch layer's ``('data', 'model')`` axes) runs the fused kernels
+    *per shard* under ``shard_map`` instead of handing GSPMD an
+    unpartitionable kernel body: non-batched contractions partition via
+    :func:`repro.parallel.shard_gemm.gemm_partition` (column-parallel
+    when N divides the model axis — collective-free and bit-identical
+    to the unsharded call — else K-sharded with a psum). Problems the
+    partitioner cannot fit, batched contractions, and non-fused configs
+    silently take the regular route; ``mesh=None`` (the default) is
+    exactly the historical behavior.
     """
     cfg = resolve_config(precision)
     if backend is not None:
         cfg = dataclasses.replace(cfg, backend=backend)
     if _is_prepared(b):
-        return _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype)
+        return _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype,
+                                     mesh=mesh)
 
     lc, rc, lb, rb = _norm_dnums(dimension_numbers, a.ndim, b.ndim)
     for i, (dl, dr) in enumerate(zip(lc, rc)):
@@ -311,7 +342,9 @@ def dot_general(a: jax.Array, b, dimension_numbers, *,
     b2 = b_t.reshape(batch_shape + (k, n))
 
     if not lb:
-        out = emulated_dot(a2, b2, cfg2)
+        out = _sharded_2d(a2, b2, cfg2, mesh)
+        if out is None:
+            out = emulated_dot(a2, b2, cfg2)
     else:
         nb = len(lb)
         a3 = a2.reshape((-1,) + a2.shape[nb:])
@@ -403,14 +436,16 @@ def _parse_einsum(subscripts: str, a_ndim: int, b_ndim: int):
 
 def einsum(subscripts: str, a: jax.Array, b, *,
            precision: str | EmulationConfig | None = None,
-           out_dtype=None, backend: str | None = None) -> jax.Array:
+           out_dtype=None, backend: str | None = None,
+           mesh=None) -> jax.Array:
     """Emulated two-operand ``jnp.einsum``.
 
     Supports batch dims, multiple contraction axes, ellipses and summed
     free axes — everything a two-operand einsum without in-operand
     repeats (diagonals) can express. The contraction lowers through
-    :func:`dot_general`, so precision resolution, differentiability and
-    PreparedOperand handling are identical. Example::
+    :func:`dot_general`, so precision resolution, differentiability,
+    PreparedOperand handling and the ``mesh`` shard_map pass-through are
+    identical. Example::
 
         with repro.emulation("ozaki2-m8"):
             attn = repro.einsum("bqhd,bkhd->bhqk", q, k)
@@ -445,7 +480,7 @@ def einsum(subscripts: str, a: jax.Array, b, *,
         k_axis = a_labels.index(b_labels[0])
         dnums = (((k_axis,), (0,)), ((), ()))
         out = dot_general(a, b, dnums, precision=precision,
-                          out_dtype=out_dtype, backend=backend)
+                          out_dtype=out_dtype, backend=backend, mesh=mesh)
         canon = [lab for lab in a_labels if lab != b_labels[0]] \
             + [b_labels[1]]
     else:
@@ -471,7 +506,7 @@ def einsum(subscripts: str, a: jax.Array, b, *,
         if b_shape != list(b.shape):
             b = jnp.broadcast_to(b, b_shape)
         out = dot_general(a, b, ((lc, rc), (lb, rb)), precision=precision,
-                          out_dtype=out_dtype, backend=backend)
+                          out_dtype=out_dtype, backend=backend, mesh=mesh)
         canon = batch + [lab for lab in a_labels if lab not in shared] \
             + [lab for lab in b_labels if lab not in shared]
     if canon != out_labels:

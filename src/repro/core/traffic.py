@@ -257,6 +257,104 @@ def backend_peaks(backend: str) -> dict[str, HardwarePeak]:
             or BACKEND_PEAKS["tpu"])
 
 
+# ---------------------------------------------------------------------------
+# Collective traffic of the shard_map'ed fused GEMM (repro.parallel
+# .shard_gemm).  The per-shard kernel keeps its decomposition traffic
+# on-chip exactly like the single-device numbers above; what the mesh
+# adds is interconnect bytes, and those depend only on the partitioning:
+#
+#   column (N on 'model')  — collective-free: each shard owns whole
+#                            output columns and the full K,
+#   row (K on 'model')     — one psum of the (M, N) partial products,
+#                            modeled as a ring all-reduce,
+#   batch (data axes only) — collective-free for the GEMM itself.
+#
+# Ring cost convention (the standard bound): an all-reduce moves
+# 2(n-1)/n * payload per device, all-gather / reduce-scatter (n-1)/n.
+# ---------------------------------------------------------------------------
+
+
+def ring_all_reduce_bytes(payload_bytes: int, n_dev: int) -> int:
+    """Per-device interconnect bytes of a ring all-reduce."""
+    if n_dev <= 1:
+        return 0
+    return int(2 * (n_dev - 1) * payload_bytes // n_dev)
+
+
+def all_gather_bytes(payload_bytes: int, n_dev: int) -> int:
+    """Per-device interconnect bytes of a ring all-gather of a tensor
+    whose *global* size is ``payload_bytes``."""
+    if n_dev <= 1:
+        return 0
+    return int((n_dev - 1) * payload_bytes // n_dev)
+
+
+reduce_scatter_bytes = all_gather_bytes  # same ring volume, one phase
+
+
+def _mesh_axis_sizes(mesh_shape) -> dict:
+    if mesh_shape is None:
+        return {}
+    if hasattr(mesh_shape, "items"):
+        return {str(a): int(sz) for a, sz in mesh_shape.items()}
+    return {str(a): int(sz) for a, sz in mesh_shape}
+
+
+def sharded_gemm_traffic(s: GemmShape, p: int, mesh_shape,
+                         partition: str = "column",
+                         scheme: str = "ozaki1", out_bytes: int = 4,
+                         complex_3m: bool = False) -> dict:
+    """Per-shard fused HBM bytes + per-device collective bytes of one
+    shard_map'ed emulated (M, K) @ (K, N) on a mesh.
+
+    ``mesh_shape`` is the launch mesh's axis sizes (a mapping or the
+    ``((axis, size), ...)`` tuples ``dispatch._mesh_shape_tuple``
+    produces); ``partition`` is a :class:`repro.parallel.shard_gemm
+    .GemmPartition` kind ('column' | 'row' | 'batch').  The fused bytes
+    are the paper's Eq. 10/15/18 models evaluated on the *shard-local*
+    shape; collective bytes follow the ring conventions above.
+    """
+    axes = _mesh_axis_sizes(mesh_shape)
+    dp = axes.get("pod", 1) * axes.get("data", 1)
+    tp = axes.get("model", 1)
+    m_l, n_l, k_l = s.m, s.n, s.k
+    if dp > 1 and s.m % dp == 0:
+        m_l = s.m // dp
+    coll = 0
+    if partition == "column":
+        if tp > 1 and s.n % tp:
+            raise ValueError(f"N={s.n} does not divide model={tp}")
+        n_l = s.n // tp if tp > 1 else s.n
+    elif partition == "row":
+        if tp > 1 and s.k % tp:
+            raise ValueError(f"K={s.k} does not divide model={tp}")
+        k_l = s.k // tp if tp > 1 else s.k
+        n_out = 2 if complex_3m else 1
+        coll = ring_all_reduce_bytes(n_out * out_bytes * m_l * n_l, tp)
+    elif partition != "batch":
+        raise ValueError(f"unknown partition {partition!r}")
+    local = GemmShape(m_l, n_l, k_l)
+    if scheme == "ozaki1":
+        fused = scheme1_fused_bytes(local, p, out_bytes)
+        flops = scheme1_flops(local, p)
+    elif scheme == "ozaki2":
+        per_mod = (scheme2_3m_fused_bytes_per_modulus(local) if complex_3m
+                   else scheme2_fused_bytes_per_modulus(local))
+        n_out = 2 if complex_3m else 1
+        fused = p * per_mod + n_out * out_bytes * local.m * local.n
+        flops = scheme2_flops(local, p, complex_3m=complex_3m)
+    else:
+        raise ValueError(f"no sharded traffic model for scheme {scheme!r}")
+    return {
+        "partition": partition,
+        "shard_m": m_l, "shard_n": n_l, "shard_k": k_l,
+        "devices": dp * tp,
+        "fused_bytes_per_shard": int(fused),
+        "int8_flops_per_shard": int(flops),
+        "collective_bytes_per_device": int(coll),
+    }
+
+
 def scheme2_workspace_bytes(s: GemmShape, p: int,
                             complex_inputs: bool = False) -> int:
     """p residue matrices per operand + p per-modulus output residues

@@ -95,7 +95,13 @@ class BackendCapabilities:
       accumulator_budget: bytes available for the p int32 accumulators
                         (VMEM scratch on TPU, registers/TMEM on GPU),
       peak_key:         key into ``repro.core.traffic.BACKEND_PEAKS`` —
-                        the hardware table roofline projections use.
+                        the hardware table roofline projections use,
+      shardable:        whether the fused lowerings may run per-shard
+                        under ``shard_map`` on a multi-device mesh
+                        (``resolve_policy`` keeps fused impls on such
+                        meshes only when this is set; the default False
+                        keeps out-of-tree backends on the conservative
+                        multi-device clamp until they opt in).
     """
     align: int
     schemes: frozenset
@@ -103,6 +109,7 @@ class BackendCapabilities:
     staging_budget: int
     accumulator_budget: int
     peak_key: str
+    shardable: bool = False
 
 
 class KernelBackend(abc.ABC):

@@ -79,6 +79,7 @@ _CAPS = BackendCapabilities(
     staging_budget=SMEM_BUDGET,
     accumulator_budget=ACC_BUDGET,
     peak_key="gpu",
+    shardable=True,
 )
 
 

@@ -26,6 +26,7 @@ _CAPS = BackendCapabilities(
     staging_budget=VMEM_BUDGET,
     accumulator_budget=VMEM_BUDGET,
     peak_key="tpu",
+    shardable=True,
 )
 
 

@@ -25,6 +25,7 @@ _CAPS = BackendCapabilities(
     staging_budget=0,
     accumulator_budget=0,
     peak_key="xla",
+    shardable=True,
 )
 
 

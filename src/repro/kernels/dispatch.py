@@ -99,7 +99,8 @@ def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
                   backend: str | None = None, prologue_a: bool = False,
                   prologue_b: bool = False,
                   fixed_bk: int | None = None,
-                  scheme: str = "ozaki1") -> Blocks | None:
+                  scheme: str = "ozaki1",
+                  mesh_shape: tuple | None = None) -> Blocks | None:
     """Cached block selection through the backend registry.
 
     ``backend`` may be any string — platform-qualified names bucket their
@@ -107,10 +108,15 @@ def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
     to the nearest registered backend for the actual tile search.
     ``scheme`` ('ozaki1' | 'ozaki2' | 'ozaki2-3m') keys the cache and
     selects the backend's residue-count-aware resource model.
+    ``mesh_shape`` is the launch mesh's axis sizes when (m, n, k) are
+    *shard-local* dims of a shard_map'ed GEMM: the same local shape on
+    two different meshes keys distinct entries, so per-shard selections
+    never collide across mesh layouts (single-device callers pass None).
     """
     bucket = backend or backends.resolve_backend_name()
     cache = _BLOCK_CACHES.setdefault(bucket, _BlockCache())
-    key = (m, n, k, p, out_bytes, prologue_a, prologue_b, fixed_bk, scheme)
+    key = (m, n, k, p, out_bytes, prologue_a, prologue_b, fixed_bk, scheme,
+           mesh_shape)
     try:
         blocks = cache.data[key]
         cache.hits += 1
@@ -256,6 +262,9 @@ class GemmPlan:
     # Block-model key: 'ozaki1' | 'ozaki2' | 'ozaki2-3m' (complex inputs
     # under Scheme II plan for the fused 3M kernel's larger footprint).
     scheme: str = "ozaki1"
+    # Axis sizes of the launch mesh when (m, n, k) are shard-local dims
+    # of a shard_map'ed GEMM (keys the block cache; None = unsharded).
+    mesh_shape: tuple | None = None
 
     @property
     def aligned(self) -> bool:
@@ -280,7 +289,8 @@ def _plan_backend(cfg: EmulationConfig, a, b,
 
 
 def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
-                  out_dtype=None, backend: str | None = None) -> GemmPlan:
+                  out_dtype=None, backend: str | None = None,
+                  mesh_shape: tuple | None = None) -> GemmPlan:
     """Resolve backend, output dtype and cached blocks for one 2-D GEMM.
 
     ``p_eff`` is the residue count the block search budgets for: the
@@ -309,8 +319,9 @@ def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     blocks = select_blocks(m, n, k, p_eff,
                            out_bytes=jnp.dtype(out_dtype).itemsize,
                            backend=name, prologue_a=pro, prologue_b=pro,
-                           scheme=scheme)
-    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks, name, scheme)
+                           scheme=scheme, mesh_shape=mesh_shape)
+    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks, name, scheme,
+                    mesh_shape)
 
 
 def _replan_padded(plan: GemmPlan) -> GemmPlan:
@@ -319,7 +330,8 @@ def _replan_padded(plan: GemmPlan) -> GemmPlan:
     blocks = select_blocks(mp, np_, kp, plan.p_eff,
                            out_bytes=jnp.dtype(plan.out_dtype).itemsize,
                            backend=plan.backend, prologue_a=pro,
-                           prologue_b=pro, scheme=plan.scheme)
+                           prologue_b=pro, scheme=plan.scheme,
+                           mesh_shape=plan.mesh_shape)
     return dataclasses.replace(plan, m=mp, n=np_, k=kp, blocks=blocks)
 
 
@@ -364,7 +376,8 @@ def emulated_matmul(a: jax.Array, b, *,
                     cfg: "EmulationConfig | str | None" = None,
                     out_dtype=None, backend: str | None = None,
                     scheme: str | None = None,
-                    precision: int | None = None) -> jax.Array:
+                    precision: int | None = None,
+                    mesh_shape: tuple | None = None) -> jax.Array:
     """Emulated (M, K) @ (K, N) through the fused kernels of the selected
     backend (``backend`` arg > ``REPRO_BACKEND`` > ``cfg.backend`` >
     platform default; unsupported (scheme, dtype) pairs fall back to the
@@ -382,6 +395,11 @@ def emulated_matmul(a: jax.Array, b, *,
     ``b`` may be a :class:`repro.kernels.prepared.PreparedOperand`: its
     finished int8 slices are streamed as-is and only the lhs decomposes
     (in the kernel prologue).
+
+    ``mesh_shape`` (the launch mesh's axis sizes) marks the operands as
+    *shard-local* tiles of a shard_map'ed GEMM — it keys the block cache
+    so per-shard selections never collide across mesh layouts; see
+    ``repro.parallel.shard_gemm``.
     """
     cfg = _resolve_cfg(cfg, scheme, precision)
     if _is_prepared(b):
@@ -424,7 +442,8 @@ def emulated_matmul(a: jax.Array, b, *,
                      or jnp.promote_types(a.dtype, b.dtype))
         return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                                    preferred_element_type=out_dtype)
-    plan = plan_emulated(a, b, cfg, out_dtype, backend)
+    plan = plan_emulated(a, b, cfg, out_dtype, backend,
+                         mesh_shape=mesh_shape)
     if plan.aligned:
         return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks,
                          plan.backend)
@@ -463,6 +482,28 @@ def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
     return jax.vmap(fn)(a, b)
 
 
+# Fallback RuntimeWarnings already seen, keyed by (reason, shape-class):
+# the requested backend/scheme/dtype pair that fell back plus the operand
+# shape class. Scanned training steps re-trace the same call-site once
+# per microbatch/layer combination; without the dedupe every re-trace
+# re-warned and multi-device logs drowned in the repeat.
+_FALLBACK_WARNED: set = set()
+
+
+def fallback_warnings_clear() -> None:
+    """Forget which fused-fallback warnings fired (tests/log hygiene)."""
+    _FALLBACK_WARNED.clear()
+
+
+def _warn_fallback_once(reason: tuple, shape_class: tuple, message: str,
+                        stacklevel: int = 3) -> None:
+    key = (reason, shape_class)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(message, RuntimeWarning, stacklevel=stacklevel)
+
+
 def auto_fused_matmul(a: jax.Array, b, cfg: EmulationConfig):
     """'auto'-impl hook: the fused kernel when the 2-D problem is naturally
     tile-aligned for the selected backend, else None (caller falls back to
@@ -490,12 +531,13 @@ def auto_fused_matmul(a: jax.Array, b, cfg: EmulationConfig):
         if requested == "gpu" and cfg.scheme == "ozaki2":
             detail = (f" (the fused gpu Scheme-II kernel takes at most "
                       f"{_gpu.MAX_MODULI} moduli, each <= 256)")
-        warnings.warn(
+        a_name, b_name = jnp.dtype(a.dtype).name, jnp.dtype(b.dtype).name
+        _warn_fallback_once(
+            (requested, cfg.scheme, a_name, b_name),
+            (a.shape, b.shape),
             f"backend {requested!r} has no fused {cfg.scheme} lowering "
-            f"for operands {jnp.dtype(a.dtype).name} @ "
-            f"{jnp.dtype(b.dtype).name}{detail}; this call-site expands "
-            "in XLA instead",
-            RuntimeWarning, stacklevel=2)
+            f"for operands {a_name} @ {b_name}{detail}; this call-site "
+            "expands in XLA instead")
         return None
     if not plan.aligned:
         return None
@@ -516,15 +558,58 @@ def maybe_emulated_matmul(a: jax.Array, b, cfg: EmulationConfig):
 # ---------------------------------------------------------------------------
 
 def _mesh_devices(mesh) -> int:
+    """Device count of a launch mesh.
+
+    Handles every mesh flavor the launch layer produces consistently: a
+    concrete ``jax.sharding.Mesh`` and a device-free ``AbstractMesh``
+    both answer through ``.size`` when present; meshes exposing only a
+    ``shape`` answer through it whether it is mapping-shaped
+    ({axis: size}, the Mesh/AbstractMesh convention) or a plain tuple of
+    axis sizes; ``None`` means the process-global device count.
+    """
     if mesh is None:
         return len(jax.devices())
     size = getattr(mesh, "size", None)
     if size is not None:
         return int(size)
     shape = getattr(mesh, "shape", None)
-    if hasattr(shape, "values"):
+    if hasattr(shape, "values"):             # mapping: {axis_name: size}
         return math.prod(shape.values())
+    if shape is not None:                    # plain tuple of axis sizes
+        try:
+            return math.prod(int(s) for s in shape)
+        except (TypeError, ValueError):
+            pass
     return len(jax.devices())
+
+
+def _mesh_shape_tuple(mesh) -> tuple | None:
+    """((axis, size), ...) of a mesh, or None — the hashable mesh
+    identity the block cache and prepared-operand pinning key on."""
+    if mesh is None:
+        return None
+    shape = getattr(mesh, "shape", None)
+    if hasattr(shape, "items"):
+        return tuple((str(a), int(s)) for a, s in shape.items())
+    if shape is not None:
+        try:
+            return tuple((str(i), int(s)) for i, s in enumerate(shape))
+        except (TypeError, ValueError):
+            return None
+    return None
+
+
+def _shardable_mesh(mesh) -> bool:
+    """Can fused call-sites run per-shard under shard_map on this mesh?
+
+    Requires a *concrete* multi-device Mesh: shard_map needs named axes
+    backed by real devices. Device-free AbstractMeshes (dry-run
+    lowering) and a bare device count (mesh=None on a multi-device
+    host) keep the conservative clamp — there is nothing to map over.
+    """
+    from jax.sharding import Mesh
+    return (isinstance(mesh, Mesh) and _mesh_devices(mesh) > 1
+            and bool(getattr(mesh, "axis_names", ())))
 
 
 def resolve_policy(policy, mesh=None):
@@ -536,13 +621,24 @@ def resolve_policy(policy, mesh=None):
        (e.g. a >16-moduli Scheme-II set on the 'gpu' backend) rewrite to
        ``impl='xla'`` — the reference expansion rather than a run-time
        registry fallback buried inside a jitted step.
-    2. The fused kernels' interpret-mode lowering is a sequential grid
-       loop that GSPMD cannot partition: 'auto'/'pallas' impls survive
-       only on a single-device mesh whose jax platform natively compiles
-       the selected kernel backend (TPU host + 'tpu' backend, GPU host +
-       'gpu' backend); every other combination — multi-device meshes,
-       CPU hosts, cross-platform backend requests — rewrites to 'xla' so
-       the emulation partitions like any other dot.
+    2. Fused 'auto'/'pallas' impls survive in exactly two launch
+       geometries:
+
+       * a single-device mesh whose jax platform natively compiles the
+         selected kernel backend (TPU host + 'tpu' backend, GPU host +
+         'gpu' backend), or
+       * a concrete multi-device mesh whose selected backend declares
+         ``BackendCapabilities.shardable`` — the call-sites then run the
+         fused kernel *per shard* under ``shard_map`` (see
+         ``repro.parallel.shard_gemm``), with explicit collectives
+         instead of GSPMD partitioning of the kernel body. The mesh is
+         recorded on the returned policy (``GemmPolicy.mesh``) so the
+         model layer knows which axes to map over.
+
+       Everything else — device-free AbstractMeshes, a bare multi-device
+       host with no mesh to map over, non-shardable out-of-tree
+       backends, cross-platform single-device requests — rewrites to
+       'xla' so the emulation partitions like any other dot.
 
     A policy whose ``default`` is None (unset) first materializes the
     ambient config through ``repro.resolve_config`` — the launch layer
@@ -564,6 +660,7 @@ def resolve_policy(policy, mesh=None):
         return policy
 
     single = _mesh_devices(mesh) <= 1
+    sharded = _shardable_mesh(mesh)
 
     def fix(cfg: EmulationConfig) -> EmulationConfig:
         if cfg.scheme == "native" or cfg.impl == "xla":
@@ -575,8 +672,20 @@ def resolve_policy(policy, mesh=None):
             return dataclasses.replace(cfg, impl="xla")
         if single and bk.name == jax.default_backend():
             return cfg  # this host compiles the selected backend natively
+        if sharded and bk.capabilities.shardable:
+            # GSPMD-native: the shard_map wrapper launches the fused
+            # kernel on each shard's local tile and issues the
+            # collectives itself, so the old multi-device clamp no
+            # longer applies.
+            return cfg
         return dataclasses.replace(cfg, impl="xla")
 
-    return dataclasses.replace(
-        policy, default=fix(policy.default),
-        overrides=tuple((s, fix(c)) for s, c in policy.overrides))
+    fixed_default = fix(policy.default)
+    fixed_overrides = tuple((s, fix(c)) for s, c in policy.overrides)
+    fixed = dataclasses.replace(policy, default=fixed_default,
+                                overrides=fixed_overrides)
+    if sharded and hasattr(policy, "mesh") and any(
+            c.scheme != "native" and c.impl != "xla"
+            for c in [fixed_default] + [c for _, c in fixed_overrides]):
+        fixed = dataclasses.replace(fixed, mesh=mesh)
+    return fixed

@@ -64,6 +64,11 @@ class PreparedOperand:
     k: int
     n: int
     twin: "PreparedOperand | None" = None
+    # Launch-mesh axis sizes this operand was prepared under (the
+    # consume-route pinning of the layout field, extended to GSPMD:
+    # shard_gemm checks it when localizing the stack for column-parallel
+    # consumption).  None = prepared for single-device launches.
+    mesh_shape: tuple | None = None
 
     @property
     def padded_k(self) -> int:
@@ -85,13 +90,14 @@ class PreparedOperand:
     def tree_flatten(self):
         return ((self.slices, self.scale, self.twin),
                 (self.p, self.beta, self.blocks, self.layout,
-                 self.k, self.n))
+                 self.k, self.n, self.mesh_shape))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         slices, scale, twin = children
-        p, beta, blocks, layout, k, n = aux
-        return cls(slices, scale, p, beta, blocks, layout, k, n, twin)
+        p, beta, blocks, layout, k, n, mesh_shape = aux
+        return cls(slices, scale, p, beta, blocks, layout, k, n, twin,
+                   mesh_shape)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -131,6 +137,8 @@ class PreparedResidues:
     n: int
     layout: str = "fused"
     twin: "PreparedResidues | None" = None
+    # Launch-mesh axis sizes at prepare time (see PreparedOperand).
+    mesh_shape: tuple | None = None
 
     # Spec-compat with PreparedOperand consumers (p = modulus count).
     @property
@@ -148,14 +156,14 @@ class PreparedResidues:
     def tree_flatten(self):
         return ((self.residues, self.scale, self.twin),
                 (self.moduli, self.budget_bits, self.blocks,
-                 self.k, self.n, self.layout))
+                 self.k, self.n, self.layout, self.mesh_shape))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         residues, scale, twin = children
-        moduli, budget_bits, blocks, k, n, layout = aux
+        moduli, budget_bits, blocks, k, n, layout, mesh_shape = aux
         return cls(residues, scale, moduli, budget_bits, blocks, k, n,
-                   layout, twin)
+                   layout, twin, mesh_shape)
 
 
 def _pad2(x: jax.Array, align: int = 128) -> jax.Array:
@@ -173,7 +181,7 @@ def _use_kernel(cfg: EmulationConfig) -> bool:
 
 def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
                 with_twin: bool = False,
-                m_hint: int = 512):
+                m_hint: int = 512, mesh=None):
     """Decompose a (K, N) float rhs once, for reuse across GEMMs.
 
     Under Scheme I returns a :class:`PreparedOperand` (int8 mantissa
@@ -184,9 +192,15 @@ def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
     the Scheme-I pair comes out of one fp32 read (the pair kernel).
     ``m_hint`` sizes the lhs the block search assumes — consumers
     re-select with the granularity pinned, so only bK must be right.
+
+    ``mesh`` records the launch mesh the operand is prepared under (the
+    GSPMD leg of the consume-route pinning): its axis sizes key the
+    block-granularity cache and travel on the artifact, so
+    ``shard_gemm`` can refuse to localize a stack pinned for a
+    different mesh layout.
     """
     if cfg.scheme == "ozaki2":
-        return prepare_rhs_scheme2(b, cfg, with_twin=with_twin)
+        return prepare_rhs_scheme2(b, cfg, with_twin=with_twin, mesh=mesh)
     if isinstance(b, PreparedResidues):
         raise ValueError("got a PreparedResidues (Scheme-II) operand "
                          f"under scheme={cfg.scheme!r}; pass the float "
@@ -208,6 +222,7 @@ def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
     p = cfg.p
     beta = cfg.resolved_beta(kp)
     nu = scheme1._pow2_row_scale(b_pad, axis=0)          # (1, Np)
+    mesh_shape = dispatch._mesh_shape_tuple(mesh)
 
     p_bwd = cfg.bwd_p or p
     beta_bwd = cfg.resolved_beta(np_)
@@ -218,17 +233,18 @@ def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
         if with_twin:
             t_slices, tau = scheme1.split(b_pad.T, p_bwd, beta_bwd, axis=0)
             twin = PreparedOperand(t_slices, tau, p_bwd, beta_bwd, None,
-                                   "stacked", n, k)
+                                   "stacked", n, k, mesh_shape=mesh_shape)
         return PreparedOperand(slices, nu, p, beta, None, "stacked",
-                               k, n, twin)
+                               k, n, twin, mesh_shape)
 
     blocks = dispatch.select_blocks(m_hint, np_, kp, p, backend="tpu",
-                                    prologue_a=True)
+                                    prologue_a=True, mesh_shape=mesh_shape)
     if blocks is None:
         blocks = Blocks(128, 128, 128)
     if with_twin:
         t_blocks = dispatch.select_blocks(m_hint, kp, np_, p_bwd,
-                                          backend="tpu", prologue_a=True)
+                                          backend="tpu", prologue_a=True,
+                                          mesh_shape=mesh_shape)
         if t_blocks is None:
             t_blocks = Blocks(128, 128, 128)
         tau = scheme1._pow2_row_scale(b_pad.T, axis=0)   # (1, Kp)
@@ -243,12 +259,13 @@ def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
             t_hat = decompose.decompose_interleave_rhs(
                 b_pad.T, tau, p_bwd, beta_bwd, bk=t_blocks.bk)
         twin = PreparedOperand(t_hat, tau, p_bwd, beta_bwd, t_blocks,
-                               "interleaved", n, k)
+                               "interleaved", n, k, mesh_shape=mesh_shape)
         return PreparedOperand(hat, nu, p, beta, blocks, "interleaved",
-                               k, n, twin)
+                               k, n, twin, mesh_shape)
     hat = decompose.decompose_interleave_rhs(b_pad, nu, p, beta,
                                              bk=blocks.bk)
-    return PreparedOperand(hat, nu, p, beta, blocks, "interleaved", k, n)
+    return PreparedOperand(hat, nu, p, beta, blocks, "interleaved", k, n,
+                           mesh_shape=mesh_shape)
 
 
 def _encode_residues(b: jax.Array, moduli, k_dim: int):
@@ -271,7 +288,8 @@ def _encode_residues(b: jax.Array, moduli, k_dim: int):
 
 
 def prepare_rhs_scheme2(b: jax.Array, cfg: EmulationConfig, *,
-                        with_twin: bool = False) -> PreparedResidues:
+                        with_twin: bool = False,
+                        mesh=None) -> PreparedResidues:
     """Encode a (K, N) float rhs's balanced Scheme-II residues once.
 
     The fused GPU residue kernel streams the stack directly (its
@@ -302,10 +320,11 @@ def prepare_rhs_scheme2(b: jax.Array, cfg: EmulationConfig, *,
     # TPU/CPU launch without an explicit gpu request must never re-enter
     # an interpret-mode pallas_call at consume time; they expand the
     # same stack in XLA instead.
-    from repro.kernels import backends
+    from repro.kernels import backends, dispatch
     layout = ("fused" if _use_kernel(cfg)
               and backends.resolve_backend_name(None, cfg) == "gpu"
               else "stacked")
+    mesh_shape = dispatch._mesh_shape_tuple(mesh)
     res, nu, budget = _encode_residues(b, moduli, k_dim=k)
     twin = None
     if with_twin:
@@ -315,9 +334,9 @@ def prepare_rhs_scheme2(b: jax.Array, cfg: EmulationConfig, *,
         t_moduli = moduli[:cfg.bwd_p] if cfg.bwd_p else moduli
         t_res, tau, t_budget = _encode_residues(b.T, t_moduli, k_dim=n)
         twin = PreparedResidues(t_res, tau, t_moduli, t_budget, None, n, k,
-                                layout)
+                                layout, mesh_shape=mesh_shape)
     return PreparedResidues(res, nu, moduli, budget, None, k, n, layout,
-                            twin)
+                            twin, mesh_shape)
 
 
 def matmul_prepared_scheme2(a: jax.Array, prep: PreparedResidues,
@@ -502,7 +521,7 @@ def _stack_preps(preps: list) -> PreparedOperand:
 
 
 def build_step_preps(params, policy, *, site_default: str = "ffn",
-                     names=None) -> dict:
+                     names=None, mesh=None) -> dict:
     """Prepare every cacheable dense weight once, keyed by tree path.
 
     Returns {path: PreparedOperand (with twin)} for the float leaves in
@@ -510,9 +529,13 @@ def build_step_preps(params, policy, *, site_default: str = "ffn",
     groups (3-D leaves under 'layers') are prepared per layer and
     re-stacked, so the model's layer scan slices finished slices instead
     of re-splitting each layer's weight inside the microbatch scan.
+    ``mesh`` (default: the policy's recorded launch mesh, if any) pins
+    each prep to the mesh layout it was built under.
     """
     if names is None:
         names = DENSE_WEIGHT_NAMES
+    if mesh is None:
+        mesh = getattr(policy, "mesh", None)
     preps: dict = {}
 
     def visit(path, leaf):
@@ -530,10 +553,11 @@ def build_step_preps(params, policy, *, site_default: str = "ffn",
             return leaf
         if stacked:
             preps[_path_key(path)] = _stack_preps(
-                [prepare_rhs(leaf[g], cfg, with_twin=True)
+                [prepare_rhs(leaf[g], cfg, with_twin=True, mesh=mesh)
                  for g in range(leaf.shape[0])])
         else:
-            preps[_path_key(path)] = prepare_rhs(leaf, cfg, with_twin=True)
+            preps[_path_key(path)] = prepare_rhs(leaf, cfg, with_twin=True,
+                                                 mesh=mesh)
         return leaf
 
     jax.tree_util.tree_map_with_path(visit, params)
@@ -568,15 +592,19 @@ DENSE_WEIGHT_NAMES = frozenset({
 
 
 def prepare_params(params, policy, *, site_default: str = "ffn",
-                   names=DENSE_WEIGHT_NAMES):
+                   names=DENSE_WEIGHT_NAMES, mesh=None):
     """Wrap a model's 2-D dense projection weights as PreparedOperands.
 
     Run once per serve session (outside jit): every subsequent prefill /
     decode step streams the finished int8 slices instead of re-splitting
     the weight.  Leaves under vmap/scan-stacked layer groups are 3-D and
     pass through untouched (their per-layer slices are decomposed by the
-    per-step cache instead).
+    per-step cache instead).  ``mesh`` (default: the policy's recorded
+    launch mesh) pins each prep to the mesh it was built under.
     """
+    if mesh is None:
+        mesh = getattr(policy, "mesh", None)
+
     def wrap(path, leaf):
         name = getattr(path[-1], "key", None) if path else None
         if (name not in names or getattr(leaf, "ndim", 0) != 2
@@ -585,6 +613,34 @@ def prepare_params(params, policy, *, site_default: str = "ffn",
         cfg = policy.for_site(_site_of(path, site_default))
         if cfg.scheme not in ("ozaki1", "ozaki2"):
             return leaf
-        return prepare_rhs(leaf, cfg)
+        return prepare_rhs(leaf, cfg, mesh=mesh)
 
     return jax.tree_util.tree_map_with_path(wrap, params)
+
+
+def prep_pspecs(prep, weight_spec):
+    """PartitionSpec pytree for a prepared rhs, derived from the source
+    weight's (K, N) spec — the slice/residue stacks are built under the
+    same spec as the weight, so ``+cached`` params shard with the model
+    and never gather.
+
+    Every forward array (slices/residues/scale) carries N as its last
+    dim and takes the weight's N axis there; the twin's layout is the
+    K-transpose of B, so its arrays end in K and take the weight's K
+    axis.  Pair with :func:`repro.parallel.sharding.shardings` to place
+    a prepared params tree on a mesh.
+    """
+    from jax.sharding import PartitionSpec as P
+    parts = tuple(weight_spec) + (None, None)
+    k_part, n_part = parts[0], parts[1]
+
+    def last_dim(part):
+        return lambda leaf: P(*([None] * (leaf.ndim - 1)), part)
+
+    specs = jax.tree.map(last_dim(n_part),
+                         dataclasses.replace(prep, twin=None))
+    if prep.twin is not None:
+        twin_specs = jax.tree.map(
+            last_dim(k_part), dataclasses.replace(prep.twin, twin=None))
+        specs = dataclasses.replace(specs, twin=twin_specs)
+    return specs

@@ -108,14 +108,21 @@ def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
     # The dispatcher owns emulation selection: resolve_policy first
     # materializes an unset policy default through the one resolver
     # (explicit policy > ambient repro.emulation scope > REPRO_EMULATION
-    # env > native), then rewrites fused Pallas call-sites to the XLA
-    # expansion wherever GSPMD must partition them.
-    # cfg.cache_weights survives that rewrite: under impl='xla' the
+    # env > native), then decides how fused Pallas call-sites launch:
+    # on a concrete multi-device mesh with a shardable backend it
+    # *records the mesh on the policy* — dense() then runs the fused
+    # kernel per shard under shard_map with explicit collectives
+    # (repro.parallel.shard_gemm) — and only the remaining geometries
+    # (AbstractMesh dry-runs, non-shardable backends) rewrite to the
+    # XLA expansion GSPMD can partition.
+    # cfg.cache_weights survives either route: under impl='xla' the
     # once-per-step PreparedOperand slices are plain int8 arrays the
-    # partitioner handles like any other operand, so emulated training
-    # still decomposes each projection weight once per step (the VJP
-    # prepares in forward, the backward dA consumes the twin) instead of
-    # 3x per layer (forward, remat re-forward, backward B^T re-split).
+    # partitioner handles like any other operand, and under the
+    # shard_map route each model shard prepares its own slice stack
+    # (local K == global K in the column-parallel layout), so emulated
+    # training still decomposes each projection weight once per step /
+    # shard instead of 3x per layer (forward, remat re-forward,
+    # backward B^T re-split).
     policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
     loss_fn = make_loss_fn(arch, policy)
     _, opt_update = make_optimizer(arch.train.optimizer)

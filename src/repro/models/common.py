@@ -35,9 +35,16 @@ class GemmPolicy:
     innermost ``repro.emulation`` scope > ``REPRO_EMULATION`` env >
     native), so a model built with the bare ``GemmPolicy()`` becomes
     emulated simply by running it inside a scope.
+
+    ``mesh`` is the launch mesh fused call-sites shard_map over — set by
+    ``dispatch.resolve_policy`` when it keeps fused impls on a concrete
+    multi-device mesh (the GSPMD-native path of
+    ``repro.parallel.shard_gemm``); None means single-device / clamped
+    launches, where ``dense`` consumes the emulated dot directly.
     """
     default: EmulationConfig | None = None
     overrides: tuple[tuple[str, EmulationConfig], ...] = ()
+    mesh: object | None = None
 
     def for_site(self, site: str) -> EmulationConfig:
         for name, cfg in self.overrides:
@@ -96,15 +103,29 @@ def dense(x: jax.Array, w, policy: GemmPolicy, site: str,
     once-per-step prep, attached outside the microbatch scan by
     ``launch/steps.py``) routes through ``emulated_dot_prepared`` so the
     forward streams finished slices while dB still reaches the weight.
+
+    When the policy carries a multi-device ``mesh`` (recorded by
+    ``dispatch.resolve_policy`` on shardable launches) and the site's
+    config is fused, the projection runs per-shard under ``shard_map``
+    (``repro.parallel.shard_gemm.sharded_dense``) — the GSPMD-native
+    path; shapes the partitioner cannot fit fall back to the direct
+    routes below, which still compile under GSPMD (just unpartitioned).
     """
+    cfg = policy.for_site(site)
+    mesh = getattr(policy, "mesh", None)
+    if (mesh is not None and cfg.scheme != "native"
+            and cfg.impl in ("auto", "pallas")):
+        from repro.parallel import shard_gemm
+        out = shard_gemm.sharded_dense(x, w, cfg, mesh)
+        if out is not None:
+            out = out.astype(x.dtype)
+            return out if bias is None else out + bias
     if not isinstance(w, jax.Array) and hasattr(w, "prep"):
-        cfg = policy.for_site(site)
         out = emulated_dot_prepared(x, w.w, w.prep, cfg).astype(x.dtype)
         return out if bias is None else out + bias
     if not isinstance(w, jax.Array) and hasattr(w, "slices"):
         out = prepared_dot(x, w).astype(x.dtype)
         return out if bias is None else out + bias
-    cfg = policy.for_site(site)
     if cfg.scheme == "native":
         out = jnp.einsum("...k,kn->...n", x, w)
     else:

@@ -1,0 +1,255 @@
+"""Shard_map wrapper around the fused emulated GEMM: GSPMD-native TP.
+
+Historically ``dispatch.resolve_policy`` clamped every fused impl to the
+XLA expansion the moment a mesh had more than one device, because GSPMD
+cannot partition the sequential interpret-mode pallas grid.  This module
+is the lift: instead of handing the partitioner a fused ``pallas_call``
+it cannot split, the emulated 2-D core runs *per shard* under
+``jax.shard_map`` with the collectives written out explicitly — so
+tensor-parallel meshes keep the decomposition traffic out of HBM exactly
+like a single device does.
+
+Partitioning mirrors the parameter rules of
+:mod:`repro.parallel.sharding` (``_param_rule``'s column-parallel
+preference for ``_UP`` weights): the weight's N axis goes on ``'model'``
+when it divides (no collective at all — each shard owns whole output
+columns and the full K, so the per-shard fused GEMM is **bit-identical**
+to the single-device kernel on its slice of the output); otherwise K
+goes on ``'model'`` with a ``psum`` over the partial products (exact int
+interior per shard, float summation across shards — allclose, not
+bit-identical, to the unsharded reference).  Leading batch/M dims shard
+over the data axes (``('pod', 'data')``) in either case.
+
+Prepared operands shard with the model: a ``PreparedOperand`` /
+``PreparedResidues`` rhs is *localized* — its slice/residue stack and
+scale enter the shard body column-sharded via matching pytree in_specs,
+with the static ``n`` rewritten to the per-shard width — so ``+cached``
+weights never gather.  K-sharded prepared consumption is unsupported
+(the interleave granularity pins K); those cases fall back to the
+caller's unsharded route.
+
+Every entry point returns ``None`` when it cannot partition the problem
+(no axis divides, complex activations at a dense site, a 1-device mesh
+…); callers fall back to the existing single-device routes, which still
+compile under GSPMD — just unpartitioned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPartition:
+    """How one (lead..., K) @ (K, N) splits over the mesh.
+
+    ``kind`` is 'column' (N on the model axis, collective-free),
+    'row' (K on the model axis, psum over partials) or 'batch'
+    (data-parallel only).  ``batch_axes`` is the data-axes tuple the
+    leading dim shards over (None = replicated rows), ``model_axis``
+    the TP axis name (None for 'batch').
+    """
+    kind: str
+    batch_axes: tuple | None
+    model_axis: str | None
+
+    @property
+    def reduce_axes(self) -> tuple:
+        """Axes the shard body must psum over (K-contracted shards)."""
+        return (self.model_axis,) if self.kind == "row" else ()
+
+    def specs(self, x_ndim: int):
+        """(x_spec, w_spec, out_spec) for (lead..., K) @ (K, N)."""
+        mid = [None] * (x_ndim - 2)
+        if self.kind == "column":
+            return (P(self.batch_axes, *mid, None),
+                    P(None, self.model_axis),
+                    P(self.batch_axes, *mid, self.model_axis))
+        if self.kind == "row":
+            return (P(self.batch_axes, *mid, self.model_axis),
+                    P(self.model_axis, None),
+                    P(self.batch_axes, *mid, None))
+        return (P(self.batch_axes, *mid, None),
+                P(None, None),
+                P(self.batch_axes, *mid, None))
+
+
+def _model_axis(mesh: Mesh) -> str | None:
+    return "model" if dict(mesh.shape).get("model", 1) > 1 else None
+
+
+def gemm_partition(lead: int, k: int, n: int, mesh: Mesh,
+                   *, allow_row: bool = True) -> GemmPartition | None:
+    """Pick the partitioning for a (lead..., K) @ (K, N) on ``mesh``.
+
+    Mirrors ``sharding._param_rule``'s ``_UP`` preference: column
+    parallel (N on 'model') when N divides — the collective-free,
+    bit-identical layout the parameter specs already use — else row
+    parallel (K on 'model', psum).  The leading dim shards over the
+    data axes when it divides.  None when nothing divides (caller
+    falls back to the unsharded route).
+    """
+    bax = shd._fit(lead, shd.data_axes(mesh), mesh)
+    mdl = _model_axis(mesh)
+    if mdl is not None and shd._fit(n, mdl, mesh):
+        return GemmPartition("column", bax, mdl)
+    if allow_row and mdl is not None and shd._fit(k, mdl, mesh):
+        return GemmPartition("row", bax, mdl)
+    if bax is not None:
+        return GemmPartition("batch", bax, None)
+    return None
+
+
+def _pin_row_cfg(cfg, k_global: int):
+    """Pin K-global numerics before a row-parallel (K-sharded) launch.
+
+    Scheme I derives beta from the contraction length; each shard sees
+    only K/tp, so an unpinned config would slice at the looser local
+    beta and drift further from the unsharded reference.  Pinning
+    ``safe_beta`` of the (padded) global K reproduces the single-device
+    slice budget exactly — the remaining difference is only the float
+    summation order of the psum.  Scheme II's CRT budget is derived
+    inside the kernel from the local K (a *larger* product bound than
+    the global run — still exact per shard) and needs no pin.
+    """
+    from repro.kernels import dispatch
+    if cfg.scheme == "ozaki1" and cfg.beta is None:
+        return dataclasses.replace(
+            cfg, beta=cfg.resolved_beta(dispatch.round_up(k_global)))
+    return cfg
+
+
+def _local_spec(leaf) -> P:
+    """Column-shard a prepared stack/scale: last (N) dim on 'model'."""
+    return P(*([None] * (leaf.ndim - 1)), "model")
+
+
+def _localize_prepared(prep, mesh: Mesh):
+    """(local_template, in_spec_tree) for a column-sharded prepared rhs.
+
+    The slice/residue stack and scale all carry N as their last dim, so
+    one pytree of ``P(..., 'model')`` in_specs shards them; the static
+    aux ``n`` is rewritten to the per-shard width (aux travels in the
+    treedef, so the shard body's ``matmul_prepared`` slices the right
+    logical columns).  The twin (backward layout) is dropped — this is
+    the serving consumption path, and the twin's N is the *contraction*
+    axis of dA, which column sharding would split.  None when the
+    padded width does not divide the model axis or padding columns
+    would straddle a shard boundary.
+    """
+    tp = dict(mesh.shape).get("model", 1)
+    if tp <= 1:
+        return None
+    if prep.n != prep.padded_n or prep.n % tp:
+        return None
+    pinned = getattr(prep, "mesh_shape", None)
+    if pinned is not None and pinned != _mesh_shape(mesh):
+        # Prepared under a different mesh layout: the block granularity
+        # was pinned for that layout's shard widths — refuse rather
+        # than consume it with a foreign tiling.
+        return None
+    local = dataclasses.replace(prep, n=prep.n // tp, twin=None)
+    return local, jax.tree.map(_local_spec, local)
+
+
+def _mesh_shape(mesh: Mesh):
+    from repro.kernels import dispatch
+    return dispatch._mesh_shape_tuple(mesh)
+
+
+def sharded_matmul(a: jax.Array, b: jax.Array, cfg, mesh: Mesh, *,
+                   out_dtype=None) -> jax.Array | None:
+    """2-D a: (M, K) @ b: (K, N) per-shard fused under shard_map.
+
+    The collective-free column layout is preferred (bit-identical to
+    ``dispatch.emulated_matmul`` on one device); K-sharded problems
+    psum float partials (allclose).  Returns None when no mesh axis
+    divides the problem.  Complex operands ride along — the per-shard
+    call routes them through the same 4M/3M expansions as the
+    single-device dispatcher.
+    """
+    if a.ndim != 2 or getattr(b, "ndim", 0) != 2:
+        return None
+    part = gemm_partition(a.shape[0], a.shape[1], b.shape[1], mesh)
+    if part is None:
+        return None
+    from repro.kernels import dispatch
+    body_cfg = cfg if part.kind != "row" else _pin_row_cfg(cfg, a.shape[1])
+    mesh_shape = _mesh_shape(mesh)
+    a_spec, b_spec, out_spec = part.specs(2)
+
+    def body(al, bl):
+        out = dispatch.emulated_matmul(al, bl, cfg=body_cfg,
+                                       out_dtype=out_dtype,
+                                       mesh_shape=mesh_shape)
+        for ax in part.reduce_axes:
+            out = jax.lax.psum(out, ax)
+        return out
+
+    return shard_map(body, mesh=mesh, in_specs=(a_spec, b_spec),
+                     out_specs=out_spec, check_rep=False)(a, b)
+
+
+def sharded_dense(x: jax.Array, w, cfg, mesh: Mesh) -> jax.Array | None:
+    """x: (..., K) @ w: (K, N) per-shard fused — the model-layer entry.
+
+    ``w`` may be a float weight, a ``StepPrepared`` pair (the float
+    weight shards and each model shard prepares its own slice stack
+    inside the body — local K equals global K under the column layout,
+    so the per-shard prep is bit-identical and never gathers; the
+    once-per-step hoist is traded for shard-local residency), or a
+    bare ``PreparedOperand``/``PreparedResidues`` (localized, see
+    ``_localize_prepared``).  Float routes go through ``emulated_dot``
+    so the custom VJP (and ``cfg.cache_weights``) works under
+    ``jax.grad`` exactly as on one device.  Returns None whenever this
+    module cannot partition — caller falls back to the direct routes.
+    """
+    from repro.core.emulated import emulated_dot, prepared_dot
+
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        return None
+
+    # Bare prepared rhs (serving): localized column-parallel consumption.
+    if not isinstance(w, jax.Array) and (hasattr(w, "slices")
+                                         or hasattr(w, "residues")):
+        localized = _localize_prepared(w, mesh)
+        if localized is None:
+            return None
+        local, prep_specs = localized
+        part = GemmPartition(
+            "column", shd._fit(x.shape[0], shd.data_axes(mesh), mesh),
+            "model")
+        x_spec, _, out_spec = part.specs(x.ndim)
+        body = shard_map(
+            lambda xl, pl: prepared_dot(xl, pl), mesh=mesh,
+            in_specs=(x_spec, prep_specs), out_specs=out_spec,
+            check_rep=False)
+        return body(x, local)
+
+    weight = w.w if not isinstance(w, jax.Array) and hasattr(w, "prep") \
+        else w
+    if getattr(weight, "ndim", 0) != 2 \
+            or jnp.issubdtype(weight.dtype, jnp.complexfloating):
+        return None
+    k, n = weight.shape
+    part = gemm_partition(x.shape[0], k, n, mesh)
+    if part is None:
+        return None
+    body_cfg = cfg if part.kind != "row" else _pin_row_cfg(cfg, k)
+    x_spec, w_spec, out_spec = part.specs(x.ndim)
+
+    def body(xl, wl):
+        out = emulated_dot(xl, wl, body_cfg)
+        for ax in part.reduce_axes:
+            out = jax.lax.psum(out, ax)
+        return out
+
+    return shard_map(body, mesh=mesh, in_specs=(x_spec, w_spec),
+                     out_specs=out_spec, check_rep=False)(x, weight)

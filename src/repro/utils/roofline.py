@@ -316,6 +316,61 @@ def projected_throughput(m: int, k: int, n: int, p: int,
     return out
 
 
+def sharded_projected_throughput(m: int, k: int, n: int, p: int,
+                                 mesh_shape,
+                                 partition: str = "column",
+                                 scheme: str = "ozaki1",
+                                 backend: str = "gpu", out_bytes: int = 4,
+                                 complex_3m: bool = False) -> dict:
+    """Roofline projection of one shard_map'ed emulated GEMM: per-shard
+    fused Top/s next to the interconnect bytes the mesh adds.
+
+    ``mesh_shape`` / ``partition`` follow ``repro.core.traffic
+    .sharded_gemm_traffic``: the fused-traffic models are evaluated on
+    the shard-local (m, n, k) — each device runs exactly the
+    single-device fused kernel on its slice — and the collective cost
+    (zero for the column/batch layouts, a ring all-reduce of the output
+    partials for row) is reported side by side in bytes and seconds at
+    ``ICI_BW``.  Each hardware entry carries the per-shard projection
+    plus an ``effective_tops`` that charges the collective time against
+    the shard's useful int8 flops, so column vs row layouts compare
+    directly.
+    """
+    from repro.core import traffic as T
+    cell = T.sharded_gemm_traffic(
+        T.GemmShape(m, n, k), p, mesh_shape, partition,
+        scheme=scheme, out_bytes=out_bytes, complex_3m=complex_3m)
+    shard = projected_throughput(
+        cell["shard_m"], cell["shard_k"], cell["shard_n"], p,
+        scheme=scheme, backend=backend, out_bytes=out_bytes,
+        complex_3m=complex_3m)
+    coll_bytes = cell["collective_bytes_per_device"]
+    coll_s = coll_bytes / ICI_BW
+    out = {
+        "backend": backend, "scheme": scheme, "partition": partition,
+        "devices": cell["devices"],
+        "shard_shape": (cell["shard_m"], cell["shard_k"], cell["shard_n"]),
+        "fused_bytes_per_shard": cell["fused_bytes_per_shard"],
+        "int8_flops_per_shard": cell["int8_flops_per_shard"],
+        "collective_bytes_per_device": coll_bytes,
+        "collective_s": coll_s,
+        "hardware": {},
+    }
+    flops = cell["int8_flops_per_shard"]
+    for key, hw in shard["hardware"].items():
+        t_shard = flops / hw["projected_tops"] / 1e12 \
+            if hw["projected_tops"] else 0.0
+        t_total = t_shard + coll_s
+        out["hardware"][key] = {
+            "name": hw["name"],
+            "peak_int8_tops": hw["peak_int8_tops"],
+            "shard_projected_tops": hw["projected_tops"],
+            "effective_tops": flops / t_total / 1e12 if t_total else 0.0,
+            "bound": ("collective" if coll_s > t_shard else hw["bound"]),
+        }
+    return out
+
+
 def scheme1_decomposition_terms(m: int, k: int, n: int, p: int,
                                 uses: int = 3) -> dict:
     """Decomposition-side HBM bytes (and seconds at HBM_BW) for one

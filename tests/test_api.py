@@ -622,20 +622,23 @@ EXPECTED_SIGNATURES = {
                     ("dimension_numbers", "POSITIONAL_OR_KEYWORD", False),
                     ("precision", "KEYWORD_ONLY", True),
                     ("out_dtype", "KEYWORD_ONLY", True),
-                    ("backend", "KEYWORD_ONLY", True)],
+                    ("backend", "KEYWORD_ONLY", True),
+                    ("mesh", "KEYWORD_ONLY", True)],
     "einsum": [("subscripts", "POSITIONAL_OR_KEYWORD", False),
                ("a", "POSITIONAL_OR_KEYWORD", False),
                ("b", "POSITIONAL_OR_KEYWORD", False),
                ("precision", "KEYWORD_ONLY", True),
                ("out_dtype", "KEYWORD_ONLY", True),
-               ("backend", "KEYWORD_ONLY", True)],
+               ("backend", "KEYWORD_ONLY", True),
+               ("mesh", "KEYWORD_ONLY", True)],
     "emulated_matmul": [("a", "POSITIONAL_OR_KEYWORD", False),
                         ("b", "POSITIONAL_OR_KEYWORD", False),
                         ("cfg", "KEYWORD_ONLY", True),
                         ("out_dtype", "KEYWORD_ONLY", True),
                         ("backend", "KEYWORD_ONLY", True),
                         ("scheme", "KEYWORD_ONLY", True),
-                        ("precision", "KEYWORD_ONLY", True)],
+                        ("precision", "KEYWORD_ONLY", True),
+                        ("mesh_shape", "KEYWORD_ONLY", True)],
 }
 
 

@@ -135,6 +135,7 @@ def test_fallback_is_not_offered_to_auto_sites(make_matrix):
     a = jnp.asarray(make_matrix((64, 64)))
     cfg = EmulationConfig(scheme="ozaki2", p=4, moduli=_WIDE_MODULI,
                           backend="gpu")
+    dispatch.fallback_warnings_clear()  # warning is deduped per process
     with pytest.warns(RuntimeWarning, match="moduli"):
         assert dispatch.auto_fused_matmul(a, a, cfg) is None
 
@@ -373,10 +374,16 @@ def test_resolve_policy_clamps_unsupported_scheme_backend(monkeypatch):
     (scheme, backend) pair without a fused lowering — a >int8 moduli set
     on the gpu backend — pins impl='xla' while supported pairs
     (including ozaki2 on the fused gpu residue kernel) keep their
-    request."""
+    request. The geometry is pinned with a concrete 1-device mesh so
+    the test means the same thing on the 8-device CI host (mesh=None
+    there reads the process-global device count and clamps
+    everything)."""
+    import jax
     from repro.models.common import GemmPolicy
     monkeypatch.delenv(backends.ENV_VAR, raising=False)
     monkeypatch.setattr(dispatch.jax, "default_backend", lambda: "gpu")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
     pol = GemmPolicy(
         default=EmulationConfig(scheme="ozaki2", p=4, moduli=_WIDE_MODULI,
                                 impl="pallas", backend="gpu"),
@@ -385,7 +392,7 @@ def test_resolve_policy_clamps_unsupported_scheme_backend(monkeypatch):
                    ("attn", EmulationConfig(scheme="ozaki2", p=6,
                                             impl="pallas",
                                             backend="gpu"))))
-    resolved = dispatch.resolve_policy(pol, mesh=None)
+    resolved = dispatch.resolve_policy(pol, mesh=mesh)
     assert resolved.default.impl == "xla"      # wide moduli: clamped
     assert dict(resolved.overrides)["ffn"].impl == "pallas"   # supported
     assert dict(resolved.overrides)["attn"].impl == "pallas"  # fused II

@@ -1,0 +1,408 @@
+"""Shard_map'ed fused GEMM: the GSPMD-clamp lift and its parity suite.
+
+Two tiers in one module:
+
+  * unit tests — mesh-introspection helpers, the mesh_shape block-cache
+    key, fallback-warning dedupe, partition selection, and the
+    analytic sharded traffic/roofline models. These run on the normal
+    1-device CPU host.
+  * the 8-device parity suite — tests whose names carry ``parity8`` or
+    ``lift8`` need ``jax.device_count() >= 8``. The CI row that exports
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` runs them
+    in-process; on a normal host a single driver test re-launches this
+    file under pytest in a subprocess with the flag set *before* jax
+    initializes (the only way to grow host devices after import).
+"""
+
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import DEFAULT_MODULI, EmulationConfig
+from repro.kernels import dispatch, prepared
+from repro.launch import mesh as mesh_lib
+from repro.models.common import GemmPolicy, dense
+from repro.parallel import shard_gemm
+
+EIGHT = jax.device_count() >= 8
+needs8 = pytest.mark.skipif(not EIGHT, reason="needs 8 devices "
+                            "(XLA_FLAGS=--xla_force_host_platform_"
+                            "device_count=8)")
+
+
+# ---------------------------------------------------------------------------
+# Mesh introspection: _mesh_devices across every mesh flavor the launch
+# layer produces (the AbstractMesh mapping-shape regression).
+# ---------------------------------------------------------------------------
+
+class _ShapeOnly:
+    """A mesh exposing only ``.shape`` (out-of-tree mesh stand-in)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_mesh_devices_none_is_process_global():
+    assert dispatch._mesh_devices(None) == len(jax.devices())
+
+
+def test_mesh_devices_concrete_single():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert dispatch._mesh_devices(mesh) == 1
+    assert not dispatch._shardable_mesh(mesh)
+
+
+def test_mesh_devices_abstract_mapping_shape():
+    # AbstractMesh.shape is a mapping {axis: size}: the device count
+    # must come from the product of its values, never len(jax.devices()).
+    am = mesh_lib.make_abstract_mesh((2, 4), ("data", "model"))
+    assert dispatch._mesh_devices(am) == 8
+    assert dispatch._mesh_shape_tuple(am) == (("data", 2), ("model", 4))
+    # device-free: shard_map has nothing to map over
+    assert not dispatch._shardable_mesh(am)
+
+
+def test_mesh_devices_shape_only_flavors():
+    assert dispatch._mesh_devices(_ShapeOnly({"data": 2, "model": 4})) == 8
+    assert dispatch._mesh_devices(_ShapeOnly((2, 4))) == 8
+    # unusable shape falls back to the process-global count
+    assert dispatch._mesh_devices(
+        _ShapeOnly(("x", "y"))) == len(jax.devices())
+    assert dispatch._mesh_shape_tuple(None) is None
+    assert dispatch._mesh_shape_tuple(_ShapeOnly((2, 4))) == (
+        ("0", 2), ("1", 4))
+
+
+def test_abstract_mesh_keeps_the_clamp():
+    # Dry-run lowering (AbstractMesh) still rewrites fused impls to the
+    # XLA expansion — there are no devices to shard_map over.
+    am = mesh_lib.make_abstract_mesh((2, 4), ("data", "model"))
+    pol = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=3,
+                                             backend="tpu"))
+    fixed = dispatch.resolve_policy(pol, am)
+    assert fixed.default.impl == "xla"
+    assert fixed.mesh is None
+
+
+# ---------------------------------------------------------------------------
+# mesh_shape in the block-cache key: the same shard-local dims on two
+# mesh layouts must occupy distinct entries.
+# ---------------------------------------------------------------------------
+
+def test_block_cache_keys_on_mesh_shape():
+    dispatch.block_cache_clear("gpu")
+    args = dict(m=128, n=128, k=128, p=4, backend="gpu")
+    dispatch.select_blocks(**args, mesh_shape=None)
+    dispatch.select_blocks(**args, mesh_shape=(("data", 1), ("model", 8)))
+    dispatch.select_blocks(**args, mesh_shape=(("data", 2), ("model", 4)))
+    info = dispatch.block_cache_info("gpu")
+    assert info.currsize == 3 and info.misses == 3 and info.hits == 0
+    # and the per-layout entries hit on re-query
+    dispatch.select_blocks(**args, mesh_shape=(("data", 2), ("model", 4)))
+    assert dispatch.block_cache_info("gpu").hits == 1
+    dispatch.block_cache_clear("gpu")
+
+
+# ---------------------------------------------------------------------------
+# Fallback-warning dedupe: once per (reason, shape-class).
+# ---------------------------------------------------------------------------
+
+def test_fallback_warning_dedupes_per_shape_class(make_matrix):
+    import warnings
+    cfg = EmulationConfig(scheme="ozaki2", p=4,
+                          moduli=DEFAULT_MODULI + (181,), backend="gpu")
+    a = jnp.asarray(make_matrix((64, 64)))
+    dispatch.fallback_warnings_clear()
+    with pytest.warns(RuntimeWarning, match="moduli"):
+        assert dispatch.auto_fused_matmul(a, a, cfg) is None
+    # same shape class again: silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert dispatch.auto_fused_matmul(a, a, cfg) is None
+    # a different shape class warns once more
+    b = jnp.asarray(make_matrix((128, 128)))
+    with pytest.warns(RuntimeWarning, match="moduli"):
+        assert dispatch.auto_fused_matmul(b, b, cfg) is None
+    # clearing re-arms the first class
+    dispatch.fallback_warnings_clear()
+    with pytest.warns(RuntimeWarning, match="moduli"):
+        assert dispatch.auto_fused_matmul(a, a, cfg) is None
+    dispatch.fallback_warnings_clear()
+
+
+# ---------------------------------------------------------------------------
+# Partition selection (pure mesh.shape reads — an AbstractMesh serves).
+# ---------------------------------------------------------------------------
+
+def _am24():
+    return mesh_lib.make_abstract_mesh((2, 4), ("data", "model"))
+
+
+def test_gemm_partition_prefers_column():
+    part = shard_gemm.gemm_partition(64, 96, 128, _am24())
+    assert part.kind == "column" and part.model_axis == "model"
+    assert part.reduce_axes == ()
+    x_spec, w_spec, out_spec = part.specs(3)
+    assert tuple(w_spec) == (None, "model")
+    assert tuple(out_spec) == (("data",), None, "model")
+
+
+def test_gemm_partition_row_when_n_does_not_divide():
+    part = shard_gemm.gemm_partition(64, 96, 130, _am24())
+    assert part.kind == "row"
+    assert part.reduce_axes == ("model",)
+    x_spec, w_spec, out_spec = part.specs(2)
+    assert tuple(x_spec) == (("data",), "model")
+    assert tuple(w_spec) == ("model", None)
+    assert tuple(out_spec) == (("data",), None)
+
+
+def test_gemm_partition_batch_and_none():
+    part = shard_gemm.gemm_partition(64, 97, 130, _am24())
+    assert part.kind == "batch" and part.model_axis is None
+    assert shard_gemm.gemm_partition(63, 97, 130, _am24()) is None
+    # allow_row=False skips the K-contracted layout
+    assert shard_gemm.gemm_partition(
+        64, 96, 130, _am24(), allow_row=False).kind == "batch"
+
+
+def test_pin_row_cfg_pins_scheme1_beta():
+    cfg = EmulationConfig(scheme="ozaki1", p=3)
+    pinned = shard_gemm._pin_row_cfg(cfg, 1000)
+    assert pinned.beta == cfg.resolved_beta(dispatch.round_up(1000))
+    # explicit beta and scheme2 budgets are left alone
+    cfg_b = EmulationConfig(scheme="ozaki1", p=3, beta=7)
+    assert shard_gemm._pin_row_cfg(cfg_b, 1000) is cfg_b
+    cfg2 = EmulationConfig(scheme="ozaki2", p=4)
+    assert shard_gemm._pin_row_cfg(cfg2, 1000) is cfg2
+
+
+# ---------------------------------------------------------------------------
+# Analytic sharded traffic + roofline: per-shard fused bytes next to
+# collective bytes, 3 shapes x 2 mesh layouts (the report the CI traffic
+# benchmark regression-gates).
+# ---------------------------------------------------------------------------
+
+SHAPES_X_MESHES = [
+    (m, k, n, layout)
+    for (m, k, n) in [(512, 768, 1024), (1024, 1024, 1024), (256, 512, 2048)]
+    for layout in [(("data", 1), ("model", 8)), (("data", 2), ("model", 4))]
+]
+
+
+@pytest.mark.parametrize("m,k,n,layout", SHAPES_X_MESHES)
+def test_sharded_traffic_column_vs_row(m, k, n, layout):
+    from repro.core import traffic as T
+    tp = dict(layout)["model"]
+    dp = dict(layout)["data"]
+    s = T.GemmShape(m, n, k)
+    col = T.sharded_gemm_traffic(s, 4, layout, "column")
+    row = T.sharded_gemm_traffic(s, 4, layout, "row")
+    assert col["devices"] == row["devices"] == 8
+    assert col["collective_bytes_per_device"] == 0
+    assert col["shard_n"] == n // tp and col["shard_k"] == k
+    assert row["shard_k"] == k // tp and row["shard_n"] == n
+    # ring all-reduce of the (M_local, N) float partials
+    payload = 4 * (m // dp) * n
+    assert row["collective_bytes_per_device"] == \
+        T.ring_all_reduce_bytes(payload, tp)
+    # per-shard fused bytes match the single-device model on local dims
+    local = T.GemmShape(m // dp, n // tp, k)
+    assert col["fused_bytes_per_shard"] == T.scheme1_fused_bytes(local, 4, 4)
+
+
+def test_collective_byte_conventions():
+    from repro.core import traffic as T
+    assert T.ring_all_reduce_bytes(1000, 4) == 1500   # 2(n-1)/n
+    assert T.all_gather_bytes(1000, 4) == 750         # (n-1)/n
+    assert T.reduce_scatter_bytes(1000, 4) == 750
+    assert T.ring_all_reduce_bytes(1000, 1) == 0
+    with pytest.raises(ValueError, match="divide"):
+        T.sharded_gemm_traffic(T.GemmShape(64, 100, 64), 4,
+                               (("model", 8),), "column")
+    with pytest.raises(ValueError, match="partition"):
+        T.sharded_gemm_traffic(T.GemmShape(64, 64, 64), 4,
+                               (("model", 8),), "diagonal")
+
+
+def test_sharded_roofline_projection():
+    from repro.utils import roofline as R
+    layout = (("data", 2), ("model", 4))
+    col = R.sharded_projected_throughput(512, 768, 1024, 4, layout,
+                                         "column")
+    row = R.sharded_projected_throughput(512, 768, 1024, 4, layout, "row")
+    assert col["collective_s"] == 0.0
+    assert row["collective_s"] == pytest.approx(
+        row["collective_bytes_per_device"] / R.ICI_BW)
+    for cell in col["hardware"].values():
+        # no collective: effective == per-shard projection
+        assert cell["effective_tops"] == pytest.approx(
+            cell["shard_projected_tops"])
+    for cell in row["hardware"].values():
+        assert cell["effective_tops"] < cell["shard_projected_tops"]
+    # scheme2 complex rides along
+    r2 = R.sharded_projected_throughput(
+        512, 768, 1024, 6, layout, "row", scheme="ozaki2", out_bytes=8,
+        complex_3m=True)
+    assert r2["collective_bytes_per_device"] > 0
+    assert set(r2["hardware"]) == set(col["hardware"])
+
+
+# ---------------------------------------------------------------------------
+# 8-device parity: the shard_map'ed fused path against the single-device
+# reference, bit-identical in the collective-free layouts.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh8():
+    if not EIGHT:
+        pytest.skip("needs 8 devices")
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def _mats(rng, m, k, n):
+    from conftest import conditioned
+    a = jnp.asarray(conditioned(rng, (m, k)))
+    b = jnp.asarray(conditioned(rng, (k, n)))
+    return a, b
+
+
+@needs8
+def test_lift8_resolve_policy_records_mesh(mesh8):
+    pol = GemmPolicy(default=EmulationConfig(scheme="ozaki1", p=3,
+                                             backend="tpu"))
+    fixed = dispatch.resolve_policy(pol, mesh8)
+    assert fixed.default.impl != "xla", "shardable pair must not clamp"
+    assert fixed.mesh is mesh8
+    # a bare 8-device host with no mesh still clamps (nothing to map over)
+    clamped = dispatch.resolve_policy(pol, None)
+    assert clamped.default.impl == "xla" and clamped.mesh is None
+
+
+PARITY_CELLS = [
+    # (scheme, p, (M, K, N)) — aligned and padded shard-local shapes
+    ("ozaki1", 3, (64, 64, 128)),
+    ("ozaki1", 4, (64, 72, 160)),     # K, per-shard N unaligned: pads
+    ("ozaki2", 4, (64, 64, 128)),
+    ("ozaki2", 6, (64, 72, 160)),
+]
+
+
+@needs8
+@pytest.mark.parametrize("scheme,p,shape", PARITY_CELLS)
+def test_parity8_column_bit_identical(scheme, p, shape, mesh8, rng):
+    m, k, n = shape
+    a, b = _mats(rng, m, k, n)
+    cfg = EmulationConfig(scheme=scheme, p=p, impl="pallas",
+                          backend="tpu" if scheme == "ozaki1" else "gpu")
+    ref = dispatch.emulated_matmul(a, b, cfg=cfg)
+    out = shard_gemm.sharded_matmul(a, b, cfg, mesh8)
+    assert out is not None
+    # column layout: local K == global K, so every shard runs the exact
+    # single-device kernel on its slice of the output — bit-identical.
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@needs8
+def test_parity8_row_parallel_allclose(mesh8, rng):
+    # N=130 blocks the column layout; K goes on 'model' with a psum.
+    a, b = _mats(rng, 64, 128, 130)
+    cfg = EmulationConfig(scheme="ozaki1", p=4, backend="tpu")
+    ref = dispatch.emulated_matmul(a, b, cfg=cfg)
+    out = shard_gemm.sharded_matmul(a, b, cfg, mesh8)
+    assert out is not None
+    # K-sharded shards slice against their *local* row maxima (pinned
+    # global beta, local amax), so the truncation error differs from the
+    # unsharded run's — compare both against the exact fp64 product: the
+    # sharded path must stay in the same error class as the reference.
+    exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    scale = np.abs(exact).max()
+    err_ref = np.abs(np.asarray(ref, np.float64) - exact).max() / scale
+    err_sh = np.abs(np.asarray(out, np.float64) - exact).max() / scale
+    assert err_sh <= 2 * err_ref + 1e-7, (err_sh, err_ref)
+
+
+@needs8
+@pytest.mark.parametrize("scheme,p", [("ozaki1", 4), ("ozaki2", 4)])
+def test_parity8_cached_prepared_localized(scheme, p, mesh8, rng):
+    from repro.core.emulated import prepared_dot
+    cfg = EmulationConfig(scheme=scheme, p=p, cache_weights=True,
+                          backend="tpu" if scheme == "ozaki1" else "gpu")
+    _, b = _mats(rng, 8, 64, 128)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (8, 16, 64)), jnp.float32)
+    prep = prepared.prepare_rhs(b, cfg, mesh=mesh8)
+    assert prep.mesh_shape == dispatch._mesh_shape_tuple(mesh8)
+    ref = prepared_dot(x, prep)
+    out = shard_gemm.sharded_dense(x, prep, cfg, mesh8)
+    assert out is not None
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # a stack prepared under a different layout is refused, not resliced
+    mesh18 = jax.make_mesh((1, 8), ("data", "model"))
+    assert shard_gemm.sharded_dense(x, prep, cfg, mesh18) is None
+
+
+@needs8
+def test_parity8_dense_policy_mesh_and_grad(mesh8, rng):
+    _, w = _mats(rng, 8, 64, 128)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (8, 16, 64)), jnp.float32)
+    cfg = EmulationConfig(scheme="ozaki1", p=3, backend="tpu")
+    pol = dispatch.resolve_policy(GemmPolicy(default=cfg), mesh8)
+    ref = dense(x, w, GemmPolicy(default=pol.default), "ffn")
+    out = dense(x, w, pol, "ffn")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def loss(w, p):
+        return jnp.sum(dense(x, w, p, "ffn") ** 2)
+    g_ref = jax.grad(loss)(w, GemmPolicy(default=pol.default))
+    g_sh = jax.grad(loss)(w, pol)
+    # the backward dA contracts over the sharded N axis (per-shard
+    # decomposition, psum of partials): max-normalized error, not
+    # elementwise rtol on near-zero gradient entries
+    err = float(jnp.abs(g_sh - g_ref).max() / jnp.abs(g_ref).max())
+    assert err < 1e-4, err
+
+
+@needs8
+def test_parity8_step_prepared_route(mesh8, rng):
+    cfg = EmulationConfig(scheme="ozaki1", p=4, cache_weights=True,
+                          backend="tpu")
+    _, w = _mats(rng, 8, 64, 128)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (8, 16, 64)), jnp.float32)
+    sp = prepared.StepPrepared(w, prepared.prepare_rhs(w, cfg,
+                                                       with_twin=True))
+    pol = dispatch.resolve_policy(GemmPolicy(default=cfg), mesh8)
+    ref = dense(x, sp, GemmPolicy(default=pol.default), "ffn")
+    out = dense(x, sp, pol, "ffn")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Driver: on a <8-device host, run the parity suite in a subprocess with
+# the host-device flag exported before jax initializes.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(EIGHT, reason="parity suite already runs in-process")
+def test_parity8_subprocess_driver():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         os.path.abspath(__file__),
+         "-k", "(parity8 or lift8) and not driver"],
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(
+            __file__))),
+        capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    # every parity cell must have RUN — all-skipped (the flag failing to
+    # grow host devices) would also exit 0
+    assert "10 passed" in r.stdout, r.stdout[-2000:]
