@@ -56,6 +56,15 @@ SCHEME2_SHAPES = [(256, 256, 256), (256, 128, 256), (192, 128, 384)]
 MS = (4, 6)                    # moduli counts
 SCHEME2_FLOOR = 6.0            # >= p-fold fused reduction at m=6
 
+# Guard cells: modeled a-posteriori-verification overhead of a guarded
+# fused GEMM (traffic.guard_overhead_model, docs/robustness.md).  The
+# fused piggyback model is gated at <= 5% of the GEMM's bytes AND
+# roofline time on every benchmarked shape; the unfused (XLA reference)
+# verify bytes are reported alongside, ungated.
+GUARD_SHAPES = SHAPES + SCHEME2_SHAPES[1:]
+GUARD_PROBES = 2
+GUARD_OVERHEAD_CEILING = 0.05
+
 # Shard_map'ed cells: per-shard fused decomposition bytes next to the
 # collective bytes each mesh layout adds (repro.parallel.shard_gemm
 # partitioning; analytic models in traffic.sharded_gemm_traffic).
@@ -214,6 +223,17 @@ def run_scheme2_cell(m: int, k: int, n: int, p: int, verify: bool) -> dict:
     return cell
 
 
+def run_guard_cell(m: int, k: int, n: int) -> dict:
+    """Modeled verification overhead for both schemes on one shape."""
+    s = traffic.GemmShape(m, n, k)
+    cell = {"m": m, "k": k, "n": n, "probes": GUARD_PROBES, "schemes": {}}
+    for scheme, p in (("ozaki1", 4), ("ozaki2", 6)):
+        cell["schemes"][scheme] = dict(
+            traffic.guard_overhead_model(s, p, scheme, probes=GUARD_PROBES),
+            p=p)
+    return cell
+
+
 def run_sharded_cell(m: int, k: int, n: int, p: int, layout) -> dict:
     """Per-shard fused bytes + collective bytes of one shard_map'ed GEMM
     on one mesh layout, under both tensor-parallel partitionings."""
@@ -286,6 +306,24 @@ def check_baseline(report: dict, baseline: dict) -> list[str]:
                 if cur[field] > old[field]:
                     errors.append(f"sharded {key} {part} {field}: "
                                   f"{cur[field]} > baseline {old[field]}")
+    base_g = {(c["m"], c["k"], c["n"]): c
+              for c in baseline.get("guard_cells", ())}
+    for c in report.get("guard_cells", ()):
+        key = (c["m"], c["k"], c["n"])
+        ref = base_g.get(key)
+        for scheme, cur in c["schemes"].items():
+            for field in ("bytes_ratio", "time_ratio"):
+                if cur[field] > GUARD_OVERHEAD_CEILING:
+                    errors.append(
+                        f"guard {key} {scheme}: {field} "
+                        f"{cur[field]:.4f} > {GUARD_OVERHEAD_CEILING}")
+            if ref is not None and scheme in ref["schemes"]:
+                old = ref["schemes"][scheme]
+                if cur["verify_bytes_fused"] > old["verify_bytes_fused"]:
+                    errors.append(
+                        f"guard {key} {scheme}: verify_bytes_fused "
+                        f"{cur['verify_bytes_fused']} > baseline "
+                        f"{old['verify_bytes_fused']}")
     head = report["acceptance"]
     if head["prologue_reduction_p4"] < PROLOGUE_FLOOR:
         errors.append(f"prologue reduction {head['prologue_reduction_p4']:.2f}"
@@ -341,6 +379,19 @@ def main(argv=None) -> int:
                   f"{hw['b200'].get('baseline_speedup', 0):.1f}x",
                   flush=True)
 
+    cells_g = []
+    for m, k, n in GUARD_SHAPES:
+        cell = run_guard_cell(m, k, n)
+        cells_g.append(cell)
+        s1 = cell["schemes"]["ozaki1"]
+        s2 = cell["schemes"]["ozaki2"]
+        print(f"guard ({m},{k},{n}) r={GUARD_PROBES}: verify "
+              f"{s1['verify_bytes_fused']/1e3:.1f}kB fused, overhead "
+              f"s1 {100*s1['time_ratio']:.2f}%/s2 "
+              f"{100*s2['time_ratio']:.2f}% time, "
+              f"{100*s1['bytes_ratio']:.2f}%/"
+              f"{100*s2['bytes_ratio']:.2f}% bytes", flush=True)
+
     cells_sh = []
     for m, k, n in SHARDED_SHAPES:
         for layout in MESH_LAYOUTS:
@@ -360,11 +411,12 @@ def main(argv=None) -> int:
     p4 = [c for c in cells if c["p"] == 4]
     m6 = [c for c in cells2 if c["p"] == 6]
     report = {
-        "schema": "bench_traffic/v3",
+        "schema": "bench_traffic/v4",
         "uses_per_step": USES,
         "cells": cells,
         "scheme2_cells": cells2,
         "sharded_cells": cells_sh,
+        "guard_cells": cells_g,
         "acceptance": {
             "sharded_column_collective_free": all(
                 c["partitions"]["column"]["collective_bytes_per_device"]
@@ -380,6 +432,10 @@ def main(argv=None) -> int:
             "scheme2_bit_identical":
                 all(ok for c in cells2
                     for ok in c.get("bit_identical", {}).values()),
+            "guard_overhead_max": max(
+                sc[field] for c in cells_g for sc in c["schemes"].values()
+                for field in ("bytes_ratio", "time_ratio")),
+            "guard_overhead_ceiling": GUARD_OVERHEAD_CEILING,
         },
     }
     with open(args.out, "w") as f:

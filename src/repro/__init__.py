@@ -10,6 +10,7 @@ The public surface (see docs/api.md):
   repro.emulated_dot(a, b, cfg)         (..., K) @ (K, N) with custom VJP
   repro.plan_precision(bits, k)         Fig.-7 scheme/slice planner
   repro.GemmPolicy / repro.prepare_rhs  model policies / prepared weights
+  repro.guard / "+guard" spec suffix    numerical guardrails (docs/robustness.md)
 """
 
 from repro.api import (
@@ -50,6 +51,10 @@ __all__ = [
     "GemmPolicy",
     "prepare_rhs",
     "PreparedOperand",
+    # numerical guardrails (docs/robustness.md)
+    "guard",
+    "EmulationAccuracyError",
+    "verify_gemm",
 ]
 
 # Heavy re-exports (they pull the Pallas kernel stack) resolve lazily so
@@ -62,6 +67,10 @@ _LAZY = {
     "GemmPolicy": ("repro.models.common", "GemmPolicy"),
     "prepare_rhs": ("repro.kernels.prepared", "prepare_rhs"),
     "PreparedOperand": ("repro.kernels.prepared", "PreparedOperand"),
+    "guard": ("repro.guard", None),  # the subpackage itself
+    "EmulationAccuracyError": ("repro.core.precision",
+                               "EmulationAccuracyError"),
+    "verify_gemm": ("repro.guard.verify", "verify_gemm"),
 }
 
 
@@ -72,7 +81,8 @@ def __getattr__(name):
         raise AttributeError(f"module 'repro' has no attribute {name!r}") \
             from None
     import importlib
-    value = getattr(importlib.import_module(module), attr)
+    mod = importlib.import_module(module)
+    value = mod if attr is None else getattr(mod, attr)
     globals()[name] = value  # cache for subsequent lookups
     return value
 

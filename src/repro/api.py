@@ -221,6 +221,24 @@ def _sharded_2d(a2, b, cfg, mesh):
             or cfg.impl not in ("auto", "pallas") or cfg.scheme == "native":
         return None
     from repro.parallel import shard_gemm
+    if cfg.guard is not None and not jnp.issubdtype(
+            jnp.asarray(a2).dtype, jnp.complexfloating):
+        # Guard wraps the sharded route at the *global* level: sanitize
+        # and verify whole operands/results once, not per shard.  The
+        # escalation rungs re-enter here; a rung the partitioner cannot
+        # run (impl='xla') takes the unsharded dispatcher instead.
+        from repro import guard
+
+        lead = a2.shape[:-1]
+        a2f = a2.reshape(-1, a2.shape[-1])
+
+        def run(aa, bb, rung_cfg):
+            if rung_cfg.impl in ("auto", "pallas"):
+                return shard_gemm.sharded_dense(aa, bb, rung_cfg, mesh)
+            return dispatch.emulated_matmul(aa, bb, cfg=rung_cfg)
+
+        n = b.n if _is_prepared(b) else b.shape[-1]
+        return guard.guarded_call(a2f, b, cfg, run).reshape(*lead, n)
     return shard_gemm.sharded_dense(a2, b, cfg, mesh)
 
 
@@ -265,6 +283,15 @@ def _dot_general_prepared(a, b, dimension_numbers, cfg, out_dtype,
     out = _sharded_2d(a, b, cfg, mesh)
     if out is not None:
         return out.astype(out_dtype)
+    if cfg.guard is not None:
+        # Guarded prepared consumption routes through the dispatcher's
+        # guard seam (verification reconstructs the dense weight from
+        # the prepared stack).
+        from repro.kernels import dispatch
+        lead = a.shape[:-1]
+        out = dispatch.emulated_matmul(a.reshape(-1, a.shape[-1]), b,
+                                       cfg=cfg, out_dtype=out_dtype)
+        return out.reshape(*lead, b.n)
     return prepared_dot(a, b, out_dtype=out_dtype)
 
 

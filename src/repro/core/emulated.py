@@ -68,6 +68,13 @@ def _cacheable(a, b, cfg: EmulationConfig) -> bool:
 
 def _dot_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig) -> jax.Array:
     """Dispatch a single (M, K) @ (K, N) according to cfg."""
+    if (cfg.guard is not None and cfg.scheme != "native"
+            and not _is_complex(a) and not _is_complex(b)):
+        # Guard seam for the dot_general/einsum/dense front doors and
+        # both VJP backward GEMMs: the ladder re-enters _dot_2d with the
+        # guard stripped for every rung (repro.guard.ladder).
+        from repro import guard  # lazy: optional subsystem
+        return guard.guarded_dot_2d(a, b, cfg)
     out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
     if cfg.scheme == "native":
         return jax.lax.dot_general(
@@ -105,7 +112,10 @@ def emulated_dot(a: jax.Array, b: jax.Array,
 
 
 def _fwd(a, b, cfg):
-    if _cacheable(a, b, cfg):
+    # Guarded calls skip the prepared shortcut: the escalation ladder
+    # may re-plan the slice count, which a stack prepared up front would
+    # pin (verification itself handles prepared rhs via reconstruct()).
+    if _cacheable(a, b, cfg) and cfg.guard is None:
         # Decompose the rhs once: forward layout + K-transposed twin.
         from repro.kernels import prepared  # lazy: pallas import
         prep = prepared.prepare_rhs(b, cfg, with_twin=True)

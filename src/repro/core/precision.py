@@ -28,6 +28,18 @@ DEFAULT_MODULI: tuple[int, ...] = (
 
 Scheme = Literal["native", "ozaki1", "ozaki2"]
 
+
+class EmulationAccuracyError(ValueError):
+    """An emulated GEMM cannot (or did not) meet its accuracy contract.
+
+    Raised ahead of time when a configuration provably breaks exactness
+    (e.g. ``scheme2.check_exact_k``'s int32 accumulator bound) and at
+    runtime by the guard subsystem (``repro.guard``) when a verified
+    result misses its error bound and the escalation ladder is exhausted
+    (``+guard:strict``).  Subclasses ValueError so existing call-sites
+    that caught the old bare ValueError keep working.
+    """
+
 # K the spec mini-language assumes when a ``bits=N`` spec names no ``:kK``
 # suffix — plan_precision needs a contraction length to budget slices
 # against, and 4096 is the model zoo's typical projection K.
@@ -114,6 +126,12 @@ class EmulationConfig:
                out-of-tree registration); None = platform default.  The
                ``REPRO_BACKEND`` environment variable overrides this at
                dispatch time.
+      guard:   numerical guardrails (repro.guard): None = off, 'on' =
+               special-value masking + a posteriori verification with
+               the escalation ladder (retry with more bits, then
+               fused->xla->native), 'strict' = same but an exhausted
+               ladder raises EmulationAccuracyError instead of falling
+               back to native.  Spec suffixes '+guard' / '+guard:strict'.
     """
     scheme: Scheme = "native"
     p: int = 4
@@ -128,6 +146,7 @@ class EmulationConfig:
     decomp: Literal["auto", "xla", "kernel"] = "auto"
     cache_weights: bool = False
     backend: str | None = None
+    guard: Literal["on", "strict"] | None = None
 
     def resolved_beta(self, k_dim: int) -> int:
         return self.beta if self.beta is not None else safe_beta(k_dim)
@@ -159,6 +178,8 @@ class EmulationConfig:
     #           | "+cached"                     (per-step weight cache:
     #                                            slices / residues)
     #           | "+xla" | "+pallas"            (pin impl; default 'auto')
+    #           | "+guard" | "+guard:strict"    (numerical guardrails,
+    #                                            see docs/robustness.md)
     #
     # ``ozaki2-m6`` pins ``moduli=default_moduli(6)`` so parse/to_spec
     # round-trips survive plan_precision's explicit moduli. ``ozaki2-p6``
@@ -186,6 +207,7 @@ class EmulationConfig:
         backend: str | None = None
         cached = False
         impl = "auto"
+        guard: str | None = None
         for tok in re.findall(r"[@+][^@+]+", m.group("suffixes")):
             if tok[0] == "@":
                 if backend is not None:
@@ -195,10 +217,15 @@ class EmulationConfig:
                 cached = True
             elif tok[1:] in ("xla", "pallas"):
                 impl = tok[1:]
+            elif tok[1:] == "guard":
+                guard = "on"
+            elif tok[1:] == "guard:strict":
+                guard = "strict"
             else:
                 raise ValueError(
                     f"unknown suffix {tok!r} in {spec!r} (expected "
-                    "'@<backend>', '+cached', '+xla' or '+pallas')")
+                    "'@<backend>', '+cached', '+xla', '+pallas', "
+                    "'+guard' or '+guard:strict')")
 
         if base == "native":
             cfg = cls(scheme="native", impl=impl, backend=backend)
@@ -234,6 +261,12 @@ class EmulationConfig:
                                  "scheme (ozaki1 caches int8 slices, "
                                  "ozaki2 balanced residues)")
             cfg = dataclasses.replace(cfg, cache_weights=True)
+        if guard is not None:
+            if cfg.scheme == "native":
+                raise ValueError(f"{spec!r}: '+guard' needs an emulation "
+                                 "scheme (native dots have nothing to "
+                                 "verify against)")
+            cfg = dataclasses.replace(cfg, guard=guard)
         return cfg
 
     def to_spec(self) -> str:
@@ -262,6 +295,8 @@ class EmulationConfig:
             blockers.append("moduli")
         if self.cache_weights and self.scheme == "native":
             blockers.append("cache_weights")
+        if self.guard is not None and self.scheme == "native":
+            blockers.append("guard")
         if blockers:
             raise ValueError(
                 f"config not expressible as a spec (non-default "
@@ -279,6 +314,10 @@ class EmulationConfig:
             out += f"+{self.impl}"
         if self.cache_weights:
             out += "+cached"
+        if self.guard == "on":
+            out += "+guard"
+        elif self.guard == "strict":
+            out += "+guard:strict"
         return out
 
 

@@ -20,15 +20,42 @@ import numpy as np
 from repro.core.precision import EmulationConfig, safe_beta
 
 
+def exact_pow2(exp: jax.Array, dtype) -> jax.Array:
+    """Exact power-of-two array ``2.0 ** exp`` in ``dtype``.
+
+    ``jnp.exp2`` is a polynomial kernel: eagerly it lands a few ulp off
+    at large |exp| (exp2(120) != 2^120 in fp32) and flushes subnormal
+    results to zero (exp2(-130) == 0), so power-of-two *scales* built
+    through it silently stop being powers of two exactly where the
+    dynamic range gets interesting.  Building the exponent field
+    directly is exact for every representable exponent: values below
+    the normal range clamp to the smallest *normal* power (keeping the
+    scale nonzero and exactly invertible), values above it saturate to
+    +inf (the IEEE all-ones exponent), mirroring what 2^exp would
+    overflow to.
+    """
+    dtype = jnp.dtype(dtype)
+    info = jnp.finfo(dtype)
+    bias = info.maxexp - 1
+    uint = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}[dtype.itemsize]
+    e = jnp.clip(exp, info.minexp, info.maxexp)
+    bits = (e + bias).astype(uint) << info.nmant
+    return jax.lax.bitcast_convert_type(bits, dtype)
+
+
 def _pow2_row_scale(a: jax.Array, axis: int) -> jax.Array:
     """Power-of-two scale mu with |a / mu| in [0, 1) along ``axis``.
 
-    mu = 2^e where frexp(max|a|) = (m, e), m in [0.5, 1).  Rows that are all
-    zero get mu = 1.
+    mu = 2^e where frexp(max|a|) = (m, e), m in [0.5, 1).  Rows that are
+    all zero get mu = 1.  The exponent is clamped at the dtype's smallest
+    *normal* power, so subnormal-only rows get a finite normal mu (the
+    quotient |a / mu| < 1 still holds, and the division stays exact) —
+    with exp2 such rows rounded the scale to zero and the whole row
+    divided out to inf.
     """
     amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
     _, exp = jnp.frexp(jnp.where(amax == 0, 1.0, amax))
-    return jnp.exp2(exp.astype(a.dtype))
+    return exact_pow2(exp, a.dtype)
 
 
 def split(a: jax.Array, p: int, beta: int, axis: int):
@@ -54,7 +81,10 @@ def split(a: jax.Array, p: int, beta: int, axis: int):
         s = jnp.trunc(shifted)          # |s| <= 2^beta - 1  (beta <= 7)
         slices.append(s.astype(jnp.int8))
         r = shifted - s                 # exact (fractional part)
-    return jnp.stack(slices), scale
+    stacked = jnp.stack(slices)
+    # Lazy: the guard subsystem is optional on this hot path.
+    from repro.guard.inject import maybe_corrupt_slices
+    return maybe_corrupt_slices(stacked), scale
 
 
 def interleave_k(slices: jax.Array, operand: str, t_k: int) -> jax.Array:

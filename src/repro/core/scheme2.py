@@ -30,16 +30,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.precision import EmulationConfig, scheme2_budget
+from repro.core.precision import (EmulationAccuracyError, EmulationConfig,
+                                  scheme2_budget)
 from repro.core import dd
+from repro.core.scheme1 import exact_pow2
 
 
 def _pow2_int_scale(a: jax.Array, axis: int, budget_bits: int) -> jax.Array:
-    """Power-of-two mu per row/col s.t. |trunc(mu * a)| < 2^budget_bits."""
+    """Power-of-two mu per row/col s.t. |trunc(mu * a)| < 2^budget_bits.
+
+    mu * amax in [2^(budget-1), 2^budget).  The exponent is built exactly
+    (see :func:`repro.core.scheme1.exact_pow2` — jnp.exp2 is inexact at
+    large exponents) and clamped below the dtype's overflow point:
+    subnormal-only rows, whose exact mu (up to 2^(budget + 149) in fp32)
+    is unrepresentable, get the largest finite power-of-two scale and
+    integerize to exact zeros — a documented graceful flush, where the
+    old exp2 path produced an inf scale and int-wraparound garbage.
+    """
     amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
     _, exp = jnp.frexp(jnp.where(amax == 0, 1.0, amax))
-    # mu * amax in [2^(budget-1), 2^budget)
-    return jnp.exp2((budget_bits - exp).astype(a.dtype))
+    info = jnp.finfo(a.dtype)
+    e = jnp.minimum(budget_bits - exp, info.maxexp - 1)
+    return exact_pow2(e, a.dtype)
 
 
 def integerize(a: jax.Array, axis: int, budget_bits: int):
@@ -73,7 +85,10 @@ def balanced_residues(a_int: jax.Array, moduli) -> jax.Array:
         half = m // 2
         r = jnp.remainder(ai + half, m) - half  # balanced, in [-half, m-1-half]
         outs.append(r.astype(jnp.int8))
-    return jnp.stack(outs)
+    res = jnp.stack(outs)
+    # Lazy: the guard subsystem is optional on this hot path.
+    from repro.guard.inject import maybe_corrupt_residues
+    return maybe_corrupt_residues(res)
 
 
 def check_exact_k(k_dim: int, moduli) -> None:
@@ -87,11 +102,15 @@ def check_exact_k(k_dim: int, moduli) -> None:
     if k_dim * half * half >= 2 ** 31:
         # >=: int32 tops out at 2^31 - 1, and the all-(-half)^2 worst
         # case reaches exactly K * half^2.
-        raise ValueError(
+        k_max = (2 ** 31 - 1) // (half * half)
+        raise EmulationAccuracyError(
             f"Scheme II: K={k_dim} can overflow the int32 residue "
             f"accumulators (bound K * {half}^2 < 2^31, i.e. K <= "
-            f"{(2 ** 31 - 1) // (half * half)} for these moduli) — "
-            "split the contraction or reduce the modulus magnitudes")
+            f"{k_max} for these moduli). Remediation: re-plan with a "
+            f"'bits=<N>:k{k_dim}' spec so plan_precision budgets the "
+            "moduli for this contraction length, or shard the "
+            "contraction (repro.dot_general with a K-sharded mesh "
+            f"splits K across devices) so each shard stays <= {k_max}.")
 
 
 def _int8_dot(a8: jax.Array, b8: jax.Array) -> jax.Array:

@@ -355,6 +355,87 @@ def sharded_gemm_traffic(s: GemmShape, p: int, mesh_shape,
     }
 
 
+# ---------------------------------------------------------------------------
+# Guard verification traffic (docs/robustness.md cost model).
+#
+# The a posteriori verifier (repro.guard.verify.verify_gemm) checks
+# C @ x against A @ (B @ x) for r Rademacher probe vectors — three GEMVs
+# (well, skinny (., r) GEMMs) against matrices the guarded GEMM already
+# owns.  Two accounting conventions:
+#
+#   fused    — the probes piggyback on the GEMM's own operand streams
+#              (A, B and C are charged to the GEMM, not the verifier);
+#              only the probe-sized vectors round-trip:
+#                2Nr  x read by B@x and by C@x,
+#                2Kr  Bx written + re-read by A@(Bx),
+#                 Mr  Cx written once; the compare runs in the A@(Bx)
+#                     epilogue, so A(Bx) never leaves chip.
+#              total = 4r (M + 2K + 2N) bytes.  This is the model the
+#              benchmark gates at <= 5% of the fused GEMM bytes.
+#   unfused  — the XLA reference path re-reads everything: B, A and C
+#              once per GEMV, plus the row/col abs-reductions of the
+#              error normalizer re-reading A and B.  Reported alongside,
+#              not gated (it is the price of verifying a kernel you
+#              cannot touch).
+# ---------------------------------------------------------------------------
+
+
+def guard_verify_bytes_fused(s: GemmShape, probes: int = 2) -> int:
+    return 4 * probes * (s.m + 2 * s.k + 2 * s.n)
+
+
+def guard_verify_bytes_unfused(s: GemmShape, probes: int = 2,
+                               out_bytes: int = 4) -> int:
+    gemv_reads = 4 * (s.m * s.k + s.k * s.n) + out_bytes * s.m * s.n
+    vectors = 4 * probes * (3 * s.m + 2 * s.k + 2 * s.n)
+    normalizer = 4 * (s.m * s.k + s.k * s.n)
+    return gemv_reads + vectors + normalizer
+
+
+def guard_verify_flops(s: GemmShape, probes: int = 2) -> int:
+    """MAC-pair ops of the three probe GEMVs (the O(MK + KN) normalizer
+    reductions are add-only and amortize across seeds; not counted)."""
+    return 2 * probes * (s.k * s.n + s.m * s.k + s.m * s.n)
+
+
+def guard_overhead_model(s: GemmShape, p: int, scheme: str = "ozaki1",
+                         probes: int = 2, out_bytes: int = 4,
+                         peak: "HardwarePeak | None" = None) -> dict:
+    """Modeled verification overhead of one guarded fused GEMM.
+
+    Roofline convention: GEMM time = max(fused bytes / HBM BW,
+    int8 flops / int8 peak); verify time = max(fused verify bytes /
+    HBM BW, verify flops / fp peak) — the probes are fp32 math.  The
+    returned ``time_ratio`` uses the given ``peak`` (default: TPU v5e,
+    the repo's reference part).
+    """
+    if peak is None:
+        peak = BACKEND_PEAKS["tpu"]["v5e"]
+    if scheme == "ozaki1":
+        gemm_bytes = scheme1_fused_bytes(s, p, out_bytes)
+        gemm_flops = scheme1_flops(s, p)
+    elif scheme == "ozaki2":
+        gemm_bytes = (p * scheme2_fused_bytes_per_modulus(s)
+                      + out_bytes * s.m * s.n)
+        gemm_flops = scheme2_flops(s, p)
+    else:
+        raise ValueError(f"no guard overhead model for scheme {scheme!r}")
+    v_bytes = guard_verify_bytes_fused(s, probes)
+    v_flops = guard_verify_flops(s, probes)
+    t_gemm = max(gemm_bytes / peak.hbm_bw, gemm_flops / peak.int8_ops)
+    t_verify = max(v_bytes / peak.hbm_bw, v_flops / peak.flops)
+    return {
+        "gemm_bytes": int(gemm_bytes),
+        "gemm_flops": int(gemm_flops),
+        "verify_bytes_fused": int(v_bytes),
+        "verify_bytes_unfused": int(
+            guard_verify_bytes_unfused(s, probes, out_bytes)),
+        "verify_flops": int(v_flops),
+        "bytes_ratio": v_bytes / max(1, gemm_bytes),
+        "time_ratio": t_verify / t_gemm,
+    }
+
+
 def scheme2_workspace_bytes(s: GemmShape, p: int,
                             complex_inputs: bool = False) -> int:
     """p residue matrices per operand + p per-modulus output residues

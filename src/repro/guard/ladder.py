@@ -1,0 +1,227 @@
+"""The guard escalation ladder: sanitize -> run -> verify -> escalate.
+
+``guarded_call`` wraps one unguarded 2-D GEMM runner with the full
+guard pipeline:
+
+  0. probe operands (NaN/Inf lanes, exponent spread) and sanitize the
+     non-finite entries so the integer pipelines see finite data;
+  1. run the requested config and verify the result a posteriori
+     (repro.guard.verify);
+  2. on a tripped check, climb the ladder: re-plan with more precision
+     bits (plan_precision, same scheme preferred), then pin the XLA
+     reference expansion, re-verifying each rung;
+  3. an exhausted ladder falls back to the native dot ('on' mode, with
+     a one-shot RuntimeWarning through the dispatcher's fallback
+     machinery) or raises EmulationAccuracyError ('strict');
+  4. finally restore native special-value semantics by NaN-masking the
+     output lanes a non-finite operand entry contaminated.
+
+The retry rungs are *eager-only*: under tracing (jit / grad / vmap)
+there is no Python control flow over data, so the guard degrades to
+sanitize + verify + mask, recording verifications and trips through
+``jax.debug.callback`` into ``guard.stats()`` — the runtime layers
+(runtime/trainer.py, launch/serve.py) poll those counters between
+steps and own the retry there.  Strict mode therefore raises eagerly
+but only *counts* under a jit trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import (EmulationAccuracyError, EmulationConfig,
+                                  plan_precision)
+
+from repro.guard import policy as policy_mod
+from repro.guard import sentinel
+from repro.guard import verify as verify_mod
+
+GuardPolicy = policy_mod.GuardPolicy
+
+
+def strip_guard(cfg: EmulationConfig) -> EmulationConfig:
+    """The same config with the guard disarmed — what the ladder hands
+    to the unguarded runners (prevents recursive guarding)."""
+    if cfg.guard is None:
+        return cfg
+    return dataclasses.replace(cfg, guard=None)
+
+
+def _is_traced(*xs) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in xs)
+
+
+def _record_traced(ok, masked_any):
+    """debug.callback target: counts per *execution*, not per trace.
+
+    Under vmap the verdicts arrive batched — count each lane.
+    """
+    ok = np.asarray(ok)
+    policy_mod.record("calls", max(1, ok.size))
+    policy_mod.record("verified", max(1, ok.size))
+    trips = int(ok.size - np.count_nonzero(ok))
+    if trips:
+        policy_mod.record("trips", trips)
+    masked = int(np.count_nonzero(np.asarray(masked_any)))
+    if masked:
+        policy_mod.record("masked", masked)
+
+
+def escalated_config(base: EmulationConfig, k_dim: int,
+                     extra_bits: int) -> EmulationConfig | None:
+    """First ladder rung: re-plan for ``extra_bits`` more precision bits
+    at this contraction length, keeping the scheme when it can deliver.
+    None when even the cross-scheme planner cannot reach the target."""
+    target = base.bits(k_dim) + extra_bits
+    prefer = base.scheme if base.scheme in ("ozaki1", "ozaki2") else None
+    try:
+        planned = plan_precision(target, k_dim, prefer=prefer)
+    except ValueError:
+        try:
+            planned = plan_precision(target, k_dim)
+        except ValueError:
+            return None
+    return dataclasses.replace(
+        planned, impl=base.impl, backend=base.backend,
+        out_dtype=base.out_dtype, fused=base.fused, decomp=base.decomp)
+
+
+def _warn_guard(reason: tuple, shapes: tuple, message: str) -> None:
+    from repro.kernels import dispatch
+    dispatch._warn_fallback_once(("guard",) + reason, shapes, message,
+                                 stacklevel=4)
+
+
+def guarded_call(a: jax.Array, b, cfg: EmulationConfig, run,
+                 probe: "sentinel.SentinelProbe | None" = None) -> jax.Array:
+    """Run one (M, K) @ (K, N) emulated GEMM under the guard pipeline.
+
+    ``run(a, b, cfg)`` is the unguarded runner (it receives sanitized
+    operands and guard-stripped configs, including the escalation
+    rungs' re-planned configs).  ``b`` may be a prepared operand — the
+    re-plan rung is then skipped (its slice/modulus count is pinned at
+    prepare time) and the ladder goes straight to the XLA expansion.
+    ``probe`` is an already-computed sentinel probe (e.g. off a
+    ``dispatch.plan_emulated(..., probe=True)`` plan); None computes it
+    here.
+    """
+    guard_policy = GuardPolicy.from_config(cfg)
+    assert guard_policy is not None, "guarded_call needs cfg.guard set"
+    base = strip_guard(cfg)
+    prepared = hasattr(b, "reconstruct")
+    b_dense = b.reconstruct() if prepared else b
+    if probe is None:
+        probe = sentinel.probe_operands(a, b_dense)
+    a_s = sentinel.sanitize(a)
+    b_s = b if prepared else sentinel.sanitize(b_dense)
+    k_dim = a.shape[-1]
+
+    def check(c, rung_cfg):
+        return verify_mod.verify_gemm(
+            a_s, b_s if not prepared else b_dense, c, rung_cfg,
+            probes=guard_policy.probes, tol_factor=guard_policy.tol_factor,
+            row_mask=probe.row_mask, col_mask=probe.col_mask)
+
+    c0 = run(a_s, b_s, base)
+
+    if _is_traced(a, b_dense, c0):
+        ver = check(c0, base)
+        jax.debug.callback(_record_traced, ver.ok, probe.any_nonfinite())
+        return sentinel.apply_special_values(c0, probe)
+
+    # -- eager: the full ladder ------------------------------------------
+    policy_mod.record("calls")
+    if bool(probe.any_nonfinite()):
+        policy_mod.record("masked")
+    bits = base.bits(k_dim)
+    spread = float(jnp.maximum(probe.spread_a, probe.spread_b))
+    if spread > bits:
+        _warn_guard(
+            ("spread", base.scheme, base.p), (a.shape, b_dense.shape),
+            f"guard: operand exponent spread ~{spread:.0f} bits exceeds "
+            f"the {bits}-bit budget of {base.scheme}-p{base.p}; small "
+            "entries fall below the power-of-two row scale (expect a "
+            "verification trip or request more bits via a 'bits=' spec)")
+    ver = check(c0, base)
+    policy_mod.record("verified")
+    if bool(ver.ok):
+        return sentinel.apply_special_values(c0, probe)
+
+    policy_mod.record("trips")
+    rungs: list[EmulationConfig] = []
+    if not prepared:
+        esc = escalated_config(base, k_dim, guard_policy.escalate_bits)
+        if esc is not None:
+            rungs.append(esc)
+        rungs.append(dataclasses.replace(esc or base, impl="xla"))
+    else:
+        # Slice/modulus counts are pinned in the prepared stack; the
+        # only re-runnable rung is the reference expansion.
+        rungs.append(dataclasses.replace(base, impl="xla"))
+    for rung_cfg in rungs:
+        policy_mod.record("escalations")
+        c = run(a_s, b_s, rung_cfg)
+        ver = check(c, rung_cfg)
+        policy_mod.record("verified")
+        if bool(ver.ok):
+            policy_mod.record("recoveries")
+            return sentinel.apply_special_values(c, probe)
+
+    if guard_policy.strict:
+        tried = [f"{r.scheme}-p{r.p}+{r.impl}" for r in rungs]
+        raise EmulationAccuracyError(
+            f"guarded emulated GEMM {a.shape} @ {b_dense.shape} missed its "
+            f"error bound (residual {float(ver.err):.3g} > tol "
+            f"{ver.tol:.3g}) and the escalation ladder is exhausted "
+            f"(tried {tried}); strict mode refuses the native fallback — "
+            "inspect the operands (guard.stats(), repro.guard.sentinel) "
+            "or raise the precision budget")
+    policy_mod.record("native_fallbacks")
+    _warn_guard(
+        ("native_fallback", base.scheme, base.p), (a.shape, b_dense.shape),
+        f"guard: emulated GEMM missed its error bound (residual "
+        f"{float(ver.err):.3g} > tol {ver.tol:.3g}) after "
+        f"{len(rungs)} escalation(s); falling back to the native dot "
+        "for this call ('+guard:strict' raises instead)")
+    c_native = (a_s.astype(jnp.float32)
+                @ jnp.asarray(b_dense).astype(jnp.float32)).astype(c0.dtype)
+    return sentinel.apply_special_values(c_native, probe)
+
+
+def guarded_matmul(a: jax.Array, b, cfg: EmulationConfig, *,
+                   out_dtype=None, backend: str | None = None,
+                   mesh_shape: tuple | None = None) -> jax.Array:
+    """The dispatch-level guard seam: ``dispatch.emulated_matmul`` routes
+    here when ``cfg.guard`` is set, and every rung routes back through
+    ``emulated_matmul`` with the guard stripped."""
+    from repro.kernels import dispatch
+
+    probe = None
+    if not hasattr(b, "reconstruct"):
+        probe = dispatch.plan_emulated(a, b, strip_guard(cfg), out_dtype,
+                                       backend, mesh_shape=mesh_shape,
+                                       probe=True).probe
+
+    def run(aa, bb, rung_cfg):
+        return dispatch.emulated_matmul(aa, bb, cfg=rung_cfg,
+                                        out_dtype=out_dtype, backend=backend,
+                                        mesh_shape=mesh_shape)
+
+    return guarded_call(a, b, cfg, run, probe=probe)
+
+
+def guarded_dot_2d(a: jax.Array, b: jax.Array,
+                   cfg: EmulationConfig) -> jax.Array:
+    """The core-level guard seam: ``repro.core.emulated._dot_2d`` (the
+    2-D engine under dot_general/einsum/dense and both VJP backward
+    GEMMs) routes here when ``cfg.guard`` is set."""
+    from repro.core import emulated
+
+    def run(aa, bb, rung_cfg):
+        return emulated._dot_2d(aa, bb, rung_cfg)
+
+    return guarded_call(a, b, cfg, run)

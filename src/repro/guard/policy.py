@@ -1,0 +1,86 @@
+"""Guard policy and the queryable trip statistics.
+
+``GuardPolicy`` is the resolved form of the ``+guard`` / ``+guard:strict``
+spec suffixes (parsed into ``EmulationConfig.guard`` by core.precision):
+it owns the verification knobs and the escalation-ladder shape.  The
+module-level stats counter is what ``runtime/trainer.py`` and
+``launch/serve.py`` poll between steps to turn guard trips into
+retry-with-backoff events, and what tests assert on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+from repro.core.precision import EmulationConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """Resolved guard behaviour for one emulated GEMM call-site.
+
+    mode: 'on' — exhausted ladder falls back to the native dot (with a
+      one-shot warning); 'strict' — exhausted ladder raises
+      EmulationAccuracyError.
+    probes: number of stochastic probe vectors for verify_gemm.
+    tol_factor: safety factor on the analytic tolerance (the bound is a
+      worst-case; 16x keeps the false-trip rate at zero on conditioned
+      inputs while a single injected int8 bit flip overshoots it by
+      orders of magnitude).
+    escalate_bits: extra precision bits requested from plan_precision on
+      the first ladder rung.
+    """
+    mode: str = "on"
+    probes: int = 2
+    tol_factor: float = 16.0
+    escalate_bits: int = 8
+
+    @classmethod
+    def from_config(cls, cfg: EmulationConfig) -> "GuardPolicy | None":
+        if cfg.guard is None:
+            return None
+        return cls(mode=cfg.guard)
+
+    @property
+    def strict(self) -> bool:
+        return self.mode == "strict"
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardStats:
+    """Snapshot of the guard counters since the last ``stats_clear()``."""
+    calls: int = 0            # guarded GEMMs executed
+    verified: int = 0         # verifications that ran
+    trips: int = 0            # verifications that missed the tolerance
+    escalations: int = 0      # ladder rungs executed after a trip
+    recoveries: int = 0       # trips whose retry verified clean
+    native_fallbacks: int = 0 # ladders exhausted into the native dot
+    masked: int = 0           # GEMMs with NaN/Inf lanes masked
+
+    @property
+    def tripped(self) -> bool:
+        return self.trips > 0
+
+
+_lock = threading.Lock()
+_counts: dict[str, int] = {}
+
+
+def record(event: str, n: int = 1) -> None:
+    """Bump one counter (thread-safe; callable from jax.debug.callback)."""
+    with _lock:
+        _counts[event] = _counts.get(event, 0) + int(n)
+
+
+def stats() -> GuardStats:
+    """Queryable trip counter — the diagnostics surface next to
+    ``dispatch.fallback_warnings_clear``."""
+    with _lock:
+        known = {f.name for f in dataclasses.fields(GuardStats)}
+        return GuardStats(**{k: v for k, v in _counts.items() if k in known})
+
+
+def stats_clear() -> None:
+    with _lock:
+        _counts.clear()

@@ -1,0 +1,104 @@
+"""Input sentinels: special-value probes and NaN/Inf masking.
+
+Ozaki decompositions are integer pipelines — a NaN or Inf operand entry
+does not propagate, it truncates into garbage int8 slices and the GEMM
+returns a *finite wrong number*.  Native ``jnp.matmul`` propagates: any
+non-finite entry in row i of A (or column j of B) makes the whole
+output row i (column j) NaN — Inf included, because the emulated
+product cannot distinguish +Inf·0 from +Inf·x, so (like LAPACK) we map
+every non-finite contamination to NaN.
+
+The guard restores that contract *around* the fused kernels: operands
+are sanitized (non-finite entries zeroed) before dispatch so the
+integer pipeline sees finite data, and the affected output rows/columns
+are masked to NaN afterwards with one ``jnp.where``.  The kernels stay
+untouched, and when the mask is empty the sanitize/mask pair is the
+identity (``where`` with an all-false mask returns the original bits).
+
+``probe_operands`` additionally estimates the per-row exponent spread
+(log2(max|row|) - log2(min nonzero |row|)): rows wider than the
+decomposition captures (beta * p bits for Scheme I, the integer budget
+for Scheme II) lose their small entries to the power-of-two row scale,
+which is what the a posteriori verifier (repro.guard.verify) exists to
+catch — the probe is the cheap leading indicator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelProbe:
+    """Result of the pre-dispatch operand probe (all lazily-computed
+    jax arrays so the probe adds no synchronization point).
+
+    row_mask: (M,) bool — rows of A containing a non-finite entry.
+    col_mask: (N,) bool — columns of B containing a non-finite entry.
+    spread_a / spread_b: () float32 — max per-row (per-col) exponent
+      spread estimate in bits, 0 for empty/zero operands.
+    """
+    row_mask: jax.Array
+    col_mask: jax.Array
+    spread_a: jax.Array
+    spread_b: jax.Array
+
+    def any_nonfinite(self) -> jax.Array:
+        return jnp.any(self.row_mask) | jnp.any(self.col_mask)
+
+
+def exponent_spread(x: jax.Array, axis: int) -> jax.Array:
+    """Max over rows of log2(max|row|) - log2(min nonzero |row|), in bits.
+
+    Non-finite entries are ignored (they are sanitized away before the
+    decomposition ever sees them).  Rows with <= 1 distinct magnitude
+    contribute 0.
+    """
+    ax = jnp.abs(x)
+    finite = jnp.isfinite(ax) & (ax > 0)
+    hi = jnp.max(jnp.where(finite, ax, 0.0), axis=axis)
+    lo = jnp.min(jnp.where(finite, ax, jnp.inf), axis=axis)
+    ok = (hi > 0) & jnp.isfinite(lo)
+    # frexp exponents are exact on subnormals, unlike log2.
+    _, e_hi = jnp.frexp(jnp.where(ok, hi, 1.0))
+    _, e_lo = jnp.frexp(jnp.where(ok, lo, 1.0))
+    spread = jnp.where(ok, (e_hi - e_lo).astype(jnp.float32), 0.0)
+    return jnp.max(spread) if spread.size else jnp.float32(0.0)
+
+
+def probe_operands(a: jax.Array, b: jax.Array) -> SentinelProbe:
+    """Cheap pre-dispatch probe: O(MK + KN) elementwise + reductions."""
+    fin_a = jnp.isfinite(a)
+    fin_b = jnp.isfinite(b)
+    return SentinelProbe(
+        row_mask=~jnp.all(fin_a, axis=-1),
+        col_mask=~jnp.all(fin_b, axis=0),
+        spread_a=exponent_spread(a, axis=-1),
+        spread_b=exponent_spread(b, axis=0),
+    )
+
+
+def sanitize(x: jax.Array) -> jax.Array:
+    """Zero the non-finite entries so the integer pipeline sees finite
+    data.  Identity (bit-for-bit) on fully finite input."""
+    return jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x))
+
+
+def zero_masked_rows(x: jax.Array, mask: jax.Array, axis: int) -> jax.Array:
+    """Zero whole rows (axis=0) / columns (axis=1) flagged by ``mask`` —
+    used by the verifier so masked lanes contribute nothing to either
+    side of the residual."""
+    shape = [1, 1]
+    shape[axis] = x.shape[axis]
+    return jnp.where(jnp.reshape(mask, shape), jnp.zeros_like(x), x)
+
+
+def apply_special_values(c: jax.Array, probe: SentinelProbe) -> jax.Array:
+    """Post-hoc mask: NaN the output rows/columns native matmul would
+    have NaN'd.  One fused ``where`` — bit-identity when no entry is
+    masked."""
+    mask = probe.row_mask[:, None] | probe.col_mask[None, :]
+    return jnp.where(mask, jnp.asarray(jnp.nan, dtype=c.dtype), c)

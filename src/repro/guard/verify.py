@@ -1,0 +1,133 @@
+"""A posteriori verification of emulated GEMM results.
+
+``verify_gemm`` is the stochastic residual check from the
+guaranteed-accuracy Ozaki literature (Schwarz et al., PAPERS.md):
+instead of recomputing C = A B at higher precision (a full second GEMM),
+compare
+
+    C @ x   vs   A @ (B @ x)
+
+for a handful of +-1 (Rademacher) probe vectors x.  Both sides are
+matrix-vector products — O(r (MN + MK + KN)) flops for r probes versus
+O(p^2 MNK) for the emulated GEMM itself — and any corruption of C that
+is not orthogonal to all r probes (probability ~2^-r for adversarial
+single-entry corruption, far smaller for realistic faults) shows up as
+a residual far above the decomposition's analytic error bound.
+
+The tolerance is *derived, not tuned*: the decomposition residual bound
+(2^(1-bits) relative, bits from ``EmulationConfig.bits`` — the same
+quantity ``plan_precision`` budgets) plus the float32 rounding of the
+verification matvecs themselves, normalized per output row by a bound
+that majorizes both the row-scaled Scheme-I residual structure
+(mu_i-weighted) and the magnitude of C's row (so the check is
+scheme-agnostic and never divides by something smaller than the
+quantities it compares).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import EmulationConfig
+
+from repro.guard import sentinel
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyResult:
+    """Outcome of one stochastic residual check (jax arrays, so the
+    result is usable both eagerly and under tracing)."""
+    ok: jax.Array        # () bool — max normalized residual <= tol
+    err: jax.Array       # () float32 — max_i |C x - A (B x)|_i / den_i
+    tol: float           # the analytic threshold the residual is held to
+
+    def __bool__(self) -> bool:  # eager convenience: `if verify_gemm(...):`
+        return bool(self.ok)
+
+
+def tolerance(bits: int, m: int, n: int, k: int,
+              tol_factor: float = 16.0) -> float:
+    """Analytic trip threshold for a ``bits``-bit emulated (M,K)@(K,N).
+
+    2^(1-bits): the decomposition's relative residual (one doubling of
+    the elementwise bound to cover both operands).  (k + n) * eps:
+    accumulated float32 rounding of the two verification matvec chains.
+    ``tol_factor`` is the safety margin on top — the bound is worst-case
+    over sign patterns, real residuals sit orders of magnitude below it
+    and a single int8 bit flip sits orders of magnitude above.
+    """
+    eps = float(jnp.finfo(jnp.float32).eps)
+    return float(tol_factor) * (2.0 ** (1 - bits) + (k + n) * eps)
+
+
+def _row_normalizer(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-row denominator majorizing the row-scaled error structure.
+
+    The Scheme-I residual in C[i, :] summed over columns is bounded by
+    2^-bits * (mu_i * sum|B| + rowsum|A|_i * sum_j nu_j) with the
+    power-of-two row scales mu_i <= 2 max_k |a_ik|, nu_j <= 2 max_k
+    |b_kj|; the same shape bounds Scheme II's integerization error.  It
+    also dominates sum_j |C[i, j]|, which bounds the verification
+    matvecs' own rounding.
+    """
+    abs_a = jnp.abs(a)
+    abs_b = jnp.abs(b)
+    row_max_a = jnp.max(abs_a, axis=1)            # (M,)
+    row_sum_a = jnp.sum(abs_a, axis=1)            # (M,)
+    sum_b = jnp.sum(abs_b)                        # ()
+    sum_col_max_b = jnp.sum(jnp.max(abs_b, axis=0))  # ()
+    tiny = jnp.float32(jnp.finfo(jnp.float32).tiny)
+    return row_max_a * sum_b + row_sum_a * sum_col_max_b + tiny
+
+
+def verify_gemm(a: jax.Array, b, c: jax.Array,
+                cfg: "EmulationConfig | str | None" = None, *,
+                bits: int | None = None, probes: int = 2,
+                tol_factor: float = 16.0, seed: int = 0,
+                row_mask: jax.Array | None = None,
+                col_mask: jax.Array | None = None) -> VerifyResult:
+    """Stochastic residual check of an emulated 2-D GEMM result.
+
+    Args:
+      a, b: the operands of the emulated product (b may be a prepared
+        operand — ``PreparedOperand`` / ``PreparedResidues`` — whose
+        dense form is recovered via ``.reconstruct()``).
+      c: the emulated result to verify.
+      cfg: the EmulationConfig (or spec string) that produced ``c`` —
+        sets the error-bound bits via ``cfg.bits(K)``.
+      bits: explicit precision bits; overrides ``cfg``.
+      probes: number of Rademacher probe vectors.
+      row_mask / col_mask: NaN/Inf sentinel masks (see repro.guard
+        .sentinel) — masked lanes of a/b/c are zeroed on both sides of
+        the residual so special-value handling never trips the check.
+    """
+    if hasattr(b, "reconstruct"):
+        b = b.reconstruct()
+    a = jnp.asarray(a, dtype=jnp.float32)
+    b = jnp.asarray(b, dtype=jnp.float32)
+    c = jnp.asarray(c, dtype=jnp.float32)
+    m, k = a.shape
+    n = b.shape[1]
+    if bits is None:
+        if cfg is not None:
+            bits = EmulationConfig.parse(cfg).bits(k)
+        else:
+            bits = 24  # fp32-mantissa default when nothing else is known
+    if row_mask is not None:
+        a = sentinel.zero_masked_rows(a, row_mask, axis=0)
+        c = sentinel.zero_masked_rows(c, row_mask, axis=0)
+    if col_mask is not None:
+        b = sentinel.zero_masked_rows(b, col_mask, axis=1)
+        c = sentinel.zero_masked_rows(c, col_mask, axis=1)
+    x = jax.random.rademacher(
+        jax.random.key(seed), (n, probes), dtype=jnp.float32)
+    lhs = c @ x                    # (M, r)
+    rhs = a @ (b @ x)              # (M, r) — never forms A @ B
+    resid = jnp.max(jnp.abs(lhs - rhs), axis=1)      # (M,)
+    den = _row_normalizer(a, b)
+    err = jnp.max(resid / den) if m else jnp.float32(0.0)
+    tol = tolerance(bits, m, n, k, tol_factor)
+    return VerifyResult(ok=err <= tol, err=err, tol=tol)

@@ -265,6 +265,12 @@ class GemmPlan:
     # Axis sizes of the launch mesh when (m, n, k) are shard-local dims
     # of a shard_map'ed GEMM (keys the block cache; None = unsharded).
     mesh_shape: tuple | None = None
+    # Input-sentinel probe (repro.guard.sentinel.SentinelProbe) when the
+    # plan was built with probe=True: NaN/Inf row/col masks + per-row
+    # exponent-spread estimates, computed pre-dispatch so the guard can
+    # mask special values and flag wide-dynamic-range operands without
+    # touching the fused kernels.
+    probe: object | None = None
 
     @property
     def aligned(self) -> bool:
@@ -290,7 +296,8 @@ def _plan_backend(cfg: EmulationConfig, a, b,
 
 def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
                   out_dtype=None, backend: str | None = None,
-                  mesh_shape: tuple | None = None) -> GemmPlan:
+                  mesh_shape: tuple | None = None,
+                  probe: bool = False) -> GemmPlan:
     """Resolve backend, output dtype and cached blocks for one 2-D GEMM.
 
     ``p_eff`` is the residue count the block search budgets for: the
@@ -298,6 +305,11 @@ def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
     (backends whose Scheme-II kernels run a single live accumulator —
     the TPU Mosaic lowering — re-select internally with p=1 and ignore
     the plan's blocks).
+
+    ``probe=True`` additionally runs the guard's cheap input sentinel
+    (finite masks + exponent-spread estimate, O(MK + KN) elementwise)
+    and attaches it as ``GemmPlan.probe`` — the pre-dispatch leg of the
+    ``+guard`` pipeline (see repro.guard).
     """
     m, k = a.shape
     _, n = b.shape
@@ -320,8 +332,12 @@ def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
                            out_bytes=jnp.dtype(out_dtype).itemsize,
                            backend=name, prologue_a=pro, prologue_b=pro,
                            scheme=scheme, mesh_shape=mesh_shape)
+    sentinel_probe = None
+    if probe:
+        from repro.guard import sentinel as _sentinel
+        sentinel_probe = _sentinel.probe_operands(a, b)
     return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks, name, scheme,
-                    mesh_shape)
+                    mesh_shape, sentinel_probe)
 
 
 def _replan_padded(plan: GemmPlan) -> GemmPlan:
@@ -402,6 +418,17 @@ def emulated_matmul(a: jax.Array, b, *,
     ``repro.parallel.shard_gemm``.
     """
     cfg = _resolve_cfg(cfg, scheme, precision)
+    if (cfg.guard is not None and cfg.scheme != "native"
+            and a.ndim == 2 and (_is_prepared(b) or b.ndim == 2)
+            and not _is_complex(a)
+            and not (not _is_prepared(b) and _is_complex(b))):
+        # The guard pipeline (sanitize -> run -> verify -> escalate,
+        # repro.guard.ladder) wraps this entry point and re-enters it
+        # with the guard stripped for every ladder rung.  Invalid shapes
+        # fall through so the usual refusals fire first.
+        from repro import guard
+        return guard.guarded_matmul(a, b, cfg, out_dtype=out_dtype,
+                                    backend=backend, mesh_shape=mesh_shape)
     if _is_prepared(b):
         from repro.kernels import prepared
         if cfg.scheme == "native":

@@ -87,6 +87,21 @@ class PreparedOperand:
         return scheme1.deinterleave_k(self.slices, self.p, "b",
                                       self.blocks.bk)
 
+    def reconstruct(self) -> jax.Array:
+        """The dense (k, n) float32 weight the slices represent.
+
+        Exact up to the decomposition residual (scale * 2^(-beta*p)
+        elementwise) — what the guard's a posteriori verifier
+        (repro.guard.verify) compares emulated results against when the
+        original float weight is no longer around.
+        """
+        st = self.stacked().astype(jnp.float32)
+        w = jnp.zeros(st.shape[1:], jnp.float32)
+        for i in range(self.p):
+            # Python 2.0**e is exact; see scheme1.shift_reduce.
+            w = w + jnp.float32(2.0 ** (-self.beta * (i + 1))) * st[i]
+        return (w * self.scale.astype(jnp.float32))[:self.k, :self.n]
+
     def tree_flatten(self):
         return ((self.slices, self.scale, self.twin),
                 (self.p, self.beta, self.blocks, self.layout,
@@ -152,6 +167,20 @@ class PreparedResidues:
     @property
     def padded_n(self) -> int:
         return self.residues.shape[2]
+
+    def reconstruct(self) -> jax.Array:
+        """The dense (k, n) float32 weight the residues represent.
+
+        CRT-reconstructs the integerized weight from the balanced
+        residue stack and undoes the power-of-two scale — exact up to
+        the integerization truncation (1/scale elementwise), for the
+        guard's a posteriori verifier (repro.guard.verify).
+        """
+        from repro.core import scheme2  # lazy: avoid import-order knots
+        res = scheme2.modular_reduce(self.residues.astype(jnp.int32),
+                                     self.moduli)
+        w_int = scheme2.crt_reconstruct(res, self.moduli, jnp.float32)
+        return (w_int / self.scale.astype(jnp.float32))[:self.k, :self.n]
 
     def tree_flatten(self):
         return ((self.residues, self.scale, self.twin),

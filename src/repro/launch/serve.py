@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import api, configs
+from repro import api, configs, guard
+from repro.core.precision import EmulationAccuracyError
 from repro.kernels import dispatch
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
@@ -26,7 +27,8 @@ from repro.models.common import GemmPolicy
 
 class ServeEngine:
     def __init__(self, arch, mesh, max_seq: int, policy=None,
-                 params=None, seed: int = 0, prepare: bool = False):
+                 params=None, seed: int = 0, prepare: bool = False,
+                 guard_retries: int = 1, guard_backoff: float = 0.25):
         self.arch = arch
         self.mcfg = arch.model
         self.mesh = mesh
@@ -50,10 +52,16 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, inputs: M.forward_prefill(
                 p, self.mcfg, inputs, self.max_seq, self.policy))
+        # Guard consumption (docs/robustness.md): ``last_guard`` holds the
+        # per-batch delta of the process-wide guard counters; a strict
+        # accuracy trip retries the whole batch with backoff before
+        # surfacing (the request-level analogue of the trainer's
+        # step retry).
+        self.guard_retries = guard_retries
+        self.guard_backoff = guard_backoff
+        self.last_guard: dict[str, int] = {}
 
-    def generate(self, prompts: np.ndarray, n_tokens: int,
-                 greedy: bool = True):
-        """prompts: (B, S) int32. Returns (B, n_tokens) generated ids."""
+    def _generate_once(self, prompts: np.ndarray, n_tokens: int):
         b, s = prompts.shape
         logits, cache = self._prefill(self.params,
                                       {"tokens": jnp.asarray(prompts)})
@@ -65,6 +73,31 @@ class ServeEngine:
             tok = jnp.argmax(logits[:, -1:, :self.mcfg.vocab], axis=-1)
             out.append(tok)
         return np.asarray(jnp.concatenate(out, axis=1))
+
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 greedy: bool = True):
+        """prompts: (B, S) int32. Returns (B, n_tokens) generated ids."""
+        before = guard.stats()
+        attempt = 0
+        while True:
+            try:
+                toks = self._generate_once(prompts, n_tokens)
+                break
+            except EmulationAccuracyError as e:
+                if attempt >= self.guard_retries:
+                    raise
+                attempt += 1
+                pause = self.guard_backoff * attempt
+                print(f"[serve] guard trip (retry {attempt}/"
+                      f"{self.guard_retries} after {pause:.2f}s): {e}")
+                time.sleep(pause)
+        after = guard.stats()
+        self.last_guard = {
+            f: getattr(after, f) - getattr(before, f)
+            for f in ("calls", "trips", "escalations", "recoveries",
+                      "native_fallbacks", "masked")}
+        self.last_guard["retries"] = attempt
+        return toks
 
 
 def main(argv=None):
@@ -101,6 +134,8 @@ def main(argv=None):
         dt = time.time() - t0
     print(f"[serve] {args.requests} requests x {args.gen} tokens in "
           f"{dt:.2f}s ({args.requests * args.gen / dt:.1f} tok/s)")
+    if eng.last_guard.get("calls"):
+        print("[serve] guard:", eng.last_guard)
     print("[serve] sample:", toks[0][:12].tolist())
     return toks
 

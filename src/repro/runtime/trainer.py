@@ -7,6 +7,11 @@
 * straggler detection: per-step wall-time EMA + z-score; slow steps are
   logged and counted (the hook where a real cluster would re-slice or
   evict the slow host);
+* guard consumption: when emulated GEMMs run with a ``+guard`` spec
+  (docs/robustness.md), ``GuardMonitor`` folds the per-step delta of
+  ``repro.guard.stats()`` into the metrics log, and a strict-mode
+  accuracy trip (``EmulationAccuracyError``) becomes a step-level
+  retry-with-backoff instead of a run abort;
 * preemption: SIGTERM triggers a final synchronous checkpoint before
   exit (the TPU maintenance-event pattern).
 """
@@ -20,6 +25,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.core.precision import EmulationAccuracyError
 
 
 class FailureInjector:
@@ -55,18 +61,49 @@ class StragglerMonitor:
         return False
 
 
+class GuardMonitor:
+    """Per-step deltas of the process-wide ``repro.guard`` counters.
+
+    ``observe(step)`` is called after the step's metrics sync (the
+    ``float(v)`` conversion), so every eager guard event of the step has
+    been recorded and every traced one has had its debug callback flushed.
+    Steps whose delta shows a trip are collected in ``trip_steps`` — the
+    hook a real cluster would alarm on.
+    """
+
+    def __init__(self):
+        from repro import guard  # cheap: the guard package is pallas-free
+        self._stats = guard.stats
+        self._last = self._stats()
+        self.trip_steps: list[tuple[int, int]] = []
+
+    def observe(self, step: int) -> dict[str, int]:
+        now = self._stats()
+        delta = {f: getattr(now, f) - getattr(self._last, f)
+                 for f in ("calls", "trips", "escalations", "recoveries",
+                           "native_fallbacks", "masked")}
+        self._last = now
+        if delta["trips"]:
+            self.trip_steps.append((step, delta["trips"]))
+        return delta
+
+
 class Trainer:
     def __init__(self, *, step_fn, init_state_fn, batch_iterator,
                  ckpt_dir: str, state_shardings=None,
                  ckpt_every: int = 50, keep: int = 3,
                  failure: FailureInjector | None = None,
-                 log_every: int = 10, handle_sigterm: bool = False):
+                 log_every: int = 10, handle_sigterm: bool = False,
+                 guard_retries: int = 2, guard_backoff: float = 0.25):
         self.step_fn = step_fn
         self.batch_iterator = batch_iterator
         self.ckpt = CheckpointManager(ckpt_dir, keep=keep)
         self.ckpt_every = ckpt_every
         self.failure = failure or FailureInjector()
         self.monitor = StragglerMonitor()
+        self.guard_monitor = GuardMonitor()
+        self.guard_retries = guard_retries
+        self.guard_backoff = guard_backoff
         self.log_every = log_every
         self.metrics_log: list[dict] = []
         self._preempted = False
@@ -98,11 +135,34 @@ class Trainer:
             data_step, batch = next(it)
             t0 = time.time()
             self.failure.check(step)
-            self.state, metrics = self.step_fn(self.state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            # A strict guard (`+guard:strict`, docs/robustness.md) raises
+            # EmulationAccuracyError when the escalation ladder runs out.
+            # The step function is pure (state in, state out), so the
+            # step is retried with backoff before giving up; self.state
+            # only advances once metrics have synced cleanly.
+            attempt = 0
+            while True:
+                try:
+                    new_state, metrics = self.step_fn(self.state, batch)
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    break
+                except EmulationAccuracyError as e:
+                    if attempt >= self.guard_retries:
+                        raise
+                    attempt += 1
+                    pause = self.guard_backoff * attempt
+                    print(f"[trainer] guard trip at step {step} "
+                          f"(retry {attempt}/{self.guard_retries} "
+                          f"after {pause:.2f}s): {e}")
+                    time.sleep(pause)
+            self.state = new_state
             dt = time.time() - t0
             slow = self.monitor.observe(step, dt)
-            metrics.update(step=step, seconds=dt)
+            metrics.update(step=step, seconds=dt,
+                           guard_retries=attempt,
+                           **{f"guard_{k}": v for k, v in
+                              self.guard_monitor.observe(step).items()
+                              if k in ("trips", "native_fallbacks")})
             self.metrics_log.append(metrics)
             if slow:
                 print(f"[trainer] straggler step {step}: {dt:.3f}s")

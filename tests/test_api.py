@@ -594,6 +594,7 @@ def test_batched_mismatch_names_shapes(make_matrix):
 
 EXPECTED_ALL = [
     "EMULATION_ENV_VAR",
+    "EmulationAccuracyError",
     "EmulationConfig",
     "GemmPolicy",
     "NATIVE",
@@ -605,10 +606,12 @@ EXPECTED_ALL = [
     "emulated_matmul",
     "emulated_matmul_batched",
     "emulation",
+    "guard",
     "plan_precision",
     "precision",
     "prepare_rhs",
     "resolve_config",
+    "verify_gemm",
 ]
 
 # (name, kind, has_default) per parameter — annotation-rendering-agnostic.

@@ -1,0 +1,478 @@
+"""repro.guard: sentinels, a posteriori verification, the escalation
+ladder, fault injection, and the denormal/scale regression suite."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro import guard
+from repro.core import scheme1, scheme2
+from repro.core.precision import EmulationAccuracyError, EmulationConfig
+from repro.kernels import dispatch
+from conftest import conditioned
+
+DN = (((1,), (0,)), ((), ()))
+
+
+def _int_operands(m=32, k=64, n=24, seed=0):
+    """Small nonzero integers: exactly emulated at any p, so recovery is
+    checkable as bit-identity, and no slice/residue plane annihilates an
+    injected fault by multiplying it with zeros."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 9, (m, k)) * rng.choice([-1.0, 1.0], (m, k))
+    b = rng.integers(1, 9, (k, n)) * rng.choice([-1.0, 1.0], (k, n))
+    return jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Spec grammar: the +guard / +guard:strict suffixes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec, mode", [
+    ("ozaki1-p4+guard", "on"),
+    ("ozaki1-p4+guard:strict", "strict"),
+    ("ozaki2-m6@gpu+guard", "on"),
+    ("bits=40:k1024+guard:strict", "strict"),
+])
+def test_guard_spec_roundtrip(spec, mode):
+    cfg = EmulationConfig.parse(spec)
+    assert cfg.guard == mode
+    assert EmulationConfig.parse(cfg.to_spec()) == cfg
+
+
+def test_guard_requires_emulation_scheme():
+    with pytest.raises(ValueError, match="guard"):
+        EmulationConfig.parse("native+guard")
+
+
+def test_guard_spec_through_api_resolver():
+    cfg = repro.precision("ozaki1-p4+guard:strict")
+    assert cfg.guard == "strict" and cfg.scheme == "ozaki1"
+
+
+# ---------------------------------------------------------------------------
+# Satellite: power-of-two scale handling on denormal / zero / extreme rows.
+# ---------------------------------------------------------------------------
+
+
+def test_exact_pow2_is_exact_across_the_normal_range():
+    exps = jnp.arange(-126, 128)
+    got = scheme1.exact_pow2(exps, jnp.float32)
+    want = np.asarray([2.0 ** e for e in range(-126, 128)], np.float32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_exact_pow2_clamps_and_saturates():
+    got = scheme1.exact_pow2(jnp.asarray([-200, -127, 128, 300]),
+                             jnp.float32)
+    assert float(got[0]) == 2.0 ** -126  # clamped to smallest normal
+    assert float(got[1]) == 2.0 ** -126
+    assert np.isposinf(float(got[2])) and np.isposinf(float(got[3]))
+
+
+def test_exact_pow2_large_exponents_bit_exact():
+    # jnp.exp2 lands ulp off up here eagerly; the bit-built scale must not.
+    for e in (100, 120, 126, 127):
+        assert float(scheme1.exact_pow2(jnp.asarray(e), jnp.float32)) \
+            == 2.0 ** e
+
+
+@pytest.mark.parametrize("scheme", ["ozaki1", "ozaki2"])
+def test_all_zero_rows_are_exact(scheme):
+    a = np.zeros((3, 16), np.float32)
+    a[1] = np.arange(16)
+    b = np.asarray(np.random.default_rng(0).integers(-3, 4, (16, 5)),
+                   np.float32)
+    cfg = EmulationConfig(scheme=scheme, p=4 if scheme == "ozaki1" else 6)
+    mod = scheme1 if scheme == "ozaki1" else scheme2
+    out = np.asarray(mod.matmul(jnp.asarray(a), jnp.asarray(b), cfg,
+                                jnp.float32))
+    np.testing.assert_array_equal(out[0], 0.0)
+    np.testing.assert_array_equal(out[2], 0.0)
+    np.testing.assert_allclose(out[1], a[1] @ b, rtol=1e-6)
+
+
+@pytest.mark.parametrize("scheme", ["ozaki1", "ozaki2"])
+def test_subnormal_only_rows_match_native(scheme):
+    """Denormal regression: subnormal-only rows used to round the
+    power-of-two scale itself to zero (scheme1: 0 scale -> 0/0 NaN rows;
+    scheme2: inf scale -> int-wraparound garbage).  The fixed scales are
+    finite and exactly invertible, so the result now matches the native
+    dot bit for bit — on this platform XLA:CPU flushes subnormal inputs
+    to zero (DAZ), and the emulated path inherits exactly that semantic
+    instead of manufacturing NaNs."""
+    a = np.array([[2.0 ** -149, 2.0 ** -140, 0.0, 2.0 ** -130],
+                  [0.0, 2.0 ** -127, 2.0 ** -135, 2.0 ** -149]], np.float32)
+    b = np.asarray(np.random.default_rng(1).integers(-3, 4, (4, 3)),
+                   np.float32)
+    cfg = EmulationConfig(scheme=scheme, p=4 if scheme == "ozaki1" else 6)
+    mod = scheme1 if scheme == "ozaki1" else scheme2
+    out = np.asarray(mod.matmul(jnp.asarray(a), jnp.asarray(b), cfg,
+                                jnp.float32))
+    native = np.asarray(jnp.asarray(a) @ jnp.asarray(b))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_array_equal(out, native)
+
+
+def test_subnormal_row_scale_is_finite_and_invertible():
+    a = jnp.asarray([[2.0 ** -149, 2.0 ** -130]], jnp.float32)
+    mu = scheme1._pow2_row_scale(a, axis=1)
+    assert np.isfinite(float(mu[0, 0])) and float(mu[0, 0]) > 0
+    assert np.isfinite(float(1.0 / mu[0, 0]))
+
+
+def test_scheme2_integer_scale_subnormal_rows_flush_gracefully():
+    a = jnp.asarray([[2.0 ** -149, 2.0 ** -140]], jnp.float32)
+    a_int, mu = scheme2.integerize(a, axis=1, budget_bits=24)
+    assert np.isfinite(float(mu[0, 0]))
+    np.testing.assert_array_equal(np.asarray(a_int), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: check_exact_k raises the dedicated error, naming remediation.
+# ---------------------------------------------------------------------------
+
+
+def test_check_exact_k_remediation_message():
+    with pytest.raises(EmulationAccuracyError) as ei:
+        scheme2.check_exact_k(200_000, (256, 255))
+    msg = str(ei.value)
+    assert "bits=" in msg and "shard" in msg and "131071" in msg
+    assert issubclass(EmulationAccuracyError, ValueError)  # compat
+
+
+# ---------------------------------------------------------------------------
+# Special-value semantics: NaN/Inf parity with the native dot.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["tpu", "gpu", "xla"])
+@pytest.mark.parametrize("scheme", ["ozaki1-p4", "ozaki2-m6"])
+def test_nan_inf_parity_fused(backend, scheme, rng):
+    a = conditioned(rng, (16, 32))
+    b = conditioned(rng, (32, 12))
+    a[3, 5], a[7, 0] = np.nan, np.inf
+    b[2, 4] = -np.inf
+    out = np.asarray(dispatch.emulated_matmul(
+        jnp.asarray(a), jnp.asarray(b), cfg=f"{scheme}@{backend}+guard"))
+    native = np.asarray(jnp.asarray(a) @ jnp.asarray(b))
+    # Exactly the rows/cols a non-finite entry contaminates are NaN...
+    assert np.all(np.isnan(out[3])) and np.all(np.isnan(out[7]))
+    assert np.all(np.isnan(out[:, 4]))
+    # ...they cover everything native reports non-finite...
+    assert np.all(np.isnan(out[~np.isfinite(native)]))
+    # ...and nothing else: clean lanes are finite and bit-identical to
+    # the unguarded emulated product of the sanitized operands.
+    clean = np.ones_like(out, bool)
+    clean[3], clean[7], clean[:, 4] = False, False, False
+    assert np.all(np.isfinite(out[clean]))
+    san_a = np.where(np.isfinite(a), a, 0.0)
+    san_b = np.where(np.isfinite(b), b, 0.0)
+    ref = np.asarray(dispatch.emulated_matmul(
+        jnp.asarray(san_a), jnp.asarray(san_b), cfg=f"{scheme}@{backend}"))
+    np.testing.assert_array_equal(out[clean], ref[clean])
+
+
+@pytest.mark.parametrize("scheme", ["ozaki1-p4", "ozaki2-m6"])
+def test_nan_inf_parity_prepared_lhs(scheme, rng):
+    """Prepared weights are decomposed clean; the sentinel masking must
+    still cover non-finite *activations* (the realistic serving case)."""
+    a = conditioned(rng, (16, 32))
+    a[5, 1] = np.nan
+    b = conditioned(rng, (32, 12))
+    prep = repro.prepare_rhs(jnp.asarray(b), repro.precision(scheme))
+    out = np.asarray(repro.dot_general(jnp.asarray(a), prep, DN,
+                                       precision=f"{scheme}+guard"))
+    assert np.all(np.isnan(out[5]))
+    clean = np.delete(out, 5, axis=0)
+    assert np.all(np.isfinite(clean))
+    san_a = np.where(np.isfinite(a), a, 0.0)
+    ref = np.delete(np.asarray(repro.dot_general(
+        jnp.asarray(san_a), prep, DN, precision=scheme)), 5, axis=0)
+    np.testing.assert_array_equal(clean, ref)
+
+
+def test_guarded_clean_run_counts_and_is_bit_identical():
+    a, b = _int_operands()
+    guard.stats_clear()
+    ref = dispatch.emulated_matmul(a, b, cfg="ozaki1-p4")
+    out = dispatch.emulated_matmul(a, b, cfg="ozaki1-p4+guard")
+    s = guard.stats()
+    assert s.calls == 1 and s.verified == 1 and s.trips == 0
+    assert jnp.array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Wide exponent spread: the sentinel flags operands whose dynamic range
+# exceeds the planned precision budget.
+# ---------------------------------------------------------------------------
+
+
+def test_wide_spread_warns_against_precision_budget(rng):
+    a = conditioned(rng, (16, 32)).astype(np.float64)
+    a[0, 0], a[1, 1] = 1e30, 1e-30  # ~200-bit spread vs a ~27-bit budget
+    b = conditioned(rng, (32, 8)).astype(np.float64)
+    dispatch.fallback_warnings_clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        dispatch.emulated_matmul(jnp.asarray(a, jnp.float32),
+                                 jnp.asarray(b, jnp.float32),
+                                 cfg="ozaki1-p4+guard")
+    spread_msgs = [str(w.message) for w in rec
+                   if "exponent spread" in str(w.message)]
+    assert spread_msgs, [str(w.message) for w in rec]
+    assert "bits" in spread_msgs[0]
+
+
+def test_narrow_spread_does_not_warn(rng):
+    a, b = _int_operands()
+    dispatch.fallback_warnings_clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        dispatch.emulated_matmul(a, b, cfg="ozaki1-p4+guard")
+    assert not [w for w in rec if "exponent spread" in str(w.message)]
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: the verifier catches what it claims to catch, and the
+# ladder recovers.  @xla pins the reference backend, whose decomposition
+# runs through the hooked scheme1.split / scheme2.balanced_residues.
+# ---------------------------------------------------------------------------
+
+
+@given(bit=st.integers(4, 6), operand=st.sampled_from(["a", "b"]),
+       kind=st.sampled_from(["bitflip_slice", "zero_modulus"]))
+@settings(max_examples=8, deadline=None)
+def test_injected_slice_fault_caught_and_recovered_scheme1(bit, operand,
+                                                           kind):
+    # Plane 0 (the top mantissa slice): a high-bit flip there perturbs
+    # the effective operand by ~2^(bit-beta) of its column scale, well
+    # above the verifier's analytic tolerance at these shapes.  Faults
+    # in the *last* plane at low bits are of the order of the
+    # decomposition residual itself and are tolerated by construction
+    # (see test_injection_last_plane_lsb_below_bound_is_tolerated).
+    a, b = _int_operands(m=16, k=16, n=8)
+    guard.stats_clear()
+    ref = dispatch.emulated_matmul(a, b, cfg="ozaki1-p4@xla")
+    with guard.inject(kind, count=1, bit=bit, plane=0,
+                      operand=operand) as fault:
+        out = dispatch.emulated_matmul(a, b, cfg="ozaki1-p4@xla+guard")
+    s = guard.stats()
+    assert fault.fired == 1
+    assert s.trips == 1 and s.recoveries == 1
+    assert jnp.array_equal(out, ref)
+
+
+@given(plane=st.integers(1, 5),
+       kind=st.sampled_from(["bitflip_slice", "zero_modulus"]))
+@settings(max_examples=6, deadline=None)
+def test_injected_residue_fault_caught_scheme2(plane, kind):
+    # plane >= 1: plane 0's modulus is 256 and integer operands scaled by
+    # a power of two have identically-zero residues there, so corrupting
+    # it cannot change the product (degenerate by construction).
+    a, b = _int_operands(seed=3)
+    guard.stats_clear()
+    ref = dispatch.emulated_matmul(a, b, cfg="ozaki2-m6@xla")
+    with guard.inject(kind, count=1, plane=plane) as fault:
+        out = dispatch.emulated_matmul(a, b, cfg="ozaki2-m6@xla+guard")
+    s = guard.stats()
+    assert fault.fired == 1
+    assert s.trips == 1 and s.recoveries == 1
+    assert jnp.array_equal(out, ref)
+
+
+def test_injection_last_plane_lsb_below_bound_is_tolerated():
+    """A last-plane LSB flip is of the order of the decomposition's own
+    residual bound — the verifier is *specified* not to trip on it (the
+    tolerance is the analytic bound, not zero)."""
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(conditioned(rng, (32, 64)))
+    b = jnp.asarray(conditioned(rng, (64, 24)))
+    guard.stats_clear()
+    with guard.inject("bitflip_slice", count=1, bit=0, plane=3) as fault:
+        dispatch.emulated_matmul(a, b, cfg="ozaki1-p4@xla+guard")
+    assert fault.fired == 1
+    assert guard.stats().trips == 0
+
+
+def test_inject_validates_arguments():
+    with pytest.raises(ValueError):
+        with guard.inject("not_a_kind"):
+            pass
+    with pytest.raises(ValueError):
+        with guard.inject("bitflip_slice", bit=9):
+            pass
+    with pytest.raises(ValueError):
+        with guard.inject("bitflip_slice", operand="c"):
+            pass
+
+
+def test_strict_exhausted_ladder_raises():
+    a, b = _int_operands(seed=5)
+    guard.stats_clear()
+    with pytest.raises(EmulationAccuracyError, match="strict"):
+        with guard.inject("zero_modulus", count=99, plane=1):
+            dispatch.emulated_matmul(a, b, cfg="ozaki2-m6@xla+guard:strict")
+    s = guard.stats()
+    assert s.trips == 1 and s.escalations >= 1 and s.recoveries == 0
+
+
+def test_on_mode_exhausted_ladder_falls_back_to_native():
+    a, b = _int_operands(seed=6)
+    guard.stats_clear()
+    dispatch.fallback_warnings_clear()
+    with pytest.warns(RuntimeWarning, match="native"):
+        with guard.inject("zero_modulus", count=99, plane=1):
+            out = dispatch.emulated_matmul(a, b, cfg="ozaki2-m6@xla+guard")
+    s = guard.stats()
+    assert s.native_fallbacks == 1
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a) @ np.asarray(b),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# verify_gemm directly.
+# ---------------------------------------------------------------------------
+
+
+def test_verify_gemm_passes_good_and_catches_corruption(rng):
+    a = conditioned(rng, (32, 48))
+    b = conditioned(rng, (48, 16))
+    c = np.asarray(jnp.asarray(a) @ jnp.asarray(b))
+    assert guard.verify_gemm(a, b, c, cfg="ozaki1-p4")
+    bad = c.copy()
+    bad[3, 3] += 0.1 * np.abs(c).max()
+    res = guard.verify_gemm(a, b, bad, cfg="ozaki1-p4")
+    assert not res and float(res.err) > res.tol
+
+
+def test_verify_gemm_accepts_prepared_rhs(rng):
+    a = conditioned(rng, (16, 32))
+    b = conditioned(rng, (32, 8))
+    prep = repro.prepare_rhs(jnp.asarray(b), repro.precision("ozaki1-p6"))
+    c = np.asarray(jnp.asarray(a) @ jnp.asarray(b))
+    assert guard.verify_gemm(a, prep, c, cfg="ozaki1-p6")
+
+
+def test_verify_tolerance_tracks_plan_precision_bound():
+    # More precision bits -> tighter trip threshold, monotonically.
+    from repro.guard.verify import tolerance
+    tols = [tolerance(bits, 64, 64, 64) for bits in (14, 27, 40)]
+    assert tols[0] > tols[1] > tols[2]
+    # The 2^(1-bits) term is exactly the plan_precision residual model.
+    assert tolerance(20, 64, 64, 64, tol_factor=1.0) \
+        == pytest.approx(2.0 ** -19 + 128 * np.finfo(np.float32).eps)
+
+
+# ---------------------------------------------------------------------------
+# Traced path: sanitize + verify + mask, counted via debug.callback.
+# ---------------------------------------------------------------------------
+
+
+def test_traced_guard_masks_and_counts(rng):
+    a = conditioned(rng, (16, 32))
+    a[4, 0] = np.inf
+    b = conditioned(rng, (32, 8))
+    guard.stats_clear()
+    f = jax.jit(lambda x, y: repro.dot_general(
+        x, y, DN, precision="ozaki1-p4+guard"))
+    out = f(jnp.asarray(a), jnp.asarray(b))
+    out.block_until_ready()
+    s = guard.stats()
+    assert s.calls == 1 and s.verified == 1 and s.masked == 1
+    out = np.asarray(out)
+    assert np.all(np.isnan(out[4])) and np.all(np.isfinite(out[:4]))
+
+
+def test_guarded_grad_runs_and_is_finite(rng):
+    a = jnp.asarray(conditioned(rng, (8, 16)))
+    b = jnp.asarray(conditioned(rng, (16, 4)))
+    g = jax.grad(lambda x: repro.dot_general(
+        x, b, DN, precision="ozaki1-p4+guard").sum())(a)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_guard_skips_prepared_vjp_shortcut():
+    # cache_weights + guard: the forward must NOT pin a prepared stack
+    # (the ladder may re-plan p); the guarded engine handles it instead.
+    from repro.core import emulated
+    cfg = EmulationConfig.parse("ozaki1-p4+cached+guard")
+    a, b = _int_operands(m=8, k=16, n=4)
+    assert emulated._cacheable(a, b, cfg)  # cacheable, but...
+    guard.stats_clear()
+    out, _ = emulated._fwd(a, b, cfg)
+    assert guard.stats().calls == 1  # ...went through the guarded engine
+    ref = dispatch.emulated_matmul(a, b, cfg="ozaki1-p4")
+    assert jnp.array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Runtime consumption: the trainer retries strict trips with backoff and
+# folds guard deltas into its metrics.
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_retries_strict_guard_trips(tmp_path):
+    from repro.runtime.trainer import Trainer
+
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise EmulationAccuracyError("synthetic strict trip")
+        return {"w": state["w"] + 1.0}, {"loss": jnp.float32(0.0)}
+
+    t = Trainer(step_fn=step_fn, init_state_fn=lambda: {"w": jnp.zeros(2)},
+                batch_iterator=((i, {}) for i in range(10)),
+                ckpt_dir=str(tmp_path), guard_backoff=0.0)
+    log = t.run(2)
+    t.close()
+    assert calls["n"] == 3  # step 0 tripped once, retried; step 1 clean
+    assert log[0]["guard_retries"] == 1 and log[1]["guard_retries"] == 0
+    assert "guard_trips" in log[0]
+
+
+def test_trainer_reraises_when_retries_exhausted(tmp_path):
+    from repro.runtime.trainer import Trainer
+
+    def step_fn(state, batch):
+        raise EmulationAccuracyError("always trips")
+
+    t = Trainer(step_fn=step_fn, init_state_fn=lambda: {"w": jnp.zeros(2)},
+                batch_iterator=((i, {}) for i in range(10)),
+                ckpt_dir=str(tmp_path), guard_retries=1, guard_backoff=0.0)
+    with pytest.raises(EmulationAccuracyError):
+        t.run(1)
+    t.close()
+
+
+def test_guard_monitor_observes_step_deltas():
+    from repro.runtime.trainer import GuardMonitor
+    mon = GuardMonitor()
+    a, b = _int_operands(m=8, k=16, n=4)
+    dispatch.emulated_matmul(a, b, cfg="ozaki1-p4+guard")
+    delta = mon.observe(step=0)
+    assert delta["calls"] == 1 and delta["trips"] == 0
+    assert mon.observe(step=1)["calls"] == 0  # delta, not cumulative
+
+
+# ---------------------------------------------------------------------------
+# Stats bookkeeping.
+# ---------------------------------------------------------------------------
+
+
+def test_stats_clear_resets_all_counters():
+    a, b = _int_operands(m=8, k=16, n=4)
+    dispatch.emulated_matmul(a, b, cfg="ozaki1-p4+guard")
+    assert guard.stats().calls >= 1
+    guard.stats_clear()
+    s = guard.stats()
+    assert s == guard.GuardStats()
+    assert not s.tripped

@@ -15,9 +15,11 @@ def test_split_reconstructs_to_residual_bound(make_matrix):
     a = jnp.asarray(make_matrix((64, 96)))
     p, beta = 5, 7
     slices, scale = scheme1.split(a, p, beta, axis=1)
-    rec = sum(2.0 ** (-beta * (i + 1)) * slices[i].astype(jnp.float64)
-              for i in range(p)) * scale
-    resid = np.abs(np.asarray(rec - a))
+    # reconstruct on host in true float64 (device f64 is unavailable —
+    # and warns — without x64 mode)
+    rec = sum(2.0 ** (-beta * (i + 1)) * np.asarray(slices[i], np.float64)
+              for i in range(p)) * np.asarray(scale, np.float64)
+    resid = np.abs(rec - np.asarray(a, np.float64))
     bound = np.asarray(scale) * 2.0 ** (-beta * p)
     assert (resid <= bound + 1e-30).all()
 

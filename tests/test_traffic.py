@@ -149,3 +149,31 @@ def test_projected_throughput_zgemm_baseline():
                                         scheme="ozaki2", backend="tpu")
     assert all("baseline_speedup" not in c
                for c in tpu["hardware"].values())
+
+
+def test_guard_verify_model_formulas():
+    """The a posteriori verifier's fused cost is vector-only: r probe
+    round-trips over the M/K/N edges, never a matrix re-read."""
+    s = GemmShape(4096, 4096, 4096)
+    r = 2
+    assert traffic.guard_verify_bytes_fused(s, r) == \
+        4 * r * (s.m + 2 * s.k + 2 * s.n)
+    assert traffic.guard_verify_flops(s, r) == \
+        2 * r * (s.k * s.n + s.m * s.k + s.m * s.n)
+    # Unfused verification re-streams both operands (GEMV reads) plus
+    # the output once -- orders of magnitude above the fused path.
+    assert traffic.guard_verify_bytes_unfused(s, r) > \
+        100 * traffic.guard_verify_bytes_fused(s, r)
+
+
+@pytest.mark.parametrize("scheme,p", [("ozaki1", 4), ("ozaki2", 6)])
+def test_guard_overhead_within_ceiling(scheme, p):
+    """Modeled guard overhead stays under the 5% acceptance ceiling on
+    the benchmarked shapes (bench_traffic.py gates the same bound)."""
+    for m, k, n in [(4096, 4096, 4096), (8192, 8192, 8192),
+                    (2048, 8192, 2048)]:
+        cell = traffic.guard_overhead_model(GemmShape(m, n, k), p,
+                                            scheme=scheme)
+        assert 0.0 < cell["time_ratio"] <= 0.05
+        assert 0.0 < cell["bytes_ratio"] <= 0.05
+        assert cell["verify_bytes_fused"] < cell["verify_bytes_unfused"]
