@@ -65,6 +65,16 @@ GUARD_SHAPES = SHAPES + SCHEME2_SHAPES[1:]
 GUARD_PROBES = 2
 GUARD_OVERHEAD_CEILING = 0.05
 
+# Telemetry cells: modeled observability overhead of an instrumented
+# fused GEMM (traffic.telemetry_overhead_model, docs/observability.md).
+# The per-call debug-callback payload is tens of bytes, so the gate is
+# tighter than the guard's: <= 2% of the GEMM's bytes AND roofline time
+# on every benchmarked shape.  The cells also assert the disabled-mode
+# contract: with telemetry off, jaxprs carry no debug callbacks and the
+# emulated outputs are bit-identical to the enabled run.
+TELEMETRY_SHAPES = GUARD_SHAPES
+TELEMETRY_OVERHEAD_CEILING = 0.02
+
 # Shard_map'ed cells: per-shard fused decomposition bytes next to the
 # collective bytes each mesh layout adds (repro.parallel.shard_gemm
 # partitioning; analytic models in traffic.sharded_gemm_traffic).
@@ -234,6 +244,51 @@ def run_guard_cell(m: int, k: int, n: int) -> dict:
     return cell
 
 
+def run_telemetry_cell(m: int, k: int, n: int) -> dict:
+    """Modeled telemetry overhead for both schemes on one shape."""
+    s = traffic.GemmShape(m, n, k)
+    cell = {"m": m, "k": k, "n": n, "schemes": {}}
+    for scheme, p in (("ozaki1", 4), ("ozaki2", 6)):
+        cell["schemes"][scheme] = dict(
+            traffic.telemetry_overhead_model(s, p, scheme), p=p)
+    return cell
+
+
+def telemetry_disabled_checks() -> dict:
+    """Disabled-mode contract of repro.telemetry: no debug callbacks in
+    the jaxpr, and bit-identical outputs enabled vs disabled."""
+    from repro import telemetry
+    from repro.kernels import dispatch
+    rng = np.random.default_rng(4242)
+    a = jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((128, 128)).astype(np.float32))
+    cfg = EmulationConfig(scheme="ozaki1", p=3)
+
+    # A fresh closure per trace: JAX's tracing cache keys on function
+    # identity, so re-tracing one ``f`` after flipping the telemetry
+    # flag would silently replay the first jaxpr.
+    def make_f():
+        def f(a, b):
+            return dispatch.emulated_matmul(a, b, cfg=cfg)
+        return f
+
+    was = telemetry.enabled()
+    try:
+        telemetry.disable()
+        jaxpr_off = str(jax.make_jaxpr(make_f())(a, b))
+        out_off = make_f()(a, b)
+        telemetry.enable()
+        jaxpr_on = str(jax.make_jaxpr(make_f())(a, b))
+        out_on = make_f()(a, b)
+    finally:
+        (telemetry.enable if was else telemetry.disable)()
+    return {
+        "callback_free_disabled": "debug_callback" not in jaxpr_off,
+        "callback_present_enabled": "debug_callback" in jaxpr_on,
+        "bit_identical": bool(jnp.array_equal(out_off, out_on)),
+    }
+
+
 def run_sharded_cell(m: int, k: int, n: int, p: int, layout) -> dict:
     """Per-shard fused bytes + collective bytes of one shard_map'ed GEMM
     on one mesh layout, under both tensor-parallel partitionings."""
@@ -324,7 +379,30 @@ def check_baseline(report: dict, baseline: dict) -> list[str]:
                         f"guard {key} {scheme}: verify_bytes_fused "
                         f"{cur['verify_bytes_fused']} > baseline "
                         f"{old['verify_bytes_fused']}")
+    base_t = {(c["m"], c["k"], c["n"]): c
+              for c in baseline.get("telemetry_cells", ())}
+    for c in report.get("telemetry_cells", ()):
+        key = (c["m"], c["k"], c["n"])
+        ref = base_t.get(key)
+        for scheme, cur in c["schemes"].items():
+            for field in ("bytes_ratio", "time_ratio"):
+                if cur[field] > TELEMETRY_OVERHEAD_CEILING:
+                    errors.append(
+                        f"telemetry {key} {scheme}: {field} "
+                        f"{cur[field]:.6f} > {TELEMETRY_OVERHEAD_CEILING}")
+            if ref is not None and scheme in ref["schemes"]:
+                old = ref["schemes"][scheme]
+                if cur["telemetry_bytes"] > old["telemetry_bytes"]:
+                    errors.append(
+                        f"telemetry {key} {scheme}: telemetry_bytes "
+                        f"{cur['telemetry_bytes']} > baseline "
+                        f"{old['telemetry_bytes']}")
     head = report["acceptance"]
+    for field in ("telemetry_disabled_callback_free",
+                  "telemetry_disabled_bit_identical"):
+        if head.get(field) is False:
+            errors.append(f"{field} is False: disabled-mode telemetry "
+                          "contract broken")
     if head["prologue_reduction_p4"] < PROLOGUE_FLOOR:
         errors.append(f"prologue reduction {head['prologue_reduction_p4']:.2f}"
                       f" < {PROLOGUE_FLOOR}")
@@ -392,6 +470,21 @@ def main(argv=None) -> int:
               f"{100*s1['bytes_ratio']:.2f}%/"
               f"{100*s2['bytes_ratio']:.2f}% bytes", flush=True)
 
+    cells_t = []
+    for m, k, n in TELEMETRY_SHAPES:
+        cell = run_telemetry_cell(m, k, n)
+        cells_t.append(cell)
+        s1 = cell["schemes"]["ozaki1"]
+        s2 = cell["schemes"]["ozaki2"]
+        print(f"telemetry ({m},{k},{n}): payload "
+              f"{s1['telemetry_bytes']}B/call, overhead s1 "
+              f"{100*s1['time_ratio']:.4f}%/s2 "
+              f"{100*s2['time_ratio']:.4f}% time, "
+              f"{100*s1['bytes_ratio']:.4f}%/"
+              f"{100*s2['bytes_ratio']:.4f}% bytes", flush=True)
+    tele_checks = telemetry_disabled_checks()
+    print(f"telemetry disabled-mode: {tele_checks}", flush=True)
+
     cells_sh = []
     for m, k, n in SHARDED_SHAPES:
         for layout in MESH_LAYOUTS:
@@ -411,12 +504,13 @@ def main(argv=None) -> int:
     p4 = [c for c in cells if c["p"] == 4]
     m6 = [c for c in cells2 if c["p"] == 6]
     report = {
-        "schema": "bench_traffic/v4",
+        "schema": "bench_traffic/v5",
         "uses_per_step": USES,
         "cells": cells,
         "scheme2_cells": cells2,
         "sharded_cells": cells_sh,
         "guard_cells": cells_g,
+        "telemetry_cells": cells_t,
         "acceptance": {
             "sharded_column_collective_free": all(
                 c["partitions"]["column"]["collective_bytes_per_device"]
@@ -436,6 +530,14 @@ def main(argv=None) -> int:
                 sc[field] for c in cells_g for sc in c["schemes"].values()
                 for field in ("bytes_ratio", "time_ratio")),
             "guard_overhead_ceiling": GUARD_OVERHEAD_CEILING,
+            "telemetry_overhead_max": max(
+                sc[field] for c in cells_t for sc in c["schemes"].values()
+                for field in ("bytes_ratio", "time_ratio")),
+            "telemetry_overhead_ceiling": TELEMETRY_OVERHEAD_CEILING,
+            "telemetry_disabled_callback_free":
+                tele_checks["callback_free_disabled"],
+            "telemetry_disabled_bit_identical":
+                tele_checks["bit_identical"],
         },
     }
     with open(args.out, "w") as f:

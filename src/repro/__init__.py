@@ -55,6 +55,8 @@ __all__ = [
     "guard",
     "EmulationAccuracyError",
     "verify_gemm",
+    # observability (docs/observability.md)
+    "telemetry",
 ]
 
 # Heavy re-exports (they pull the Pallas kernel stack) resolve lazily so
@@ -71,6 +73,7 @@ _LAZY = {
     "EmulationAccuracyError": ("repro.core.precision",
                                "EmulationAccuracyError"),
     "verify_gemm": ("repro.guard.verify", "verify_gemm"),
+    "telemetry": ("repro.telemetry", None),  # the subpackage itself
 }
 
 

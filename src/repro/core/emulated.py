@@ -34,6 +34,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import complex3m, scheme1, scheme2
 from repro.core.precision import EmulationConfig, NATIVE
 
@@ -90,28 +91,50 @@ def _dot_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig) -> jax.Array:
             # operands to the nearest 128 tile and slices the result.
             return dispatch.emulated_matmul(a, b, cfg=cfg,
                                             out_dtype=out_dtype)
+    cplx = _is_complex(a) or _is_complex(b)
     if cfg.scheme == "ozaki1":
-        if _is_complex(a) or _is_complex(b):
-            return scheme1.matmul_complex_4m(a, b, cfg, out_dtype=None)
-        return scheme1.matmul(a, b, cfg, out_dtype=out_dtype)
-    if cfg.scheme == "ozaki2":
-        if _is_complex(a) or _is_complex(b):
+        scheme_tag, count = ("ozaki1-4m" if cplx else "ozaki1"), cfg.p
+    elif cfg.scheme == "ozaki2":
+        scheme_tag = "ozaki2-3m" if cplx else "ozaki2"
+        count = len(cfg.resolved_moduli())
+    else:
+        raise ValueError(f"unknown scheme {cfg.scheme!r}")
+    _record_xla_dot(scheme_tag, count, a, b)
+    with telemetry.gemm_scope(scheme_tag, count, "xla", "xla"):
+        if cfg.scheme == "ozaki1":
+            if cplx:
+                return scheme1.matmul_complex_4m(a, b, cfg, out_dtype=None)
+            return scheme1.matmul(a, b, cfg, out_dtype=out_dtype)
+        if cplx:
             return complex3m.matmul(a, b, cfg, out_dtype=None)
         return scheme2.matmul(a, b, cfg, out_dtype=out_dtype)
-    raise ValueError(f"unknown scheme {cfg.scheme!r}")
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
-def emulated_dot(a: jax.Array, b: jax.Array,
-                 cfg: EmulationConfig = NATIVE) -> jax.Array:
-    """a: (..., K) float; b: (K, N) float -> (..., N)."""
+def _record_xla_dot(scheme_tag: str, count: int, a, b) -> None:
+    if not telemetry.enabled():
+        return
+    telemetry.record_gemm(scheme=scheme_tag, count=count, backend="xla",
+                          impl="xla", m=a.shape[0], k=a.shape[1],
+                          n=b.shape[1])
+
+
+# The telemetry call-site rides along as a static (nondiff) argument:
+# JAX re-traces custom-VJP rules at partial-eval/transpose time (grad,
+# jax.checkpoint) after the originating ``call_site`` block has exited,
+# so the ambient thread-local label is gone by then.  Capturing it once
+# in the public wrapper and re-entering it inside every rule keeps the
+# per-site execution counters correct under grad and remat.
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _emulated_dot(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                  site: str) -> jax.Array:
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
-    out = _dot_2d(a2, b, cfg)
+    with telemetry.site_scope(site):
+        out = _dot_2d(a2, b, cfg)
     return out.reshape(*lead, b.shape[-1])
 
 
-def _fwd(a, b, cfg):
+def _fwd(a, b, cfg, site):
     # Guarded calls skip the prepared shortcut: the escalation ladder
     # may re-plan the slice count, which a stack prepared up front would
     # pin (verification itself handles prepared rhs via reconstruct()).
@@ -120,8 +143,10 @@ def _fwd(a, b, cfg):
         from repro.kernels import prepared  # lazy: pallas import
         prep = prepared.prepare_rhs(b, cfg, with_twin=True)
         out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
-        return prepared_dot(a, prep, out_dtype), (a, b, prep.twin)
-    return emulated_dot(a, b, cfg), (a, b, None)
+        with telemetry.site_scope(site):
+            out = prepared_dot(a, prep, out_dtype)
+        return out, (a, b, prep.twin)
+    return _emulated_dot(a, b, cfg, site), (a, b, None)
 
 
 def _bwd_core(cfg, a, b, twin, g):
@@ -148,12 +173,19 @@ def _bwd_core(cfg, a, b, twin, g):
     return da, db
 
 
-def _bwd(cfg, res, g):
+def _bwd(cfg, site, res, g):
     a, b, twin = res
-    return _bwd_core(cfg, a, b, twin, g)
+    with telemetry.site_scope(site):
+        return _bwd_core(cfg, a, b, twin, g)
 
 
-emulated_dot.defvjp(_fwd, _bwd)
+_emulated_dot.defvjp(_fwd, _bwd)
+
+
+def emulated_dot(a: jax.Array, b: jax.Array,
+                 cfg: EmulationConfig = NATIVE) -> jax.Array:
+    """a: (..., K) float; b: (K, N) float -> (..., N)."""
+    return _emulated_dot(a, b, cfg, telemetry.current_site())
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +208,31 @@ def _zero_cotangent(tree):
     return jax.tree.map(z, tree)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3,))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _emulated_dot_prepared(a: jax.Array, b: jax.Array, prep,
+                           cfg: EmulationConfig, site: str) -> jax.Array:
+    out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    with telemetry.site_scope(site):
+        return prepared_dot(a, prep, out_dtype)
+
+
+def _fwd_prepared(a, b, prep, cfg, site):
+    out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    with telemetry.site_scope(site):
+        out = prepared_dot(a, prep, out_dtype)
+    return out, (a, b, prep)
+
+
+def _bwd_prepared(cfg, site, res, g):
+    a, b, prep = res
+    with telemetry.site_scope(site):
+        da, db = _bwd_core(cfg, a, b, prep.twin, g)
+    return da, db, _zero_cotangent(prep)
+
+
+_emulated_dot_prepared.defvjp(_fwd_prepared, _bwd_prepared)
+
+
 def emulated_dot_prepared(a: jax.Array, b: jax.Array, prep,
                           cfg: EmulationConfig) -> jax.Array:
     """a: (..., K) @ b: (K, N) where ``prep`` is b's already-built
@@ -189,22 +245,7 @@ def emulated_dot_prepared(a: jax.Array, b: jax.Array, prep,
     ``emulated_dot`` with ``cfg.cache_weights``, minus the per-microbatch
     re-preparation.
     """
-    out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
-    return prepared_dot(a, prep, out_dtype)
-
-
-def _fwd_prepared(a, b, prep, cfg):
-    out_dtype = cfg.out_dtype or jnp.promote_types(a.dtype, b.dtype)
-    return prepared_dot(a, prep, out_dtype), (a, b, prep)
-
-
-def _bwd_prepared(cfg, res, g):
-    a, b, prep = res
-    da, db = _bwd_core(cfg, a, b, prep.twin, g)
-    return da, db, _zero_cotangent(prep)
-
-
-emulated_dot_prepared.defvjp(_fwd_prepared, _bwd_prepared)
+    return _emulated_dot_prepared(a, b, prep, cfg, telemetry.current_site())
 
 
 def emulated_einsum_proj(x: jax.Array, w: jax.Array,

@@ -436,6 +436,59 @@ def guard_overhead_model(s: GemmShape, p: int, scheme: str = "ozaki1",
     }
 
 
+def telemetry_counter_bytes(counters: int = 4,
+                            labels: int = 6,
+                            label_bytes: int = 16) -> int:
+    """Device->host payload of one instrumented GEMM's execution-time
+    telemetry callbacks: a handful of scalar counter bumps plus their
+    (statically captured, but transferred once per flush) label strings.
+
+    ``counters`` scalars at 8 bytes each, ``labels`` key/value pairs at
+    ``label_bytes`` each — tens of bytes, NOT proportional to the GEMM.
+    """
+    return 8 * counters + labels * 2 * label_bytes
+
+
+def telemetry_overhead_model(s: GemmShape, p: int, scheme: str = "ozaki1",
+                             out_bytes: int = 4,
+                             peak: "HardwarePeak | None" = None) -> dict:
+    """Modeled observability overhead of one instrumented fused GEMM
+    (docs/observability.md), mirroring ``guard_overhead_model``.
+
+    The telemetry path adds (a) trace-time registry bumps — host-side,
+    zero device cost, not modeled here — and (b) one ``jax.debug
+    .callback`` per executed GEMM whose device-side cost is the transfer
+    of its payload (``telemetry_counter_bytes``) over HBM/PCIe; the host
+    handler runs asynchronously off the critical path.  Roofline
+    convention as in the guard model: GEMM time = max(fused bytes /
+    HBM BW, int8 flops / int8 peak); telemetry time = payload bytes /
+    HBM BW.  The ratios are the ``TELEMETRY_OVERHEAD_CEILING`` gate in
+    benchmarks/bench_traffic.py.
+    """
+    if peak is None:
+        peak = BACKEND_PEAKS["tpu"]["v5e"]
+    if scheme == "ozaki1":
+        gemm_bytes = scheme1_fused_bytes(s, p, out_bytes)
+        gemm_flops = scheme1_flops(s, p)
+    elif scheme == "ozaki2":
+        gemm_bytes = (p * scheme2_fused_bytes_per_modulus(s)
+                      + out_bytes * s.m * s.n)
+        gemm_flops = scheme2_flops(s, p)
+    else:
+        raise ValueError(
+            f"no telemetry overhead model for scheme {scheme!r}")
+    t_bytes = telemetry_counter_bytes()
+    t_gemm = max(gemm_bytes / peak.hbm_bw, gemm_flops / peak.int8_ops)
+    t_tele = t_bytes / peak.hbm_bw
+    return {
+        "gemm_bytes": int(gemm_bytes),
+        "gemm_flops": int(gemm_flops),
+        "telemetry_bytes": int(t_bytes),
+        "bytes_ratio": t_bytes / max(1, gemm_bytes),
+        "time_ratio": t_tele / t_gemm,
+    }
+
+
 def scheme2_workspace_bytes(s: GemmShape, p: int,
                             complex_inputs: bool = False) -> int:
     """p residue matrices per operand + p per-modulus output residues

@@ -3,17 +3,23 @@
 ``GuardPolicy`` is the resolved form of the ``+guard`` / ``+guard:strict``
 spec suffixes (parsed into ``EmulationConfig.guard`` by core.precision):
 it owns the verification knobs and the escalation-ladder shape.  The
-module-level stats counter is what ``runtime/trainer.py`` and
-``launch/serve.py`` poll between steps to turn guard trips into
-retry-with-backoff events, and what tests assert on.
+guard counters live on the process-wide telemetry registry
+(``repro.telemetry.REGISTRY``, metric ``repro_guard_events_total`` labeled
+by event and call site) — the single counter store in the process —
+independent of whether hot-path telemetry is enabled, so the guard-strict
+CI row needs no ``REPRO_TELEMETRY``.  :func:`stats` / :func:`stats_clear`
+are the back-compat view ``runtime/trainer.py`` and ``launch/serve.py``
+poll between steps to turn guard trips into retry-with-backoff events,
+and what tests assert on.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import threading
 
 from repro.core.precision import EmulationConfig
+from repro.telemetry import record as _tele
+from repro.telemetry.registry import REGISTRY
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,24 +69,27 @@ class GuardStats:
         return self.trips > 0
 
 
-_lock = threading.Lock()
-_counts: dict[str, int] = {}
-
-
 def record(event: str, n: int = 1) -> None:
-    """Bump one counter (thread-safe; callable from jax.debug.callback)."""
-    with _lock:
-        _counts[event] = _counts.get(event, 0) + int(n)
+    """Bump one guard counter (thread-safe; callable from
+    jax.debug.callback).  Events land on the telemetry registry labeled
+    with the ambient call site, so per-site guard trip rates fall out of
+    the same store ``guard.stats()`` sums over."""
+    REGISTRY.inc(_tele.GUARD_EVENTS, int(n),
+                 {"event": event, "site": _tele.current_site()})
 
 
 def stats() -> GuardStats:
     """Queryable trip counter — the diagnostics surface next to
-    ``dispatch.fallback_warnings_clear``."""
-    with _lock:
-        known = {f.name for f in dataclasses.fields(GuardStats)}
-        return GuardStats(**{k: v for k, v in _counts.items() if k in known})
+    ``dispatch.fallback_warnings_clear``.  A summed view over the
+    registry's ``repro_guard_events_total`` series (all sites)."""
+    known = {f.name for f in dataclasses.fields(GuardStats)}
+    out = {}
+    for labels, value in REGISTRY.series(_tele.GUARD_EVENTS):
+        event = labels.get("event")
+        if event in known:
+            out[event] = out.get(event, 0) + int(value)
+    return GuardStats(**out)
 
 
 def stats_clear() -> None:
-    with _lock:
-        _counts.clear()
+    REGISTRY.clear(_tele.GUARD_EVENTS)

@@ -50,10 +50,12 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core.precision import EmulationConfig
 from repro.kernels import backends
 from repro.kernels.backends.base import build_pallas_call  # noqa: F401
 from repro.kernels.common import Blocks
+from repro.telemetry import record as _tele
 
 # Historical MXU alignment; kept as the default for the padding helpers
 # (the TPU backend's capability). Backend-aware callers pass
@@ -120,9 +122,13 @@ def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
     try:
         blocks = cache.data[key]
         cache.hits += 1
+        telemetry.record_event(_tele.BLOCK_CACHE,
+                               {"backend": bucket, "result": "hit"})
         return blocks
     except KeyError:
         cache.misses += 1
+        telemetry.record_event(_tele.BLOCK_CACHE,
+                               {"backend": bucket, "result": "miss"})
     bk_obj = backends.resolve_backend(bucket)
     try:
         blocks = bk_obj.choose_blocks(
@@ -290,6 +296,10 @@ def _plan_backend(cfg: EmulationConfig, a, b,
     bk = backends.get_backend(name)
     if not bk.supports(cfg, getattr(a, "dtype", None),
                        getattr(b, "dtype", None)):
+        if name != "xla":
+            telemetry.record_event(_tele.FALLBACK_EVENTS, {
+                "requested": name, "scheme": cfg.scheme,
+                "reason": "unsupported"})
         return "xla"
     return name
 
@@ -351,6 +361,26 @@ def _replan_padded(plan: GemmPlan) -> GemmPlan:
     return dataclasses.replace(plan, m=mp, n=np_, k=kp, blocks=blocks)
 
 
+def _record_plan_call(plan: GemmPlan) -> None:
+    """Telemetry for one dispatched GEMM (no-op unless enabled)."""
+    if not telemetry.enabled():
+        return
+    impl = "pallas" if plan.backend != "xla" else "xla"
+    telemetry.record_gemm(
+        scheme=plan.scheme, count=plan.p_eff, backend=plan.backend,
+        impl=impl, m=plan.m, k=plan.k, n=plan.n,
+        mesh_shape=plan.mesh_shape,
+        out_bytes=jnp.dtype(plan.out_dtype).itemsize)
+
+
+def _scope_scheme(cfg: EmulationConfig, cplx: bool) -> tuple[str, int]:
+    """(scheme tag, residue count) of one lowering for trace annotation."""
+    if cfg.scheme == "ozaki2":
+        return ("ozaki2-3m" if cplx else "ozaki2",
+                len(cfg.resolved_moduli()))
+    return ("ozaki1-4m" if cplx else cfg.scheme, cfg.p)
+
+
 def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype,
               blocks: Blocks | None = None, backend: str | None = None):
     """Aligned 2-D problem -> the selected backend's fused lowering."""
@@ -360,21 +390,24 @@ def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype,
     if cplx and jnp.issubdtype(jnp.dtype(out_dtype), jnp.complexfloating):
         # Real-valued interior: the complex result is assembled at the end.
         out_dtype = jnp.real(jnp.zeros((), out_dtype)).dtype
-    if cfg.scheme == "ozaki1":
-        if cplx:
-            # Scheme-I complex (4M) has no fused kernel on any backend:
-            # four fused real GEMMs (paper Sec. V-D runs EmuGEMM-I complex
-            # exactly so).
-            ar, ai = jnp.real(a), jnp.imag(a)
-            br, bi = jnp.real(b), jnp.imag(b)
-            rr = bk.matmul(ar, br, cfg, out_dtype, blocks)
-            ii = bk.matmul(ai, bi, cfg, out_dtype, blocks)
-            ri = bk.matmul(ar, bi, cfg, out_dtype, blocks)
-            ir = bk.matmul(ai, br, cfg, out_dtype, blocks)
-            return jax.lax.complex(rr - ii, ri + ir)
-        return bk.matmul(a, b, cfg, out_dtype, blocks)
-    if cfg.scheme == "ozaki2":
-        return bk.matmul(a, b, cfg, out_dtype, blocks)
+    scheme_tag, count = _scope_scheme(cfg, cplx)
+    impl = "pallas" if bk.name != "xla" else "xla"
+    with telemetry.gemm_scope(scheme_tag, count, bk.name, impl):
+        if cfg.scheme == "ozaki1":
+            if cplx:
+                # Scheme-I complex (4M) has no fused kernel on any backend:
+                # four fused real GEMMs (paper Sec. V-D runs EmuGEMM-I
+                # complex exactly so).
+                ar, ai = jnp.real(a), jnp.imag(a)
+                br, bi = jnp.real(b), jnp.imag(b)
+                rr = bk.matmul(ar, br, cfg, out_dtype, blocks)
+                ii = bk.matmul(ai, bi, cfg, out_dtype, blocks)
+                ri = bk.matmul(ar, bi, cfg, out_dtype, blocks)
+                ir = bk.matmul(ai, br, cfg, out_dtype, blocks)
+                return jax.lax.complex(rr - ii, ri + ir)
+            return bk.matmul(a, b, cfg, out_dtype, blocks)
+        if cfg.scheme == "ozaki2":
+            return bk.matmul(a, b, cfg, out_dtype, blocks)
     raise ValueError(f"no fused kernel for scheme {cfg.scheme!r}")
 
 
@@ -471,9 +504,13 @@ def emulated_matmul(a: jax.Array, b, *,
                                    preferred_element_type=out_dtype)
     plan = plan_emulated(a, b, cfg, out_dtype, backend,
                          mesh_shape=mesh_shape)
+    _record_plan_call(plan)
     if plan.aligned:
         return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks,
                          plan.backend)
+    telemetry.record_event(_tele.PAD_EVENTS, {
+        "backend": plan.backend, "scheme": plan.scheme,
+        "shape_class": _tele.shape_class(plan.m, plan.k, plan.n)})
     a_p, b_p = pad_operands(a, b, plan.align)
     plan_p = _replan_padded(plan)
     return _fused_2d(a_p, b_p, cfg, plan.out_dtype, plan_p.blocks,
@@ -509,25 +546,25 @@ def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
     return jax.vmap(fn)(a, b)
 
 
-# Fallback RuntimeWarnings already seen, keyed by (reason, shape-class):
-# the requested backend/scheme/dtype pair that fell back plus the operand
+# Fallback RuntimeWarnings are deduped by (reason, shape-class): the
+# requested backend/scheme/dtype pair that fell back plus the operand
 # shape class. Scanned training steps re-trace the same call-site once
 # per microbatch/layer combination; without the dedupe every re-trace
-# re-warned and multi-device logs drowned in the repeat.
-_FALLBACK_WARNED: set = set()
+# re-warned and multi-device logs drowned in the repeat.  The one-shot
+# bookkeeping lives on the telemetry registry (the process's single
+# counter store; always active, independent of REPRO_TELEMETRY) under
+# keys namespaced "fallback".
 
 
 def fallback_warnings_clear() -> None:
     """Forget which fused-fallback warnings fired (tests/log hygiene)."""
-    _FALLBACK_WARNED.clear()
+    telemetry.REGISTRY.forget_once("fallback")
 
 
 def _warn_fallback_once(reason: tuple, shape_class: tuple, message: str,
                         stacklevel: int = 3) -> None:
-    key = (reason, shape_class)
-    if key in _FALLBACK_WARNED:
+    if not telemetry.REGISTRY.once(("fallback", reason, shape_class)):
         return
-    _FALLBACK_WARNED.add(key)
     warnings.warn(message, RuntimeWarning, stacklevel=stacklevel)
 
 
@@ -567,7 +604,11 @@ def auto_fused_matmul(a: jax.Array, b, cfg: EmulationConfig):
             "expands in XLA instead")
         return None
     if not plan.aligned:
+        telemetry.record_event(_tele.FALLBACK_EVENTS, {
+            "requested": plan.backend, "scheme": plan.scheme,
+            "reason": "unaligned-auto"})
         return None
+    _record_plan_call(plan)
     return _fused_2d(a, b, cfg, plan.out_dtype, plan.blocks, plan.backend)
 
 

@@ -41,9 +41,24 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import scheme1
 from repro.core.precision import EmulationConfig, scheme2_budget
 from repro.kernels.common import Blocks
+from repro.telemetry import record as _tele
+
+
+def _record_consume(scheme: str, count: int, backend: str, route: str,
+                    reason: str, m: int, k: int, prep) -> None:
+    """One prepared-consume routing decision + the per-execution GEMM."""
+    if not telemetry.enabled():
+        return
+    telemetry.record_event(_tele.PREPARED_CONSUME, {
+        "scheme": scheme, "route": route, "reason": reason})
+    telemetry.record_gemm(
+        scheme=scheme, count=count, backend=backend,
+        impl=("prepared-pallas" if route == "fused" else "prepared-xla"),
+        m=m, k=k, n=prep.n, mesh_shape=prep.mesh_shape)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -243,6 +258,10 @@ def prepare_rhs(b: jax.Array, cfg: EmulationConfig, *,
                          "and imaginary parts separately (4M formulation)")
     from repro.kernels import decompose, dispatch
 
+    telemetry.record_event(_tele.PREPARED_BUILD,
+                           {"scheme": "ozaki1",
+                            "layout": ("interleaved" if _use_kernel(cfg)
+                                       else "stacked")})
     k, n = b.shape
     if not jnp.issubdtype(b.dtype, jnp.floating):
         b = b.astype(jnp.float32)
@@ -354,6 +373,8 @@ def prepare_rhs_scheme2(b: jax.Array, cfg: EmulationConfig, *,
               and backends.resolve_backend_name(None, cfg) == "gpu"
               else "stacked")
     mesh_shape = dispatch._mesh_shape_tuple(mesh)
+    telemetry.record_event(_tele.PREPARED_BUILD,
+                           {"scheme": "ozaki2", "layout": layout})
     res, nu, budget = _encode_residues(b, moduli, k_dim=k)
     twin = None
     if with_twin:
@@ -412,18 +433,27 @@ def matmul_prepared_scheme2(a: jax.Array, prep: PreparedResidues,
             out_bytes=jnp.dtype(out_dtype).itemsize, backend="gpu",
             scheme="ozaki2")
         if blocks is not None and blocks.aligned(mp, np_, kp):
-            out = gpu_backend.fused_matmul_scheme2(
-                a, prep.residues, mu, prep.scale, moduli, blocks,
-                out_dtype=out_dtype)
+            _record_consume("ozaki2", len(moduli), "gpu", "fused", "-",
+                            m, k, prep)
+            with telemetry.gemm_scope("ozaki2", len(moduli), "gpu",
+                                      "prepared-pallas"):
+                out = gpu_backend.fused_matmul_scheme2(
+                    a, prep.residues, mu, prep.scale, moduli, blocks,
+                    out_dtype=out_dtype)
             return out[:m, :prep.n]
+        reason = "no_block_fit"
+    else:
+        reason = "stacked_layout"
 
     # XLA expansion from the stored residue stack ('stacked' layout, or
     # no block fit at the fused tile grid).
-    a_res = scheme2.balanced_residues(jnp.trunc(a * mu), moduli)
-    acc = scheme2.residue_gemms(a_res, prep.residues)
-    c_res = scheme2.modular_reduce(acc, moduli)
-    c_int = scheme2.crt_reconstruct(c_res, moduli, out_dtype)
-    out = c_int / (mu.astype(out_dtype) * prep.scale.astype(out_dtype))
+    _record_consume("ozaki2", len(moduli), "xla", "xla", reason, m, k, prep)
+    with telemetry.gemm_scope("ozaki2", len(moduli), "xla", "prepared-xla"):
+        a_res = scheme2.balanced_residues(jnp.trunc(a * mu), moduli)
+        acc = scheme2.residue_gemms(a_res, prep.residues)
+        c_res = scheme2.modular_reduce(acc, moduli)
+        c_int = scheme2.crt_reconstruct(c_res, moduli, out_dtype)
+        out = c_int / (mu.astype(out_dtype) * prep.scale.astype(out_dtype))
     return out[:m, :prep.n]
 
 
@@ -463,18 +493,28 @@ def matmul_prepared(a: jax.Array, prep,
             mp, np_, kp, prep.p, out_bytes=jnp.dtype(out_dtype).itemsize,
             backend="tpu", prologue_a=True, fixed_bk=prep.blocks.bk)
         if blocks is not None:
-            mu = scheme1._pow2_row_scale(a, axis=1)      # (Mp, 1)
-            out = ozaki1.fused_matmul_mixed(
-                a, prep.slices, mu.astype(jnp.float32),
-                prep.scale.astype(jnp.float32), prep.p, prep.beta, blocks,
-                out_dtype=out_dtype)
+            _record_consume("ozaki1", prep.p, "tpu", "fused", "-",
+                            m, k, prep)
+            with telemetry.gemm_scope("ozaki1", prep.p, "tpu",
+                                      "prepared-pallas"):
+                mu = scheme1._pow2_row_scale(a, axis=1)      # (Mp, 1)
+                out = ozaki1.fused_matmul_mixed(
+                    a, prep.slices, mu.astype(jnp.float32),
+                    prep.scale.astype(jnp.float32), prep.p, prep.beta,
+                    blocks, out_dtype=out_dtype)
             return out[:m, :prep.n]
+        reason = "no_block_fit"
+    else:
+        reason = "stacked_layout"
 
     # XLA expansion from the stored slices (stacked layout, or no block
     # fit at the pinned granularity).
-    a_sl, mu = scheme1.split(a, prep.p, prep.beta, axis=1)
-    accs = scheme1.triangular_accumulators(a_sl, prep.stacked(), prep.p)
-    out = scheme1.shift_reduce(accs, prep.beta, mu, prep.scale, out_dtype)
+    _record_consume("ozaki1", prep.p, "xla", "xla", reason, m, k, prep)
+    with telemetry.gemm_scope("ozaki1", prep.p, "xla", "prepared-xla"):
+        a_sl, mu = scheme1.split(a, prep.p, prep.beta, axis=1)
+        accs = scheme1.triangular_accumulators(a_sl, prep.stacked(), prep.p)
+        out = scheme1.shift_reduce(accs, prep.beta, mu, prep.scale,
+                                   out_dtype)
     return out[:m, :prep.n]
 
 

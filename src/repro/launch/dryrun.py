@@ -119,7 +119,20 @@ def main():
                     help="native | ozaki1-pN | ozaki2-pN")
     ap.add_argument("--out", default="dryrun_results.json")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="write one telemetry record per compiled cell to "
+                         "this JSONL file (implies telemetry; cells are "
+                         "compile-only, so the record carries trace-time "
+                         "counters: traces, modeled bytes, block-cache, "
+                         "prepared builds)")
     args = ap.parse_args()
+
+    from repro import telemetry
+    sink = tracker = None
+    if args.metrics_jsonl:
+        telemetry.enable()
+        sink = telemetry.jsonl_sink(args.metrics_jsonl)
+        tracker = telemetry.StepTracker()
 
     arch_ids = configs.ARCH_IDS if args.arch == "all" else (args.arch,)
     meshes = {"single": (False,), "multi": (True,),
@@ -134,6 +147,7 @@ def main():
             for r in results}
 
     failures = 0
+    cell_idx = 0
     for arch_id in arch_ids:
         arch = configs.get_config(arch_id)
         shapes = arch.shapes()
@@ -149,7 +163,14 @@ def main():
                 print(f"=== {arch_id} x {shape.name} x {mesh_name} "
                       f"(gemm={args.gemm}) ===", flush=True)
                 try:
+                    t_cell = time.time()
                     rec = run_cell(arch_id, shape, multi, args.gemm)
+                    if tracker is not None:
+                        tracker.step_metrics(
+                            cell_idx, time.time() - t_cell, kind="cell",
+                            extra={"arch": arch_id, "shape": shape.name,
+                                   "mesh": mesh_name, "gemm": args.gemm})
+                    cell_idx += 1
                     r = rec["roofline"]
                     print(f"  lower {rec['lower_s']}s compile "
                           f"{rec['compile_s']}s | compute {r['compute_s']:.4f}s "
@@ -166,6 +187,8 @@ def main():
                     traceback.print_exc()
                 with open(args.out, "w") as f:
                     json.dump(results, f, indent=1)
+    if sink is not None:
+        sink.close()
     print(f"done; {failures} failures; results in {args.out}")
     raise SystemExit(1 if failures else 0)
 

@@ -60,6 +60,11 @@ class ServeEngine:
         self.guard_retries = guard_retries
         self.guard_backoff = guard_backoff
         self.last_guard: dict[str, int] = {}
+        from repro import telemetry
+        self._telemetry = telemetry
+        self._tracker = telemetry.StepTracker() if telemetry.enabled() \
+            else None
+        self._batches = 0
 
     def _generate_once(self, prompts: np.ndarray, n_tokens: int):
         b, s = prompts.shape
@@ -78,6 +83,7 @@ class ServeEngine:
                  greedy: bool = True):
         """prompts: (B, S) int32. Returns (B, n_tokens) generated ids."""
         before = guard.stats()
+        t0 = time.time()
         attempt = 0
         while True:
             try:
@@ -91,12 +97,25 @@ class ServeEngine:
                 print(f"[serve] guard trip (retry {attempt}/"
                       f"{self.guard_retries} after {pause:.2f}s): {e}")
                 time.sleep(pause)
+        dt = time.time() - t0
         after = guard.stats()
         self.last_guard = {
             f: getattr(after, f) - getattr(before, f)
             for f in ("calls", "trips", "escalations", "recoveries",
                       "native_fallbacks", "masked")}
         self.last_guard["retries"] = attempt
+        # One telemetry record per served batch (docs/observability.md):
+        # kind="serve", tokens = generated ids this batch, so
+        # tokens_per_s is the decode throughput the operator dashboards.
+        if self._tracker is None and self._telemetry.enabled():
+            self._tracker = self._telemetry.StepTracker()
+        if self._tracker is not None:
+            self._tracker.step_metrics(
+                self._batches, dt, kind="serve",
+                tokens=int(prompts.shape[0]) * int(n_tokens),
+                extra={"requests": int(prompts.shape[0]),
+                       "guard_retries": attempt})
+        self._batches += 1
         return toks
 
 
@@ -114,7 +133,26 @@ def main(argv=None):
     ap.add_argument("--prepare", action="store_true",
                     help="decompose Scheme-I projection weights once per "
                          "session (PreparedOperand serving)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text-format metrics on this "
+                         "port (GET /metrics; implies telemetry; 0 picks "
+                         "a free port)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="write one telemetry record per served batch to "
+                         "this JSONL file (implies telemetry)")
     args = ap.parse_args(argv)
+
+    from repro import telemetry
+    metrics_server = None
+    sink = None
+    if args.metrics_port is not None:
+        telemetry.enable()
+        metrics_server = telemetry.serve_metrics(args.metrics_port)
+        print(f"[serve] metrics on http://127.0.0.1:"
+              f"{metrics_server.port}/metrics")
+    if args.metrics_jsonl:
+        telemetry.enable()
+        sink = telemetry.jsonl_sink(args.metrics_jsonl)
 
     arch = (configs.get_smoke_config(args.arch) if args.smoke
             else configs.get_config(args.arch))
@@ -137,6 +175,10 @@ def main(argv=None):
     if eng.last_guard.get("calls"):
         print("[serve] guard:", eng.last_guard)
     print("[serve] sample:", toks[0][:12].tolist())
+    if sink is not None:
+        sink.close()
+    if metrics_server is not None:
+        metrics_server.close()
     return toks
 
 

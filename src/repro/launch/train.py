@@ -52,6 +52,14 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="write one telemetry record per step to this "
+                         "JSONL file (implies telemetry; aggregate with "
+                         "python -m repro.telemetry.report)")
+    ap.add_argument("--metrics-prom", default=None,
+                    help="dump the final Prometheus text-format metrics "
+                         "to this file at exit (stdout when telemetry is "
+                         "enabled and no path is given)")
     args = ap.parse_args(argv)
 
     arch = (configs.get_smoke_config(args.arch) if args.smoke
@@ -78,6 +86,8 @@ def main(argv=None):
             state_shardings=state_sh,
             ckpt_every=args.ckpt_every,
             failure=FailureInjector(args.fail_at),
+            metrics_jsonl=args.metrics_jsonl,
+            tokens_per_step=args.batch * args.seq,
         )
         log = trainer.run(max(0, args.steps - trainer.start_step))
         trainer.close()
@@ -86,6 +96,16 @@ def main(argv=None):
         last = log[-1].get("loss")
         print(f"[train] loss {first:.4f} -> {last:.4f} over "
               f"{len(log)} steps")
+    from repro import telemetry
+    if telemetry.enabled():
+        text = telemetry.render_prometheus()
+        if args.metrics_prom:
+            with open(args.metrics_prom, "w", encoding="utf-8") as fh:
+                fh.write(text)
+            print(f"[train] metrics dumped to {args.metrics_prom}")
+        else:
+            print("[train] final metrics (Prometheus text format):")
+            print(text, end="")
     return log
 
 

@@ -95,6 +95,11 @@ def dense(x: jax.Array, w, policy: GemmPolicy, site: str,
           bias: jax.Array | None = None) -> jax.Array:
     """x: (..., K) @ w: (K, N) under the policy's emulation config.
 
+    When telemetry is enabled the whole call runs inside
+    ``telemetry.call_site(site)``, so every emulated GEMM (and guard
+    event) it dispatches is labeled with this call-site family; disabled,
+    the context manager is skipped entirely.
+
     ``w`` may be a :class:`repro.kernels.prepared.PreparedOperand`
     (see ``prepared.prepare_params`` — once-per-session serving reuse):
     its finished int8 slices are consumed directly, whatever the policy
@@ -111,6 +116,15 @@ def dense(x: jax.Array, w, policy: GemmPolicy, site: str,
     path; shapes the partitioner cannot fit fall back to the direct
     routes below, which still compile under GSPMD (just unpartitioned).
     """
+    from repro import telemetry
+    if telemetry.enabled():
+        with telemetry.call_site(site):
+            return _dense(x, w, policy, site, bias)
+    return _dense(x, w, policy, site, bias)
+
+
+def _dense(x: jax.Array, w, policy: GemmPolicy, site: str,
+           bias: jax.Array | None = None) -> jax.Array:
     cfg = policy.for_site(site)
     mesh = getattr(policy, "mesh", None)
     if (mesh is not None and cfg.scheme != "native"

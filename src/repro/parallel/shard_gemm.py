@@ -43,7 +43,32 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import telemetry
 from repro.parallel import sharding as shd
+from repro.telemetry import record as _tele
+
+
+def _record_partition(part: "GemmPartition", cfg, mesh_shape,
+                      m: int, k: int, n: int) -> int:
+    """Record the partition choice; return modeled collective bytes per
+    device for the shard body to stage (0 when collective-free or
+    telemetry is disabled)."""
+    if not telemetry.enabled():
+        return 0
+    telemetry.record_event(_tele.SHARD_PARTITION, {
+        "kind": part.kind, "mesh_shape": _tele.mesh_label(mesh_shape)})
+    if part.kind != "row":
+        return 0
+    try:
+        from repro.core import traffic
+        p = (len(cfg.resolved_moduli()) if cfg.scheme == "ozaki2"
+             else cfg.p)
+        t = traffic.sharded_gemm_traffic(
+            traffic.GemmShape(int(m), int(n), int(k)), p, mesh_shape,
+            partition="row", scheme=cfg.scheme)
+        return int(t["collective_bytes_per_device"])
+    except Exception:
+        return 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,12 +173,16 @@ def _localize_prepared(prep, mesh: Mesh):
     if tp <= 1:
         return None
     if prep.n != prep.padded_n or prep.n % tp:
+        telemetry.record_event(_tele.PREPARED_REFUSALS,
+                               {"reason": "n_indivisible"})
         return None
     pinned = getattr(prep, "mesh_shape", None)
     if pinned is not None and pinned != _mesh_shape(mesh):
         # Prepared under a different mesh layout: the block granularity
         # was pinned for that layout's shard widths — refuse rather
         # than consume it with a foreign tiling.
+        telemetry.record_event(_tele.PREPARED_REFUSALS,
+                               {"reason": "mesh_mismatch"})
         return None
     local = dataclasses.replace(prep, n=prep.n // tp, twin=None)
     return local, jax.tree.map(_local_spec, local)
@@ -184,6 +213,8 @@ def sharded_matmul(a: jax.Array, b: jax.Array, cfg, mesh: Mesh, *,
     body_cfg = cfg if part.kind != "row" else _pin_row_cfg(cfg, a.shape[1])
     mesh_shape = _mesh_shape(mesh)
     a_spec, b_spec, out_spec = part.specs(2)
+    coll_bytes = _record_partition(part, cfg, mesh_shape,
+                                   a.shape[0], a.shape[1], b.shape[1])
 
     def body(al, bl):
         out = dispatch.emulated_matmul(al, bl, cfg=body_cfg,
@@ -191,6 +222,7 @@ def sharded_matmul(a: jax.Array, b: jax.Array, cfg, mesh: Mesh, *,
                                        mesh_shape=mesh_shape)
         for ax in part.reduce_axes:
             out = jax.lax.psum(out, ax)
+        telemetry.record_collective("psum", mesh_shape, coll_bytes)
         return out
 
     return shard_map(body, mesh=mesh, in_specs=(a_spec, b_spec),
@@ -244,11 +276,17 @@ def sharded_dense(x: jax.Array, w, cfg, mesh: Mesh) -> jax.Array | None:
         return None
     body_cfg = cfg if part.kind != "row" else _pin_row_cfg(cfg, k)
     x_spec, w_spec, out_spec = part.specs(x.ndim)
+    mesh_shape = _mesh_shape(mesh)
+    lead = 1
+    for d in x.shape[:-1]:
+        lead *= d
+    coll_bytes = _record_partition(part, cfg, mesh_shape, lead, k, n)
 
     def body(xl, wl):
         out = emulated_dot(xl, wl, body_cfg)
         for ax in part.reduce_axes:
             out = jax.lax.psum(out, ax)
+        telemetry.record_collective("psum", mesh_shape, coll_bytes)
         return out
 
     return shard_map(body, mesh=mesh, in_specs=(x_spec, w_spec),

@@ -94,7 +94,9 @@ class Trainer:
                  ckpt_every: int = 50, keep: int = 3,
                  failure: FailureInjector | None = None,
                  log_every: int = 10, handle_sigterm: bool = False,
-                 guard_retries: int = 2, guard_backoff: float = 0.25):
+                 guard_retries: int = 2, guard_backoff: float = 0.25,
+                 metrics_jsonl: str | None = None,
+                 tokens_per_step: int | None = None):
         self.step_fn = step_fn
         self.batch_iterator = batch_iterator
         self.ckpt = CheckpointManager(ckpt_dir, keep=keep)
@@ -107,6 +109,18 @@ class Trainer:
         self.log_every = log_every
         self.metrics_log: list[dict] = []
         self._preempted = False
+        # Per-step telemetry records (docs/observability.md): a JSONL
+        # sink implies telemetry; otherwise records are written only when
+        # the process already enabled it (REPRO_TELEMETRY=1 / enable()).
+        from repro import telemetry
+        self._telemetry = telemetry
+        self._tokens_per_step = tokens_per_step
+        self._sink = None
+        if metrics_jsonl:
+            telemetry.enable()
+            self._sink = telemetry.jsonl_sink(metrics_jsonl)
+        self._tracker = telemetry.StepTracker() if telemetry.enabled() \
+            else None
 
         latest = self.ckpt.latest_step()
         if latest is not None:
@@ -164,6 +178,13 @@ class Trainer:
                               self.guard_monitor.observe(step).items()
                               if k in ("trips", "native_fallbacks")})
             self.metrics_log.append(metrics)
+            if self._tracker is not None:
+                self._tracker.step_metrics(
+                    step, dt, kind="train",
+                    tokens=self._tokens_per_step,
+                    loss=metrics.get("loss"),
+                    extra={"guard_retries": attempt,
+                           "straggler": bool(slow)})
             if slow:
                 print(f"[trainer] straggler step {step}: {dt:.3f}s")
             if step % self.log_every == 0:
@@ -182,4 +203,7 @@ class Trainer:
         return self.metrics_log
 
     def close(self):
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
         self.ckpt.close()

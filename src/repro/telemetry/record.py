@@ -1,0 +1,228 @@
+"""Instrumentation helpers: site context, labels, and recording primitives.
+
+The label schema is fixed (docs/observability.md):
+
+    site        logical call site ('attn', 'ffn', 'logits', 'emb', '-')
+    scheme      emulation scheme ('ozaki1', 'ozaki2', 'ozaki2-3m')
+    backend     kernel backend that ran ('tpu', 'gpu', 'xla')
+    impl        lowering route ('pallas', 'xla', 'prepared-pallas',
+                'prepared-xla')
+    shape_class 'MxKxN' of the logical 2-D contraction
+    mesh_shape  'axis=size,...' of the launch mesh, or '-'
+
+Two recording moments, matching how the stack executes:
+
+* **Trace time** (plan/route decisions, modeled bytes): recorded eagerly
+  with a plain ``REGISTRY.inc`` while JAX traces — this is what compile-only
+  flows (``launch.dryrun``, ``utils.perf_probe``) observe.
+* **Execution time** (call counts, modeled HBM/collective bytes per run):
+  staged as a ``jax.debug.callback`` with the labels captured statically in
+  the closure — the same pattern ``repro.guard`` uses.  ``debug.callback``
+  also runs immediately on eager calls, so one helper covers both.
+
+Every helper is a no-op unless :func:`repro.telemetry.enabled` — checked
+first, before any label work — so the disabled path stages nothing into
+jaxprs and costs one global read.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Any, Iterator, Mapping
+
+from repro.telemetry import registry as _reg
+from repro.telemetry.registry import REGISTRY
+
+# Metric names (the catalog in docs/observability.md).
+EMULATED_CALLS = "repro_emulated_calls_total"          # per execution
+EMULATED_TRACES = "repro_emulated_traces_total"        # per trace/plan
+MODELED_HBM_BYTES = "repro_modeled_hbm_bytes_total"    # per execution
+MODELED_BYTES_TRACED = "repro_modeled_bytes_traced_total"  # per trace, by tag
+BLOCK_CACHE = "repro_block_cache_total"                # hit/miss, per lookup
+PAD_EVENTS = "repro_pad_total"                         # per padded trace
+FALLBACK_EVENTS = "repro_fallback_total"               # per fallback, w/ reason
+PREPARED_CONSUME = "repro_prepared_consume_total"      # fused vs xla routes
+PREPARED_BUILD = "repro_prepared_build_total"          # prepare/rebuild calls
+PREPARED_REFUSALS = "repro_prepared_refusal_total"     # layout refusals
+GUARD_EVENTS = "repro_guard_events_total"              # guard.stats() backing
+SHARD_PARTITION = "repro_shard_partition_total"        # partition kind chosen
+MODELED_COLLECTIVE_BYTES = "repro_modeled_collective_bytes_total"
+STEP_SECONDS = "repro_step_seconds"                    # histogram
+STEP_TOKENS_PER_S = "repro_step_tokens_per_s"          # gauge
+
+enabled = _reg.enabled
+
+_tls = threading.local()
+
+
+def current_site() -> str:
+    """Innermost ambient call-site label, '-' when none is set."""
+    stack = getattr(_tls, "sites", None)
+    return stack[-1] if stack else "-"
+
+
+@contextlib.contextmanager
+def call_site(name: str) -> Iterator[None]:
+    """Label emulated calls (traced or eager) inside the scope with ``site``."""
+    stack = getattr(_tls, "sites", None)
+    if stack is None:
+        stack = _tls.sites = []
+    stack.append(str(name))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def site_scope(name: str) -> Iterator[None]:
+    """Re-establish a previously captured site label ('-' is a no-op).
+
+    JAX re-traces custom-VJP rules at partial-eval/transpose time (grad,
+    ``jax.checkpoint``) *after* the originating ``call_site`` block has
+    exited, so the rules carry the site captured at the first, in-scope
+    call as a static argument and re-enter it here on every re-trace.
+    """
+    if name == "-":
+        yield
+        return
+    with call_site(name):
+        yield
+
+
+def shape_class(m: int, k: int, n: int) -> str:
+    return f"{int(m)}x{int(k)}x{int(n)}"
+
+
+def mesh_label(mesh_shape: Any = None) -> str:
+    """'axis=size,...' for a ``((axis, size), ...)`` tuple / mapping, or '-'."""
+    if not mesh_shape:
+        return "-"
+    items = mesh_shape.items() if hasattr(mesh_shape, "items") else mesh_shape
+    return ",".join(f"{a}={int(s)}" for a, s in items) or "-"
+
+
+def gemm_tag(scheme: str, count: int, backend: str, impl: str) -> str:
+    """Profiler scope tag: ``emugemm/<scheme>-<p|m><count>/<backend>/<impl>``.
+
+    Scheme I counts mantissa slices (``p``); Scheme II counts moduli
+    (``m``).  Digits are meaningful here — perf_probe's tag normalizer
+    preserves them inside ``emugemm/`` scopes.
+    """
+    unit = "m" if scheme.startswith("ozaki2") else "p"
+    return f"emugemm/{scheme}-{unit}{int(count)}/{backend}/{impl}"
+
+
+def gemm_labels(
+    scheme: str,
+    backend: str,
+    impl: str,
+    m: int,
+    k: int,
+    n: int,
+    mesh_shape: Any = None,
+) -> dict[str, str]:
+    return {
+        "site": current_site(),
+        "scheme": scheme,
+        "backend": backend,
+        "impl": impl,
+        "shape_class": shape_class(m, k, n),
+        "mesh_shape": mesh_label(mesh_shape),
+    }
+
+
+def modeled_gemm_bytes(
+    scheme: str, count: int, m: int, k: int, n: int,
+    out_bytes: int = 4, complex_3m: bool = False,
+) -> int:
+    """Modeled fused HBM bytes of one emulated GEMM (paper Eq. 10/15/18)."""
+    from repro.core import traffic
+
+    s = traffic.GemmShape(int(m), int(n), int(k))
+    if scheme.startswith("ozaki2"):
+        complex_3m = complex_3m or scheme == "ozaki2-3m"
+        per_mod = (
+            traffic.scheme2_3m_fused_bytes_per_modulus(s)
+            if complex_3m
+            else traffic.scheme2_fused_bytes_per_modulus(s)
+        )
+        n_out = 2 if complex_3m else 1
+        return int(count) * per_mod + n_out * out_bytes * s.m * s.n
+    mult = 4 if scheme.endswith("-4m") else 1  # Scheme-I complex: 4 GEMMs
+    return mult * traffic.scheme1_fused_bytes(s, int(count), out_bytes)
+
+
+def _bump_gemm(labels: Mapping[str, str], nbytes: int) -> None:
+    REGISTRY.inc(EMULATED_CALLS, 1, labels)
+    if nbytes:
+        REGISTRY.inc(MODELED_HBM_BYTES, nbytes, labels)
+
+
+def record_gemm(
+    *,
+    scheme: str,
+    count: int,
+    backend: str,
+    impl: str,
+    m: int,
+    k: int,
+    n: int,
+    mesh_shape: Any = None,
+    out_bytes: int = 4,
+) -> None:
+    """Record one emulated GEMM call site.
+
+    Bumps trace-time counters eagerly (the call is being traced or run
+    right now) and stages a per-execution callback for the call/byte
+    counters.  All values — labels, modeled bytes — are static per call,
+    so the callback closure carries them and the device sends nothing.
+    """
+    if not _reg.enabled():
+        return
+    labels = gemm_labels(scheme, backend, impl, m, k, n, mesh_shape)
+    tag = gemm_tag(scheme, count, backend, impl)
+    try:
+        nbytes = modeled_gemm_bytes(scheme, count, m, k, n, out_bytes)
+    except Exception:
+        nbytes = 0
+    REGISTRY.inc(EMULATED_TRACES, 1, labels)
+    if nbytes:
+        REGISTRY.inc(MODELED_BYTES_TRACED, nbytes, {"tag": tag})
+    import jax
+
+    jax.debug.callback(functools.partial(_bump_gemm, labels, nbytes))
+
+
+def _bump_collective(labels: Mapping[str, str], nbytes: int) -> None:
+    REGISTRY.inc(MODELED_COLLECTIVE_BYTES, nbytes, labels)
+
+
+def record_collective(kind: str, mesh_shape: Any, nbytes_per_device: int) -> None:
+    """Stage a per-execution modeled-collective-bytes bump.
+
+    Called from inside a ``shard_map`` body, the callback fires once per
+    shard, so the counter sums per-device bytes across the mesh.
+    """
+    if not _reg.enabled() or not nbytes_per_device:
+        return
+    labels = {
+        "kind": kind,
+        "mesh_shape": mesh_label(mesh_shape),
+        "site": current_site(),
+    }
+    import jax
+
+    jax.debug.callback(
+        functools.partial(_bump_collective, labels, int(nbytes_per_device))
+    )
+
+
+def record_event(name: str, labels: Mapping[str, Any] | None = None,
+                 value: float = 1) -> None:
+    """Eager trace-time counter bump, gated on :func:`enabled`."""
+    if not _reg.enabled():
+        return
+    REGISTRY.inc(name, value, labels)

@@ -1,0 +1,26 @@
+"""Profiler trace annotations for emulation sites.
+
+Every fused kernel launch and XLA-expansion site runs under a
+``jax.named_scope`` named ``emugemm/<scheme>-<p|m><count>/<backend>/<impl>``.
+The scope becomes part of the ``op_name`` metadata XLA attaches to every op
+lowered inside it, so profiler timelines and compiled-HLO dumps attribute
+time/bytes per emulation site — ``utils.perf_probe --by-emulation-site``
+groups on exactly these tags.
+
+Scopes are pure trace metadata: they change no numerics and cost nothing at
+run time, so they are applied unconditionally (not gated on
+``telemetry.enabled()``).
+"""
+
+from __future__ import annotations
+
+from typing import ContextManager
+
+from repro.telemetry.record import gemm_tag
+
+
+def gemm_scope(scheme: str, count: int, backend: str, impl: str) -> ContextManager[None]:
+    """``jax.named_scope`` for one emulated-GEMM lowering site."""
+    import jax
+
+    return jax.named_scope(gemm_tag(scheme, count, backend, impl))

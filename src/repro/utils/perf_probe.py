@@ -44,9 +44,28 @@ def compile_cell(arch_id, shape_name, gemm="native", multi=False):
                           arch.input_specs(shape)["tokens"], 0).compile()
 
 
-def attribute(txt, top=20):
-    """Collective bytes per (opcode, op_name tag), trip-count scaled."""
-    g = roofline.parse_hlo(txt)
+# Telemetry scope tags carry load-bearing digits (emugemm/ozaki1-p4/...):
+# the generic digit-stripping normalization below must not turn them into
+# the ambiguous "emugemm/ozaki-p/...".
+_EMUTAG_RE = re.compile(r"emugemm/[^/\s\"]+/[^/\s\"]+/[^/\s\"]+")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def normalize_tag(tag):
+    """Collapse shape suffixes / layer indices so per-layer duplicates
+    fold into one row, while preserving the digits inside emugemm scope
+    tags (p-count, moduli count — `ozaki1-p4` vs `ozaki1-p3` are
+    different kernels, not different layers)."""
+    m = _EMUTAG_RE.search(tag)
+    strip = lambda s: re.sub(r"\[[^\]]*\]|\d+", "", s)
+    if m is None:
+        return strip(tag)[:110]
+    return (strip(tag[:m.start()]) + m.group(0)
+            + strip(tag[m.end():]))[:110]
+
+
+def _comp_multipliers(g):
+    """Trip-count multiplier of every computation reachable from entry."""
     comps = g["comps"]
     mult = {g["entry"]: 1.0}
     order = [g["entry"]]
@@ -59,12 +78,17 @@ def attribute(txt, top=20):
                 mult[child] = mult.get(child, 0.0) + mult[n] * m
                 if child not in order:
                     order.append(child)
+    return mult
+
+
+def attribute(txt, top=20):
+    """Collective bytes per (opcode, op_name tag), trip-count scaled."""
+    mult = _comp_multipliers(roofline.parse_hlo(txt))
     # per-line attribution pass
-    hdr = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
     rows = collections.Counter()
     cur = None
     for line in txt.splitlines():
-        h = hdr.match(line)
+        h = _HDR_RE.match(line)
         if h:
             cur = h.group(1)
             continue
@@ -79,10 +103,62 @@ def attribute(txt, top=20):
         if opcode == "all-reduce":
             nbytes *= 2
         meta = re.search(r'op_name="([^"]+)"', line)
-        tag = meta.group(1) if meta else "?"
-        tag = re.sub(r"\[[^\]]*\]|\d+", "", tag)[:110]
+        tag = normalize_tag(meta.group(1)) if meta else "?"
         rows[(opcode, tag)] += nbytes
     return rows.most_common(top)
+
+
+def attribute_emulation(txt):
+    """HBM-proxy and collective bytes per emugemm scope tag.
+
+    Walks the compiled HLO once, mirrors roofline.parse_hlo's memory
+    accounting (2x result bytes per non-trivial op, plus operand bytes
+    for dot/custom-call), and credits each op whose op_name metadata
+    carries an ``emugemm/<scheme>-<pN|mN>/<backend>/<impl>`` scope to
+    that tag, trip-count scaled.  Returns
+    {tag: {"mem_bytes": float, "coll_bytes": float, "ops": int}}.
+    """
+    mult = _comp_multipliers(roofline.parse_hlo(txt))
+    out = {}
+    cur = None
+    symtab = {}
+    for line in txt.splitlines():
+        h = _HDR_RE.match(line)
+        if h:
+            cur = h.group(1)
+            symtab = {}
+            continue
+        m = re.match(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+                     r"(\([^)]*\)|\S+)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        name, rtype, opcode = m.groups()
+        symtab[name] = rtype
+        if cur not in mult:
+            continue
+        meta = re.search(r'op_name="([^"]+)"', line)
+        if not meta:
+            continue
+        emu = _EMUTAG_RE.search(meta.group(1))
+        if not emu:
+            continue
+        tag = emu.group(0)
+        scale = mult.get(cur, 0.0)
+        row = out.setdefault(tag, {"mem_bytes": 0.0, "coll_bytes": 0.0,
+                                   "ops": 0})
+        row["ops"] += 1
+        if opcode in roofline._COLLECTIVES:
+            factor = 2.0 if opcode == "all-reduce" else 1.0
+            row["coll_bytes"] += \
+                factor * roofline._all_shape_bytes(rtype) * scale
+        if opcode not in roofline._SKIP_OPS:
+            nbytes = 2 * roofline._all_shape_bytes(rtype)
+            if opcode in ("dot", "custom-call"):
+                ops = re.search(opcode + r"\(([^)]*)\)", line)
+                if ops:
+                    nbytes += roofline._operand_bytes(ops.group(1), symtab)
+            row["mem_bytes"] += nbytes * scale
+    return out
 
 
 def main():
@@ -91,12 +167,49 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--gemm", default="native")
     ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--by-emulation-site", action="store_true",
+                    help="group attributed HLO bytes on emugemm scope "
+                         "tags, next to the analytic traffic model's "
+                         "modeled bytes for the same tags (telemetry is "
+                         "enabled for the compile)")
     args = ap.parse_args()
+    before = {}
+    if args.by_emulation_site:
+        from repro import telemetry
+        from repro.telemetry import record as _tele
+        telemetry.enable()
+        for labels, v in telemetry.REGISTRY.series(
+                _tele.MODELED_BYTES_TRACED):
+            tag = labels.get("tag", "?")
+            before[tag] = before.get(tag, 0.0) + v
     compiled = compile_cell(args.arch, args.shape, args.gemm)
     txt = compiled.as_text()
     total = roofline.analyze_hlo(txt)
     print(f"flops/dev {total['flops']:.3e}  mem {total['mem_bytes']/1e9:.1f}GB"
           f"  coll {total['coll_bytes']/1e9:.1f}GB")
+    if args.by_emulation_site:
+        # Modeled bytes: the per-tag analytic fused-traffic counters the
+        # trace just recorded (delta against any pre-existing state).
+        modeled = {}
+        for labels, v in telemetry.REGISTRY.series(
+                _tele.MODELED_BYTES_TRACED):
+            tag = labels.get("tag", "?")
+            modeled[tag] = modeled.get(tag, 0.0) + v
+        modeled = {t: v - before.get(t, 0.0) for t, v in modeled.items()
+                   if v - before.get(t, 0.0) > 0}
+        attributed = attribute_emulation(txt)
+        tags = sorted(set(modeled) | set(attributed))
+        if not tags:
+            print("no emugemm scopes in this cell (gemm=native?)")
+        else:
+            print(f"{'modeled GB':>12} {'hlo mem GB':>12} "
+                  f"{'hlo coll GB':>12}  tag")
+            for tag in tags:
+                a = attributed.get(tag, {})
+                print(f"{modeled.get(tag, 0.0)/1e9:12.3f} "
+                      f"{a.get('mem_bytes', 0.0)/1e9:12.3f} "
+                      f"{a.get('coll_bytes', 0.0)/1e9:12.3f}  {tag}")
+        return
     for (opcode, tag), b in attribute(txt, args.top):
         print(f"{b/1e9:10.1f} GB  {opcode:20s} {tag}")
 

@@ -611,6 +611,7 @@ EXPECTED_ALL = [
     "precision",
     "prepare_rhs",
     "resolve_config",
+    "telemetry",
     "verify_gemm",
 ]
 

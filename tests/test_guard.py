@@ -406,7 +406,7 @@ def test_guard_skips_prepared_vjp_shortcut():
     a, b = _int_operands(m=8, k=16, n=4)
     assert emulated._cacheable(a, b, cfg)  # cacheable, but...
     guard.stats_clear()
-    out, _ = emulated._fwd(a, b, cfg)
+    out, _ = emulated._fwd(a, b, cfg, "-")
     assert guard.stats().calls == 1  # ...went through the guarded engine
     ref = dispatch.emulated_matmul(a, b, cfg="ozaki1-p4")
     assert jnp.array_equal(out, ref)
