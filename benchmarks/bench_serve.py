@@ -1,0 +1,191 @@
+"""Sustained serving throughput: continuous batching vs the lockstep wave.
+
+  PYTHONPATH=src python benchmarks/bench_serve.py \
+      [--out BENCH_serve.json] [--check-baseline benchmarks/serve_baseline.json]
+
+The cell a single-batch latency number cannot show (docs/serving.md):
+a Poisson arrival trace of ragged requests (mixed prompt and generation
+lengths) is served twice by the same jit-compiled step functions —
+
+  * **continuous** — repro.serving.ContinuousEngine: a retired lane is
+    refilled from the queue on the very next step, chunked prefill rides
+    along with the running decodes;
+  * **wave** — the same engine with ``wave_admission=True``, which
+    reproduces the legacy lockstep schedule: a new cohort is admitted
+    only after every lane of the previous one has drained, so stragglers
+    decode at batch ~1 while finished lanes idle.
+
+Reported per engine: sustained tokens/s (emitted tokens over the serve
+loop's wall time, jit warmup excluded), TTFT p50, eviction count, and
+the fraction of busy steps with a non-empty arrival queue.  With
+--check-baseline the run exits non-zero unless (benchmarks/
+serve_baseline.json gates):
+
+  * continuous tokens/s beats the wave schedule by >= ``speedup_floor``;
+  * the trace is heavy enough to measure sustained throughput — the
+    queue is non-empty for >= ``queue_nonempty_min`` of the continuous
+    engine's busy steps (ISSUE acceptance: >= 80% of steady state);
+  * every request completes, and each request's token stream is
+    bit-identical between the two schedules (per-lane row independence:
+    batching changes throughput, never results).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro import configs  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.serving import ContinuousEngine, Request  # noqa: E402
+
+MAX_STEPS = 50_000   # runaway-loop backstop for either schedule
+
+
+def build_trace(rng: np.random.Generator, vocab: int, requests: int,
+                poisson: float) -> list[tuple[list[int], int, float]]:
+    """(prompt, max_new_tokens, arrival) specs with ragged lengths: the
+    raggedness is what the wave schedule pays for (stragglers decode
+    alone) and the continuous schedule does not."""
+    arrivals = (np.cumsum(rng.exponential(poisson, requests))
+                if poisson > 0 else np.zeros(requests))
+    return [(rng.integers(0, vocab, int(rng.integers(12, 25))).tolist(),
+             int(rng.integers(4, 65)), float(arrivals[i]))
+            for i in range(requests)]
+
+
+def run_engine(arch, mesh, specs, wave: bool, args) -> dict:
+    max_seq = max(len(p) + g for p, g, _ in specs)
+    with mesh:
+        eng = ContinuousEngine(
+            arch, mesh, max_seq=max_seq, max_lanes=args.lanes,
+            chunk=args.chunk, page_size=args.page_size,
+            wave_admission=wave)
+        # Warm both jit shapes (mixed prefill+decode and pure decode)
+        # outside the timed window, then re-zero the clock so the
+        # Poisson arrival offsets (and TTFT) are relative to serving
+        # start, not to the multi-second compile.
+        eng.run([Request(prompt=[1] * args.chunk, max_new_tokens=2,
+                         arrival=0.0)])
+        eng.reset_clock()
+        u0 = eng.utilization()
+        reqs = [Request(prompt=p, max_new_tokens=g, arrival=a)
+                for p, g, a in specs]
+        t0 = time.monotonic()
+        results = eng.run(reqs, max_steps=MAX_STEPS)
+        dt = time.monotonic() - t0
+        u1 = eng.utilization()
+    per_req = [results[r.rid] for r in reqs]
+    tokens = sum(len(r.tokens) for r in per_req)
+    busy = u1["busy_steps"] - u0["busy_steps"]
+    nonempty = u1["queue_nonempty_steps"] - u0["queue_nonempty_steps"]
+    ttfts = [r.ttft for r in per_req if r.ttft is not None]
+    return {
+        "schedule": "wave" if wave else "continuous",
+        "tokens": tokens,
+        "wall_s": dt,
+        "tokens_per_s": tokens / dt,
+        "steps": busy,
+        "queue_nonempty_frac": nonempty / max(1, busy),
+        "evictions": u1["evictions"] - u0["evictions"],
+        "ttft_p50_s": float(np.median(ttfts)) if ttfts else None,
+        "done": all(r.status == "done" for r in per_req),
+        "page_high_water": u1["kv"]["high_water"],
+        "token_streams": [r.tokens for r in per_req],
+    }
+
+
+def check_baseline(report: dict, baseline: dict) -> list[str]:
+    gates = baseline["gates"]
+    errors = []
+    if report["speedup"] < gates["speedup_floor"]:
+        errors.append(f"continuous/wave speedup {report['speedup']:.3f} "
+                      f"< floor {gates['speedup_floor']}")
+    frac = report["continuous"]["queue_nonempty_frac"]
+    if frac < gates["queue_nonempty_min"]:
+        errors.append(f"queue non-empty {frac:.2%} of busy steps "
+                      f"< {gates['queue_nonempty_min']:.0%}: trace too "
+                      "light to measure sustained throughput")
+    if not report["bit_identical"]:
+        errors.append("continuous token streams differ from the wave "
+                      "reference: per-request row independence broken")
+    for sched in ("continuous", "wave"):
+        if not report[sched]["done"]:
+            errors.append(f"{sched}: not every request completed")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--check-baseline", default=None)
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--poisson", type=float, default=0.02,
+                    help="mean interarrival gap (s); the default keeps "
+                         "the queue non-empty through steady state")
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = configs.get_smoke_config(args.arch)
+    mesh = make_host_mesh()
+    rng = np.random.default_rng(args.seed)
+    specs = build_trace(rng, arch.model.vocab, args.requests, args.poisson)
+
+    cells = {}
+    for wave in (True, False):
+        cell = run_engine(arch, mesh, specs, wave, args)
+        cells[cell["schedule"]] = cell
+        print(f"{cell['schedule']:>10}: {cell['tokens']} tokens in "
+              f"{cell['wall_s']:.2f}s = {cell['tokens_per_s']:.1f} tok/s, "
+              f"{cell['steps']} steps, queue non-empty "
+              f"{cell['queue_nonempty_frac']:.0%}, ttft p50 "
+              f"{cell['ttft_p50_s']:.3f}s, evictions "
+              f"{cell['evictions']}", flush=True)
+
+    bit_identical = (cells["continuous"]["token_streams"]
+                     == cells["wave"]["token_streams"])
+    speedup = (cells["continuous"]["tokens_per_s"]
+               / cells["wave"]["tokens_per_s"])
+    report = {
+        "schema": "bench_serve/v1",
+        "trace": {"arch": args.arch, "requests": args.requests,
+                  "poisson": args.poisson, "lanes": args.lanes,
+                  "chunk": args.chunk, "page_size": args.page_size,
+                  "seed": args.seed},
+        "continuous": {k: v for k, v in cells["continuous"].items()
+                       if k != "token_streams"},
+        "wave": {k: v for k, v in cells["wave"].items()
+                 if k != "token_streams"},
+        "speedup": speedup,
+        "bit_identical": bit_identical,
+    }
+    print(f"continuous vs wave: {speedup:.2f}x, bit_identical="
+          f"{bit_identical}")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.check_baseline:
+        with open(args.check_baseline) as f:
+            baseline = json.load(f)
+        errors = check_baseline(report, baseline)
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        if errors:
+            return 1
+        print("baseline check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

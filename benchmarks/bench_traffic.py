@@ -75,6 +75,19 @@ GUARD_OVERHEAD_CEILING = 0.05
 TELEMETRY_SHAPES = GUARD_SHAPES
 TELEMETRY_OVERHEAD_CEILING = 0.02
 
+# Decode-step cells: per-token serving traffic of one decode GEMM
+# x(B, K) @ W(K, N) (traffic.scheme1_decode_*, docs/serving.md).  The
+# prepared weight stream is batch-invariant, so per-token bytes fall
+# ~linearly with the decode batch — the analytic case for the
+# continuous-batching engine keeping its lanes full.  Gated: batch-32
+# amortization >= 24x over batch 1, and the prepared stream beats the
+# per-step XLA re-decomposition >= 4x at every batch.
+DECODE_SHAPES = [(2048, 2048), (2048, 8192), (4096, 4096)]  # (K, N)
+DECODE_BATCHES = (1, 8, 32)
+DECODE_P = 4
+DECODE_AMORTIZATION_FLOOR = 24.0
+DECODE_PREPARED_FLOOR = 4.0
+
 # Shard_map'ed cells: per-shard fused decomposition bytes next to the
 # collective bytes each mesh layout adds (repro.parallel.shard_gemm
 # partitioning; analytic models in traffic.sharded_gemm_traffic).
@@ -289,6 +302,29 @@ def telemetry_disabled_checks() -> dict:
     }
 
 
+def run_decode_cell(k: int, n: int, p: int) -> dict:
+    """Per-token decode-step bytes for one (K, N) projection weight at
+    each serving batch size, per weight-decomposition path."""
+    cell = {"k": k, "n": n, "p": p, "batches": {}}
+    for b in DECODE_BATCHES:
+        cell["batches"][str(b)] = {
+            "per_token_bytes": {
+                path: traffic.scheme1_decode_per_token_bytes(
+                    k, n, b, p, path)
+                for path in ("prepared", "prologue", "xla")},
+            "step_bytes_prepared":
+                traffic.scheme1_decode_step_bytes(k, n, b, p, "prepared"),
+        }
+    cell["amortization"] = {
+        str(b): traffic.decode_batch_amortization(k, n, p, b)
+        for b in DECODE_BATCHES}
+    cell["prepared_vs_xla"] = {
+        str(b): (cell["batches"][str(b)]["per_token_bytes"]["xla"]
+                 / cell["batches"][str(b)]["per_token_bytes"]["prepared"])
+        for b in DECODE_BATCHES}
+    return cell
+
+
 def run_sharded_cell(m: int, k: int, n: int, p: int, layout) -> dict:
     """Per-shard fused bytes + collective bytes of one shard_map'ed GEMM
     on one mesh layout, under both tensor-parallel partitionings."""
@@ -397,7 +433,33 @@ def check_baseline(report: dict, baseline: dict) -> list[str]:
                         f"telemetry {key} {scheme}: telemetry_bytes "
                         f"{cur['telemetry_bytes']} > baseline "
                         f"{old['telemetry_bytes']}")
+    base_d = {(c["k"], c["n"], c["p"]): c
+              for c in baseline.get("decode_cells", ())}
+    for c in report.get("decode_cells", ()):
+        key = (c["k"], c["n"], c["p"])
+        ref = base_d.get(key)
+        if ref is None:
+            continue
+        for b, cur in c["batches"].items():
+            old = ref["batches"].get(b)
+            if old is None:
+                continue
+            for path, val in cur["per_token_bytes"].items():
+                prev = old["per_token_bytes"].get(path)
+                if prev is not None and val > prev:
+                    errors.append(f"decode {key} b={b} {path}: "
+                                  f"{val} > baseline {prev}")
     head = report["acceptance"]
+    if head.get("decode_amortization_b32",
+                DECODE_AMORTIZATION_FLOOR) < DECODE_AMORTIZATION_FLOOR:
+        errors.append(
+            f"decode amortization {head['decode_amortization_b32']:.2f} "
+            f"< {DECODE_AMORTIZATION_FLOOR} at b={max(DECODE_BATCHES)}")
+    if head.get("decode_prepared_vs_xla",
+                DECODE_PREPARED_FLOOR) < DECODE_PREPARED_FLOOR:
+        errors.append(
+            f"decode prepared-vs-xla {head['decode_prepared_vs_xla']:.2f}"
+            f" < {DECODE_PREPARED_FLOOR}")
     for field in ("telemetry_disabled_callback_free",
                   "telemetry_disabled_bit_identical"):
         if head.get(field) is False:
@@ -485,6 +547,18 @@ def main(argv=None) -> int:
     tele_checks = telemetry_disabled_checks()
     print(f"telemetry disabled-mode: {tele_checks}", flush=True)
 
+    cells_d = []
+    for k, n in DECODE_SHAPES:
+        cell = run_decode_cell(k, n, DECODE_P)
+        cells_d.append(cell)
+        b1 = cell["batches"]["1"]["per_token_bytes"]
+        bmax = cell["batches"][str(max(DECODE_BATCHES))]["per_token_bytes"]
+        print(f"decode (K={k},N={n}) p={DECODE_P}: prepared "
+              f"{b1['prepared']/1e6:.2f}MB/token @b1 -> "
+              f"{bmax['prepared']/1e6:.2f}MB/token @b{max(DECODE_BATCHES)} "
+              f"({cell['amortization'][str(max(DECODE_BATCHES))]:.1f}x), "
+              f"vs xla {cell['prepared_vs_xla']['1']:.1f}x", flush=True)
+
     cells_sh = []
     for m, k, n in SHARDED_SHAPES:
         for layout in MESH_LAYOUTS:
@@ -504,13 +578,14 @@ def main(argv=None) -> int:
     p4 = [c for c in cells if c["p"] == 4]
     m6 = [c for c in cells2 if c["p"] == 6]
     report = {
-        "schema": "bench_traffic/v5",
+        "schema": "bench_traffic/v6",
         "uses_per_step": USES,
         "cells": cells,
         "scheme2_cells": cells2,
         "sharded_cells": cells_sh,
         "guard_cells": cells_g,
         "telemetry_cells": cells_t,
+        "decode_cells": cells_d,
         "acceptance": {
             "sharded_column_collective_free": all(
                 c["partitions"]["column"]["collective_bytes_per_device"]
@@ -538,6 +613,11 @@ def main(argv=None) -> int:
                 tele_checks["callback_free_disabled"],
             "telemetry_disabled_bit_identical":
                 tele_checks["bit_identical"],
+            "decode_amortization_b32": min(
+                c["amortization"][str(max(DECODE_BATCHES))]
+                for c in cells_d),
+            "decode_prepared_vs_xla": min(
+                r for c in cells_d for r in c["prepared_vs_xla"].values()),
         },
     }
     with open(args.out, "w") as f:

@@ -209,6 +209,66 @@ def scheme2_decomp_reduction(s: GemmShape, p: int,
 
 
 # ---------------------------------------------------------------------------
+# Decode-step traffic (serving; repro.serving, docs/serving.md).
+#
+# A decode step is a batch of B single-token rows against a full
+# projection weight: x (B, K) @ W (K, N).  The weight stream dominates
+# and is batch-invariant — it is paid once per *step*, not once per
+# token — so the per-token cost is the step cost divided by B.  That
+# quotient is the analytic case for continuous batching: a scheduler
+# that keeps the decode lanes full divides the (huge) weight term by
+# the lane count, while a lockstep engine draining a ragged batch pays
+# it over however few lanes are still live.
+#
+# Weight-side bytes per step, by decomposition path (p int8 slices):
+#
+#   prepared  p*K*N        finished slice stack streamed from the
+#                          PreparedOperand cache (decomposed once per
+#                          session by engine.prepare_params)
+#   prologue  8*K*N        raw fp32 weight stream + scale read,
+#                          re-decomposed in VMEM every step
+#   xla       (8+4p)*K*N   split -> interleave round-trips (the
+#                          scheme1_decomp_xla_bytes model) plus the
+#                          finished-slice GEMM stream
+#
+# The activation side always runs the in-kernel prologue on the fresh
+# tokens (8*B*K: scale read + fp32 stream — activations change every
+# step, so preparing them buys nothing), and the logits row write adds
+# out_bytes*B*N.
+# ---------------------------------------------------------------------------
+
+_DECODE_WEIGHT_PATHS = ("prepared", "prologue", "xla")
+
+
+def scheme1_decode_step_bytes(k: int, n: int, batch: int, p: int,
+                              path: str = "prepared",
+                              out_bytes: int = 4) -> int:
+    """HBM bytes of one decode-step GEMM x(B, K) @ W(K, N)."""
+    if path not in _DECODE_WEIGHT_PATHS:
+        raise ValueError(f"unknown decode weight path {path!r}")
+    weight = {"prepared": p * k * n,
+              "prologue": 8 * k * n,
+              "xla": (8 + 4 * p) * k * n}[path]
+    return weight + 8 * batch * k + out_bytes * batch * n
+
+
+def scheme1_decode_per_token_bytes(k: int, n: int, batch: int, p: int,
+                                   path: str = "prepared",
+                                   out_bytes: int = 4) -> float:
+    """Per-token share of one decode step's bytes at batch ``batch``."""
+    return scheme1_decode_step_bytes(k, n, batch, p, path, out_bytes) / batch
+
+
+def decode_batch_amortization(k: int, n: int, p: int, batch: int,
+                              path: str = "prepared") -> float:
+    """Per-token byte reduction of decoding at ``batch`` vs batch 1 —
+    the weight-stream amortization a full continuous-batching step
+    realizes over a lockstep engine's last straggler lane."""
+    return (scheme1_decode_per_token_bytes(k, n, 1, p, path)
+            / scheme1_decode_per_token_bytes(k, n, batch, p, path))
+
+
+# ---------------------------------------------------------------------------
 # Per-backend hardware peak tables.
 #
 # The paper's headline numbers are fractions of INT8 Tensor Core peak on

@@ -1,11 +1,18 @@
-"""Batched serving engine: continuous prefill + decode over a request queue.
+"""Serve CLI: continuous batching over the fused emulated GEMMs.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-      --requests 8 --prompt-len 48 --gen 16
+      --requests 8 --prompt-len 48 --gen 16 --poisson 0.05
 
-The engine prefises each batch of prompts once, then decodes tokens for
-the whole batch step-by-step against the shared sharded KV cache — the
-serving analogue of the dry-run's decode cells.
+The engine prefills each request in chunks that share a single
+jit-compiled step with the decode lanes (repro.serving, docs/serving.md):
+a paged block-table KV cache replaces the contiguous per-batch slab, an
+admission queue replays a (Poisson) arrival trace, and per-request guard
+retry isolates strict accuracy trips to the offending request. The
+legacy whole-batch engine stays importable as :class:`ServeEngine` and
+runnable via ``--lockstep``.
+
+All engine logic lives in :mod:`repro.serving`; this module only parses
+flags, builds the trace, and prints the summary.
 """
 
 from __future__ import annotations
@@ -13,110 +20,27 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import api, configs, guard
-from repro.core.precision import EmulationAccuracyError
-from repro.kernels import dispatch
+from repro import api, configs
 from repro.launch.mesh import make_host_mesh
-from repro.models import model as M
 from repro.models.common import GemmPolicy
+from repro.serving import ContinuousEngine, LockstepEngine, Request
+
+# Back-compat alias: examples/tests construct the legacy batch engine
+# under its original name.
+ServeEngine = LockstepEngine
 
 
-class ServeEngine:
-    def __init__(self, arch, mesh, max_seq: int, policy=None,
-                 params=None, seed: int = 0, prepare: bool = False,
-                 guard_retries: int = 1, guard_backoff: float = 0.25):
-        self.arch = arch
-        self.mcfg = arch.model
-        self.mesh = mesh
-        self.max_seq = max_seq
-        # The one resolver decides the engine's emulation: an explicit
-        # policy wins, else the ambient repro.emulation scope /
-        # REPRO_EMULATION env configures the whole serving session;
-        # resolve_policy then clamps impls to what this mesh executes.
-        self.policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
-        self.params = params if params is not None else M.init_params(
-            jax.random.PRNGKey(seed), self.mcfg)
-        if prepare:
-            # Once-per-session weight decomposition: every prefill/decode
-            # step streams the finished int8 slices instead of
-            # re-splitting the projection weights (Scheme-I sites only).
-            from repro.kernels import prepared
-            self.params = prepared.prepare_params(self.params, self.policy)
-        self._decode = jax.jit(
-            lambda p, tok, pos, cache: M.forward_decode(
-                p, self.mcfg, tok, pos, cache, self.policy))
-        self._prefill = jax.jit(
-            lambda p, inputs: M.forward_prefill(
-                p, self.mcfg, inputs, self.max_seq, self.policy))
-        # Guard consumption (docs/robustness.md): ``last_guard`` holds the
-        # per-batch delta of the process-wide guard counters; a strict
-        # accuracy trip retries the whole batch with backoff before
-        # surfacing (the request-level analogue of the trainer's
-        # step retry).
-        self.guard_retries = guard_retries
-        self.guard_backoff = guard_backoff
-        self.last_guard: dict[str, int] = {}
-        from repro import telemetry
-        self._telemetry = telemetry
-        self._tracker = telemetry.StepTracker() if telemetry.enabled() \
-            else None
-        self._batches = 0
-
-    def _generate_once(self, prompts: np.ndarray, n_tokens: int):
-        b, s = prompts.shape
-        logits, cache = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(prompts)})
-        out = []
-        tok = jnp.argmax(logits[:, -1:, :self.mcfg.vocab], axis=-1)
-        out.append(tok)
-        for i in range(1, n_tokens):
-            logits, cache = self._decode(self.params, tok, s + i - 1, cache)
-            tok = jnp.argmax(logits[:, -1:, :self.mcfg.vocab], axis=-1)
-            out.append(tok)
-        return np.asarray(jnp.concatenate(out, axis=1))
-
-    def generate(self, prompts: np.ndarray, n_tokens: int,
-                 greedy: bool = True):
-        """prompts: (B, S) int32. Returns (B, n_tokens) generated ids."""
-        before = guard.stats()
-        t0 = time.time()
-        attempt = 0
-        while True:
-            try:
-                toks = self._generate_once(prompts, n_tokens)
-                break
-            except EmulationAccuracyError as e:
-                if attempt >= self.guard_retries:
-                    raise
-                attempt += 1
-                pause = self.guard_backoff * attempt
-                print(f"[serve] guard trip (retry {attempt}/"
-                      f"{self.guard_retries} after {pause:.2f}s): {e}")
-                time.sleep(pause)
-        dt = time.time() - t0
-        after = guard.stats()
-        self.last_guard = {
-            f: getattr(after, f) - getattr(before, f)
-            for f in ("calls", "trips", "escalations", "recoveries",
-                      "native_fallbacks", "masked")}
-        self.last_guard["retries"] = attempt
-        # One telemetry record per served batch (docs/observability.md):
-        # kind="serve", tokens = generated ids this batch, so
-        # tokens_per_s is the decode throughput the operator dashboards.
-        if self._tracker is None and self._telemetry.enabled():
-            self._tracker = self._telemetry.StepTracker()
-        if self._tracker is not None:
-            self._tracker.step_metrics(
-                self._batches, dt, kind="serve",
-                tokens=int(prompts.shape[0]) * int(n_tokens),
-                extra={"requests": int(prompts.shape[0]),
-                       "guard_retries": attempt})
-        self._batches += 1
-        return toks
+def build_trace(rng: np.random.Generator, vocab: int, requests: int,
+                prompt_len: int, gen: int, poisson: float) -> list[Request]:
+    """Uniform-random prompts; exponential(mean=``poisson``) interarrival
+    gaps when ``poisson`` > 0, all-at-once otherwise."""
+    arrivals = (np.cumsum(rng.exponential(poisson, requests))
+                if poisson > 0 else np.zeros(requests))
+    return [Request(prompt=rng.integers(0, vocab, prompt_len).tolist(),
+                    max_new_tokens=gen, arrival=float(arrivals[i]))
+            for i in range(requests)]
 
 
 def main(argv=None):
@@ -132,13 +56,35 @@ def main(argv=None):
                          "env / repro.emulation scope decides")
     ap.add_argument("--prepare", action="store_true",
                     help="decompose Scheme-I projection weights once per "
-                         "session (PreparedOperand serving)")
+                         "session (PreparedOperand serving; the continuous "
+                         "engine also auto-prepares for +cached specs)")
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="continuous-batching lanes (the fixed batch "
+                         "dimension of the serve step)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill tokens per lane per mixed step")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV-cache page size in tokens")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="total KV pages incl. scratch (default: worst "
+                         "case, every lane at max_seq)")
+    ap.add_argument("--poisson", type=float, default=0.0,
+                    help="mean request interarrival gap in seconds "
+                         "(0 = all requests arrive at t=0)")
+    ap.add_argument("--queue-policy", default="fcfs",
+                    choices=("fcfs", "spf"))
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="cap on the summed total tokens of concurrently "
+                         "running requests")
+    ap.add_argument("--lockstep", action="store_true",
+                    help="run the legacy whole-batch engine instead")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus text-format metrics on this "
                          "port (GET /metrics; implies telemetry; 0 picks "
                          "a free port)")
     ap.add_argument("--metrics-jsonl", default=None,
-                    help="write one telemetry record per served batch to "
+                    help="write one telemetry record per serve step to "
                          "this JSONL file (implies telemetry)")
     args = ap.parse_args(argv)
 
@@ -159,22 +105,52 @@ def main(argv=None):
     if not arch.model.causal:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
     mesh = make_host_mesh()
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, arch.model.vocab,
-                           (args.requests, args.prompt_len)).astype(np.int32)
+    rng = np.random.default_rng(args.seed)
+    gemm = api.precision(args.gemm) if args.gemm else None
+    policy = GemmPolicy(default=gemm)
+    max_seq = args.prompt_len + args.gen
+
     with mesh:
-        gemm = api.precision(args.gemm) if args.gemm else None
-        eng = ServeEngine(arch, mesh, args.prompt_len + args.gen,
-                          GemmPolicy(default=gemm),
-                          prepare=args.prepare)
-        t0 = time.time()
-        toks = eng.generate(prompts, args.gen)
-        dt = time.time() - t0
+        if args.lockstep:
+            prompts = rng.integers(0, arch.model.vocab,
+                                   (args.requests, args.prompt_len)
+                                   ).astype(np.int32)
+            eng = LockstepEngine(arch, mesh, max_seq, policy,
+                                 prepare=args.prepare)
+            t0 = time.time()
+            toks = eng.generate(prompts, args.gen)
+            dt = time.time() - t0
+            if eng.last_guard.get("calls"):
+                print("[serve] guard:", eng.last_guard)
+        else:
+            trace = build_trace(rng, arch.model.vocab, args.requests,
+                                args.prompt_len, args.gen, args.poisson)
+            eng = ContinuousEngine(
+                arch, mesh, max_seq=max_seq, policy=policy,
+                prepare=True if args.prepare else None,
+                max_lanes=args.lanes, chunk=args.chunk,
+                page_size=args.page_size, num_pages=args.num_pages,
+                queue_policy=args.queue_policy,
+                token_budget=args.token_budget)
+            t0 = time.time()
+            results = eng.run(trace)
+            dt = time.time() - t0
+            toks = np.asarray([results[r.rid].tokens for r in trace],
+                              dtype=np.int32)
+            util = eng.utilization()
+            ttfts = [results[r.rid].ttft for r in trace
+                     if results[r.rid].ttft is not None]
+            print(f"[serve] {util['steps']} steps, "
+                  f"{util['evictions']} evictions, page high-water "
+                  f"{util['kv']['high_water']}/{util['kv']['num_pages']}, "
+                  f"ttft p50 {np.median(ttfts):.3f}s"
+                  if ttfts else "[serve] no tokens emitted")
+            trips = sum(results[r.rid].guard_trips for r in trace)
+            if trips:
+                print(f"[serve] guard trips (per-request): {trips}")
     print(f"[serve] {args.requests} requests x {args.gen} tokens in "
           f"{dt:.2f}s ({args.requests * args.gen / dt:.1f} tok/s)")
-    if eng.last_guard.get("calls"):
-        print("[serve] guard:", eng.last_guard)
-    print("[serve] sample:", toks[0][:12].tolist())
+    print("[serve] sample:", np.asarray(toks[0][:12]).tolist())
     if sink is not None:
         sink.close()
     if metrics_server is not None:

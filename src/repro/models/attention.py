@@ -308,6 +308,75 @@ def attention_prefill(params, cfg: AttnConfig, x, positions,
     return dense(out.reshape(b, s, -1), params["wo"], policy, "attn"), cache
 
 
+def _store_step(cfg: AttnConfig, cache, k, v, start):
+    """Per-lane chunk store: write k/v (B, C, KVH, D) at each lane's own
+    ``start`` offset (vmapped ``dynamic_update_slice`` — the ragged
+    analogue of :func:`_store`, which writes one shared slot)."""
+    def upd1(buf, val, s):
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, s, 0)
+    upd = jax.vmap(upd1)
+    if cfg.cache_int8:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {"k": upd(cache["k"], kq, start),
+                "v": upd(cache["v"], vq, start),
+                "k_scale": upd(cache["k_scale"], ks, start),
+                "v_scale": upd(cache["v_scale"], vs, start)}
+    return {"k": upd(cache["k"], k, start), "v": upd(cache["v"], v, start)}
+
+
+def attention_step(params, cfg: AttnConfig, x, start, n_new, cache,
+                   policy: GemmPolicy):
+    """Ragged mixed prefill/decode step over a per-lane cache view.
+
+    x: (B, C, D) — each lane's next chunk of (at most C) fresh tokens,
+    left-aligned; start: (B,) int32 absolute position of each lane's
+    first fresh token; n_new: (B,) int32 valid-token count (decode lanes
+    carry 1, prefill lanes up to C, idle lanes 0). cache: the standard
+    {"k","v"[,scales]} dict with *per-lane* (B, L, ...) arrays — the
+    serving engine gathers these views from its paged pools
+    (repro.serving.kv_cache) before calling and scatters the C fresh
+    slots back after.
+
+    Per-lane computation depends only on that lane's tokens and cache
+    rows (columns >= n_new are padding whose outputs callers discard and
+    whose cache writes the engine masks to the scratch page), which is
+    the invariant that makes continuous-batching cohorts bit-identical
+    per request to a lockstep or single-request schedule.
+
+    Only global-attention layers support ragged views: a local-window
+    ring buffer (cache length < positions written) has no per-lane
+    paged layout; the serving engine refuses those architectures.
+    Returns (out (B, C, D), updated cache view).
+    """
+    b, c, _ = x.shape
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)   # (B, C)
+    q, k, v = _project_qkv(params, cfg, x, positions, policy)
+    cache = _store_step(cfg, cache, k, v, start)
+    if cfg.cache_int8:
+        ck = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+        cv = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+    else:
+        ck, cv = cache["k"], cache["v"]
+    clen = ck.shape[1]
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(b, c, kvh, g, cfg.head_dim)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qh, ck,
+                   preferred_element_type=jnp.float32) * cfg.scale
+    # Causal against this lane's own timeline: key rows beyond the lane's
+    # freshly written frontier (start + n_new) exceed every valid q_pos,
+    # so one mask covers history, intra-chunk causality, and padding.
+    k_pos = jnp.arange(clen, dtype=jnp.int32)
+    mask = k_pos[None, None, :] <= positions[:, :, None]          # (B, C, L)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqj,bjkd->bkgqd", w.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, c, cfg.n_heads
+                                               * cfg.head_dim).astype(x.dtype)
+    return dense(out, params["wo"], policy, "attn"), cache
+
+
 def attention_decode(params, cfg: AttnConfig, x, pos, cache,
                      policy: GemmPolicy):
     """One-token step. x: (B, 1, D); pos: scalar int32 (current index).

@@ -140,6 +140,31 @@ def block_prefill(params, kind: str, mcfg: ModelConfig, x, positions,
     raise ValueError(kind)
 
 
+def block_step(params, kind: str, mcfg: ModelConfig, x, start, n_new, cache,
+               policy: GemmPolicy):
+    """Ragged serving step: per-lane chunk positions instead of one shared
+    scalar ``pos`` (repro.serving engine; see attention.attention_step).
+    Only attention-family blocks have a paged per-lane cache layout —
+    rec/ssd state caches are rejected by the serving engine up front."""
+    h = apply_norm(mcfg.norm, params["ln1"], x)
+    if kind == "attn":
+        if mcfg.mla is not None:
+            mix, cache = mla.mla_step(params["mixer"], mcfg.mla,
+                                      mcfg.n_heads, h, start, n_new, cache,
+                                      policy)
+        else:
+            mix, cache = attention.attention_step(
+                params["mixer"], attn_config(mcfg), h, start, n_new, cache,
+                policy)
+        x = x + mix
+        x, _ = _ffn_part(params, mcfg, x, policy)
+        return x, cache
+    raise NotImplementedError(
+        f"block kind {kind!r} has no ragged serving step: rec/ssd state "
+        "caches are lane-bound, not paged (repro.serving supports "
+        "attention-family architectures)")
+
+
 def block_decode(params, kind: str, mcfg: ModelConfig, x, pos, cache,
                  policy: GemmPolicy):
     h = apply_norm(mcfg.norm, params["ln1"], x)

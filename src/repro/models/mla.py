@@ -180,6 +180,48 @@ def _mla_full(params, cfg: MLAConfig, n_heads, x, positions, policy,
     return dense(out, params["wo"], policy, "attn"), c_kv, k_pe
 
 
+def mla_step(params, cfg: MLAConfig, n_heads, x, start, n_new, cache,
+             policy: GemmPolicy):
+    """Ragged mixed prefill/decode step against per-lane latent views.
+
+    The absorbed decode formulation generalized to C queries per lane:
+    x (B, C, D) fresh tokens, start (B,) per-lane absolute position of
+    the first, n_new (B,) valid counts (see attention.attention_step for
+    the padding/masking contract). cache holds per-lane views
+    {c_kv (B, L, lora), k_pe (B, L, rope)} — paged by the serving
+    engine. Returns (out (B, C, D), updated cache view).
+    """
+    b, c, _ = x.shape
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)   # (B, C)
+    q_nope, q_pe = _queries(params, cfg, n_heads, x, positions, policy)
+    c_new, p_new = _latents(params, cfg, x, positions, policy)
+
+    def upd1(buf, val, s):
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, s, 0)
+    upd = jax.vmap(upd1)
+    ck = upd(cache["c_kv"], c_new, start)
+    pk = upd(cache["k_pe"], p_new, start)
+    w_uk, w_uv = _wkv_b_split(params, cfg, n_heads)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+
+    q_abs = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)
+    s_lat = jnp.einsum("bqhc,bsc->bhqs", q_abs, ck,
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bqhr,bsr->bhqs", q_pe, pk,
+                      preferred_element_type=jnp.float32)
+    scores = (s_lat + s_pe) * scale
+    k_pos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+    mask = k_pos[None, None, :] <= positions[:, :, None]          # (B, C, S)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsc->bqhc", w.astype(ck.dtype), ck,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bqhc,chd->bqhd", ctx.astype(x.dtype), w_uv)
+    out = out.reshape(b, c, -1)
+    return dense(out, params["wo"], policy, "attn"), \
+        {"c_kv": ck, "k_pe": pk}
+
+
 def mla_decode(params, cfg: MLAConfig, n_heads, x, pos, cache,
                policy: GemmPolicy):
     """Absorbed one-token step against the latent cache.

@@ -219,5 +219,56 @@ def forward_decode(params, mcfg: ModelConfig, token, pos, cache,
     return logits_from_hidden(params, mcfg, x, policy), new_cache
 
 
+def forward_step(params, mcfg: ModelConfig, tokens, start, n_new, cache,
+                 policy: GemmPolicy = NATIVE_POLICY):
+    """Ragged mixed prefill/decode step for the continuous-batching
+    serving engine (repro.serving).
+
+    tokens: (B, C) int32 — each lane's next chunk of fresh token ids,
+    left-aligned and zero-padded; start: (B,) absolute position of each
+    lane's first fresh token; n_new: (B,) valid counts (decode lanes 1,
+    prefill chunks up to C, idle lanes 0). cache: per-lane cache views
+    (same pytree as :func:`init_cache`) — the engine gathers them from
+    its paged pools and scatters the fresh slots back.
+
+    Returns (logits (B, vocab_padded) at each lane's last valid fresh
+    position, updated cache views). Padding lanes/columns produce
+    well-defined garbage the caller discards; per-lane rows are computed
+    independently, so one lane's result is bit-identical whatever the
+    rest of the cohort is doing — the invariant the serving tests pin.
+    """
+    pat, n_groups, tail = _groups(mcfg)
+    if mcfg.frontend != "none":
+        raise NotImplementedError(
+            "serving steps take token ids only; stub frontends "
+            f"({mcfg.frontend!r}) have no ragged chunk path")
+    b, c = tokens.shape
+    x = jnp.take(params["emb"], tokens, axis=0)
+
+    def group_fn(x, xs):
+        gp, gcache = xs
+        new = {}
+        for j, kind in enumerate(pat):
+            x, new[f"b{j}"] = B.block_step(gp[f"b{j}"], kind, mcfg, x,
+                                           start, n_new, gcache[f"b{j}"],
+                                           policy)
+        return x, new
+
+    new_cache = {}
+    if n_groups:
+        x, new_cache["layers"] = jax.lax.scan(
+            group_fn, x, (params["layers"], cache["layers"]))
+    if tail:
+        new_cache["tail"] = []
+        for j, kind in enumerate(tail):
+            x, cc = B.block_step(params["tail"][j], kind, mcfg, x, start,
+                                 n_new, cache["tail"][j], policy)
+            new_cache["tail"].append(cc)
+    idx = jnp.clip(n_new - 1, 0, c - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B, 1, D)
+    logits = logits_from_hidden(params, mcfg, x_last, policy)
+    return logits[:, 0], new_cache
+
+
 def param_count(params) -> int:
     return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))

@@ -1,0 +1,37 @@
+"""repro.serving — continuous-batching inference over emulated GEMMs.
+
+The serving analogue of the training stack (docs/serving.md): an async
+request queue with admission/eviction policy, a paged block-table KV
+cache, and a scheduler that interleaves chunked prefill with decode so
+one jit-compiled step shape serves mixed traffic.
+
+    from repro.serving import ContinuousEngine, Request
+
+    eng = ContinuousEngine(arch, mesh, max_seq=256, max_lanes=4,
+                           chunk=16, page_size=16)
+    results = eng.run([Request(prompt, max_new_tokens=32, arrival=t)
+                       for t, prompt in trace])
+
+``python -m repro.launch.serve`` is the CLI front-end.
+"""
+
+from repro.serving.engine import (ContinuousEngine, LockstepEngine,
+                                  RequestResult)
+from repro.serving.kv_cache import SCRATCH_PAGE, PageAllocator, PagedKVCache
+from repro.serving.queue import Request, RequestQueue, RequestState
+from repro.serving.scheduler import ScheduleConfig, Scheduler, StepPlan
+
+__all__ = [
+    "ContinuousEngine",
+    "LockstepEngine",
+    "PageAllocator",
+    "PagedKVCache",
+    "Request",
+    "RequestQueue",
+    "RequestResult",
+    "RequestState",
+    "SCRATCH_PAGE",
+    "ScheduleConfig",
+    "Scheduler",
+    "StepPlan",
+]

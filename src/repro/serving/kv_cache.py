@@ -1,0 +1,269 @@
+"""Paged KV cache: fixed-size pages, free-list allocator, block tables.
+
+The lockstep engine keys each request to a contiguous ``(B, max_seq, ...)``
+cache slab, so memory is reserved for the worst case and a finished lane's
+slab is stranded until the whole batch drains. Here the per-lane sequence
+axis is virtual: every model cache leaf is re-laid-out into a **pool**
+whose token axis is ``num_pages * page_size`` physical slots, and each
+request owns an ordered list of pages recorded in a block table. The
+jitted serving step then
+
+  gather  — block table -> contiguous per-lane *views* (the exact pytree
+            :func:`repro.models.model.init_cache` would produce), fed
+            unchanged to ``forward_step``;
+  scatter — the chunk of freshly written slots copied back from the views
+            into the pools at ``table[pos // page] * page + pos % page``.
+
+Page 0 is a reserved scratch page that is never allocated: padded block
+table entries and out-of-range/invalid token writes all land there, so
+garbage can never corrupt a live request's pages (scratch reads are
+always masked off by the causal mask, since they sit past every valid
+query position or belong to no lane).
+
+Pool layout is discovered, not hard-coded: the batch and sequence axes of
+every cache leaf are found by diffing ``jax.eval_shape(init_cache, ...)``
+at two batch sizes and two sequence lengths. A leaf with no sequence
+axis (rec/ssd recurrent state, window rings) cannot be paged, and the
+constructor refuses the architecture up front.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+SCRATCH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeafAxes:
+    batch: int   # batch axis index in the per-lane view layout
+    seq: int     # sequence axis index in the per-lane view layout
+
+
+def cache_leaf_axes(mcfg: ModelConfig):
+    """Locate (batch, seq) axes of every ``init_cache`` leaf by shape
+    differencing. Raises NotImplementedError for unpageable leaves."""
+    pb, ps = 2, 64
+    base = jax.eval_shape(lambda: M.init_cache(mcfg, pb, ps))
+    bdiff = jax.eval_shape(lambda: M.init_cache(mcfg, pb + 1, ps))
+    sdiff = jax.eval_shape(lambda: M.init_cache(mcfg, pb, ps + 8))
+
+    def locate(a, b, c):
+        b_ax = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        s_ax = [i for i, (x, y) in enumerate(zip(a.shape, c.shape)) if x != y]
+        if len(s_ax) != 1:
+            raise NotImplementedError(
+                f"cache leaf {a.shape} has no sequence axis — its state is "
+                "lane-bound (rec/ssd/window ring) and cannot be paged; "
+                "repro.serving supports attention-family caches only")
+        if len(b_ax) != 1 or b_ax[0] != s_ax[0] - 1:
+            raise NotImplementedError(
+                f"cache leaf {a.shape}: expected the batch axis immediately "
+                f"before the sequence axis, found batch={b_ax} seq={s_ax}")
+        return _LeafAxes(batch=b_ax[0], seq=s_ax[0])
+
+    return jax.tree.map(locate, base, bdiff, sdiff), base
+
+
+class PageAllocator:
+    """Free-list page allocator over ``num_pages`` physical pages.
+
+    Page 0 (scratch) is reserved at construction. Allocation is
+    all-or-nothing per request; ownership is tracked so double-frees,
+    foreign frees, and leaks are hard errors rather than silent
+    corruption."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least one page beyond scratch")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> low pages
+        self._owner: dict[int, int] = {}                 # page -> rid
+        self.high_water = 0
+        self.alloc_failures = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._owner)
+
+    def alloc(self, n: int, rid: int) -> list[int] | None:
+        """n pages for request ``rid``, or None (no partial grants)."""
+        if n < 0:
+            raise ValueError("negative page count")
+        if n > len(self._free):
+            self.alloc_failures += 1
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = rid
+        self.high_water = max(self.high_water, len(self._owner))
+        return pages
+
+    def free(self, pages: list[int], rid: int) -> None:
+        for p in pages:
+            if p == SCRATCH_PAGE:
+                raise ValueError("attempt to free the scratch page")
+            owner = self._owner.get(p)
+            if owner is None:
+                raise ValueError(f"double free of page {p}")
+            if owner != rid:
+                raise ValueError(
+                    f"request {rid} freeing page {p} owned by {owner}")
+            del self._owner[p]
+            self._free.append(p)
+
+    def owned_by(self, rid: int) -> list[int]:
+        return [p for p, o in self._owner.items() if o == rid]
+
+    def check_leaks(self, live_rids: set[int]) -> None:
+        leaked = {p: o for p, o in self._owner.items() if o not in live_rids}
+        if leaked:
+            raise AssertionError(f"leaked pages (page -> rid): {leaked}")
+
+    def stats(self) -> dict:
+        return {"num_pages": self.num_pages, "used": self.used_pages,
+                "free": self.free_pages, "high_water": self.high_water,
+                "alloc_failures": self.alloc_failures,
+                "occupancy": self.used_pages / max(1, self.num_pages - 1)}
+
+
+class PagedKVCache:
+    """Pools + block tables for one serving session.
+
+    Host side (numpy): per-request page lists via :class:`PageAllocator`
+    and block-table assembly. Device side (traced): :meth:`gather` /
+    :meth:`scatter`, pure functions of the pools and an int32 block-table
+    array, safe to call inside jit."""
+
+    def __init__(self, mcfg: ModelConfig, *, page_size: int, num_pages: int,
+                 max_seq: int, chunk: int):
+        if page_size < 1 or chunk < 1:
+            raise ValueError("page_size and chunk must be >= 1")
+        self.mcfg = mcfg
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_seq = max_seq
+        self.chunk = chunk
+        # Every dynamic_update/slice at ``start`` with length up to
+        # ``chunk`` must stay in-bounds (lax clamps silently otherwise,
+        # desyncing store and scatter positions), so views cover
+        # max start (max_seq - 1) + chunk tokens.
+        self.view_pages = math.ceil((max_seq - 1 + chunk) / page_size)
+        self.view_tokens = self.view_pages * page_size
+        self.allocator = PageAllocator(num_pages)
+        self._tables: dict[int, list[int]] = {}    # rid -> ordered pages
+        self._axes, self._leaf_shapes = cache_leaf_axes(mcfg)
+
+    # ---- host-side page accounting -------------------------------------
+
+    def pages_needed(self, total_tokens: int) -> int:
+        return math.ceil(total_tokens / self.page_size)
+
+    def ensure(self, rid: int, total_tokens: int) -> bool:
+        """Grow ``rid``'s page list to cover ``total_tokens``; False if
+        the allocator cannot satisfy it (caller keeps prior pages)."""
+        have = self._tables.get(rid, [])
+        need = self.pages_needed(total_tokens) - len(have)
+        if need <= 0:
+            return True
+        if need > self.view_pages - len(have):
+            return False            # would overflow the block-table width
+        got = self.allocator.alloc(need, rid)
+        if got is None:
+            return False
+        self._tables[rid] = have + got
+        return True
+
+    def release(self, rid: int) -> None:
+        pages = self._tables.pop(rid, [])
+        if pages:
+            self.allocator.free(pages, rid)
+
+    def table_row(self, rid: int) -> np.ndarray:
+        """(view_pages,) int32, padded with the scratch page."""
+        row = np.full((self.view_pages,), SCRATCH_PAGE, dtype=np.int32)
+        pages = self._tables.get(rid, [])
+        row[:len(pages)] = pages
+        return row
+
+    def tables_for(self, rids: list[int | None]) -> jnp.ndarray:
+        """(len(rids), view_pages) block table; None lanes -> all-scratch."""
+        rows = [self.table_row(r) if r is not None
+                else np.full((self.view_pages,), SCRATCH_PAGE, np.int32)
+                for r in rids]
+        return jnp.asarray(np.stack(rows))
+
+    def live_rids(self) -> set[int]:
+        return set(self._tables)
+
+    def stats(self) -> dict:
+        return self.allocator.stats()
+
+    # ---- device-side pools ---------------------------------------------
+
+    def init_pools(self):
+        t = self.num_pages * self.page_size
+
+        def mk(leaf, ax):
+            sh = list(leaf.shape)
+            sh[ax.seq] = t
+            del sh[ax.batch]
+            return jnp.zeros(tuple(sh), leaf.dtype)
+
+        return jax.tree.map(mk, self._leaf_shapes, self._axes)
+
+    def gather(self, pools, tables):
+        """Pools + (B, view_pages) tables -> per-lane contiguous views in
+        the exact ``init_cache`` pytree layout. Traced-safe."""
+        ps = self.page_size
+        b = tables.shape[0]
+        flat = (tables[:, :, None] * ps
+                + jnp.arange(ps, dtype=jnp.int32)[None, None, :]
+                ).reshape(b, -1)                       # (B, view_tokens)
+
+        def g(pool, ax):
+            return jnp.take(pool, flat, axis=ax.seq - 1)
+
+        return jax.tree.map(g, pools, self._axes)
+
+    def scatter(self, pools, tables, views, start, n_new, chunk: int):
+        """Copy each lane's freshly written view slots
+        ``[start, start + chunk)`` back into the pools. Columns past
+        ``n_new`` (and any position not backed by an allocated page) land
+        on the scratch page. Traced-safe; ``chunk`` is static."""
+        ps = self.page_size
+        cols = jnp.arange(chunk, dtype=jnp.int32)
+        pos = start[:, None] + cols[None, :]                     # (B, C)
+        valid = cols[None, :] < n_new[:, None]
+        pidx = jnp.clip(pos // ps, 0, tables.shape[1] - 1)
+        page = jnp.take_along_axis(tables, pidx, axis=1)
+        dest = jnp.where(valid & (page != SCRATCH_PAGE),
+                         page * ps + pos % ps, cols[None, :] % ps)
+        flat = dest.reshape(-1)                                  # (B*C,)
+
+        def s(pool, view, ax):
+            def one(v, st):        # v: view leaf minus its batch axis
+                return jax.lax.dynamic_slice_in_dim(v, st, chunk,
+                                                    axis=ax.seq - 1)
+            fresh = jax.vmap(one, in_axes=(ax.batch, 0),
+                             out_axes=ax.batch)(view, start)
+            sh = fresh.shape       # (..., B, C, ...) with B at ax.batch
+            merged = fresh.reshape(sh[:ax.batch]
+                                   + (sh[ax.batch] * sh[ax.seq],)
+                                   + sh[ax.seq + 1:])
+            idx = (slice(None),) * (ax.seq - 1) + (flat,)
+            return pool.at[idx].set(merged)
+
+        return jax.tree.map(s, pools, views, self._axes)

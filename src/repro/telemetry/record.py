@@ -52,6 +52,17 @@ MODELED_COLLECTIVE_BYTES = "repro_modeled_collective_bytes_total"
 STEP_SECONDS = "repro_step_seconds"                    # histogram
 STEP_TOKENS_PER_S = "repro_step_tokens_per_s"          # gauge
 
+# Continuous-batching serve engine (repro.serving; docs/serving.md).
+SERVE_QUEUE_DEPTH = "repro_serve_queue_depth"          # gauge, per step
+SERVE_PAGE_OCCUPANCY = "repro_serve_page_occupancy"    # gauge, 0..1
+SERVE_LANES_ACTIVE = "repro_serve_lanes_active"        # gauge, per step
+SERVE_TOKENS = "repro_serve_tokens_total"              # counter, kind label
+SERVE_REQUESTS = "repro_serve_requests_total"          # counter, outcome label
+SERVE_EVICTIONS = "repro_serve_evictions_total"        # counter
+SERVE_GUARD_TRIPS = "repro_serve_guard_trips_total"    # counter, per request
+SERVE_TTFT_SECONDS = "repro_serve_ttft_seconds"        # histogram
+SERVE_TPOT_SECONDS = "repro_serve_tpot_seconds"        # histogram
+
 enabled = _reg.enabled
 
 _tls = threading.local()

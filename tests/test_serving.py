@@ -1,0 +1,467 @@
+"""Continuous-batching serve engine: allocator, paged cache, scheduler,
+and end-to-end per-request bit-identity (src/repro/serving).
+
+The engine's load-bearing invariant is per-lane row independence: a
+request's tokens must be bit-identical whatever cohort, chunking, or
+eviction history the scheduler produced. The model-level tests here pin
+that by comparing the continuous engine against its own wave-admission
+(lockstep) schedule. The allocator/scheduler tests are pure host-side
+properties: no page leaked, no double-free, no request starved.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.core.precision import EmulationAccuracyError
+from repro.models import model as M
+from repro.launch.mesh import make_host_mesh
+from repro.serving import (ContinuousEngine, PageAllocator, PagedKVCache,
+                           Request, RequestQueue, ScheduleConfig, Scheduler,
+                           SCRATCH_PAGE)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator.
+# ---------------------------------------------------------------------------
+
+class TestPageAllocator:
+    def test_scratch_page_reserved(self):
+        a = PageAllocator(num_pages=4)
+        got = a.alloc(3, rid=1)
+        assert got is not None and SCRATCH_PAGE not in got
+        assert a.alloc(1, rid=2) is None       # exhausted (3 usable)
+        assert a.alloc_failures == 1
+
+    def test_all_or_nothing(self):
+        a = PageAllocator(num_pages=5)
+        assert a.alloc(2, rid=1) is not None
+        assert a.alloc(3, rid=2) is None       # only 2 left: no partials
+        assert a.free_pages == 2
+
+    def test_double_free_and_foreign_free_raise(self):
+        a = PageAllocator(num_pages=4)
+        pages = a.alloc(2, rid=1)
+        a.free(pages[:1], rid=1)
+        with pytest.raises(ValueError, match="double free"):
+            a.free(pages[:1], rid=1)
+        with pytest.raises(ValueError, match="owned by"):
+            a.free(pages[1:], rid=2)
+        with pytest.raises(ValueError, match="scratch"):
+            a.free([SCRATCH_PAGE], rid=1)
+
+    def test_leak_check(self):
+        a = PageAllocator(num_pages=4)
+        a.alloc(2, rid=7)
+        a.check_leaks({7})
+        with pytest.raises(AssertionError, match="leaked"):
+            a.check_leaks(set())
+
+
+
+@settings(max_examples=20)
+@given(st.lists(st.integers(min_value=0, max_value=5), min_size=1,
+                max_size=40))
+def test_random_alloc_free_conserves_pages(ops):
+    a = PageAllocator(num_pages=9)
+    held: dict[int, list[int]] = {}
+    for i, n in enumerate(ops):
+        if n == 0 and held:                    # free the oldest holding
+            rid = next(iter(held))
+            a.free(held.pop(rid), rid)
+            continue
+        got = a.alloc(n, rid=i)
+        if got is not None:
+            held[i] = held.get(i, []) + got
+    assert a.used_pages + a.free_pages == 8
+    assert a.used_pages == sum(len(v) for v in held.values())
+    in_use = [p for v in held.values() for p in v]
+    assert len(set(in_use)) == len(in_use)     # no page double-granted
+    a.check_leaks(set(held))
+
+
+# ---------------------------------------------------------------------------
+# Request queue policies.
+# ---------------------------------------------------------------------------
+
+class TestRequestQueue:
+    def _req(self, n, arrival):
+        return Request(prompt=list(range(1, n + 1)), max_new_tokens=2,
+                       arrival=arrival)
+
+    def test_fcfs_orders_by_arrival(self):
+        q = RequestQueue(policy="fcfs")
+        b = q.submit(self._req(3, arrival=2.0))
+        a = q.submit(self._req(9, arrival=1.0))
+        assert q.pop_ready(now=5.0) is a
+        assert q.pop_ready(now=5.0) is b
+        assert q.pop_ready(now=5.0) is None
+
+    def test_not_yet_arrived_is_invisible(self):
+        q = RequestQueue()
+        q.submit(self._req(3, arrival=10.0))
+        assert q.pop_ready(now=1.0) is None
+        assert q.depth(now=1.0) == 0 and q.pending() == 1
+
+    def test_spf_prefers_short_prompts(self):
+        q = RequestQueue(policy="spf", spf_age_limit=100.0)
+        long = q.submit(self._req(20, arrival=0.0))
+        short = q.submit(self._req(2, arrival=1.0))
+        assert q.pop_ready(now=2.0) is short
+        assert q.pop_ready(now=2.0) is long
+
+    def test_spf_age_limit_falls_back_to_fcfs(self):
+        q = RequestQueue(policy="spf", spf_age_limit=5.0)
+        old_long = q.submit(self._req(20, arrival=0.0))
+        q.submit(self._req(2, arrival=6.0))
+        assert q.pop_ready(now=6.0) is old_long   # aged past the valve
+
+    def test_requeue_keeps_arrival_position(self):
+        q = RequestQueue()
+        a = q.submit(self._req(3, arrival=1.0))
+        q.submit(self._req(3, arrival=2.0))
+        first = q.pop_ready(now=3.0)
+        assert first is a
+        q.requeue(first)                          # evicted: same position
+        assert q.pop_ready(now=3.0) is a
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: gather/scatter bit-identity against a contiguous cache.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_arch():
+    return configs.get_smoke_config("olmo-1b")
+
+
+class TestPagedKVCache:
+    def test_rec_arch_refused(self):
+        arch = configs.get_smoke_config("mamba2-780m")
+        with pytest.raises(NotImplementedError, match="sequence axis"):
+            PagedKVCache(arch.model, page_size=4, num_pages=8, max_seq=32,
+                         chunk=4)
+
+    def test_gather_bit_identical_to_contiguous(self, smoke_arch, rng):
+        """Tokens scattered page-by-page gather back exactly equal to a
+        contiguous cache holding the same values — whatever (shuffled)
+        physical pages the allocator handed out."""
+        mcfg = smoke_arch.model
+        kv = PagedKVCache(mcfg, page_size=4, num_pages=20, max_seq=32,
+                          chunk=8)
+        n_tok, lane_count = 13, 2
+        kv.ensure(101, n_tok)
+        kv.ensure(202, n_tok)
+        pools = kv.init_pools()
+        tables = kv.tables_for([101, 202])
+
+        # Contiguous reference: random values for every (lane, token).
+        ref = jax.tree.map(
+            lambda leaf: jnp.asarray(
+                rng.standard_normal(leaf.shape).astype(leaf.dtype)
+                if jnp.issubdtype(leaf.dtype, jnp.floating) else
+                rng.integers(-100, 100, leaf.shape).astype(leaf.dtype)),
+            jax.eval_shape(lambda: M.init_cache(mcfg, lane_count,
+                                                kv.view_tokens)))
+
+        chunk = kv.chunk
+        for start in range(0, n_tok, chunk):
+            n = min(chunk, n_tok - start)
+            starts = np.full((lane_count,), start, np.int32)
+            n_new = np.full((lane_count,), n, np.int32)
+            pools = kv.scatter(pools, tables, ref, jnp.asarray(starts),
+                               jnp.asarray(n_new), chunk)
+        views = kv.gather(pools, tables)
+
+        def cut(leaf, ax):
+            sl = [slice(None)] * leaf.ndim
+            sl[ax.seq] = slice(0, n_tok)
+            return leaf[tuple(sl)]
+
+        for got, want, ax in zip(jax.tree.leaves(views),
+                                 jax.tree.leaves(ref),
+                                 jax.tree.leaves(kv._axes)):
+            np.testing.assert_array_equal(np.asarray(cut(got, ax)),
+                                          np.asarray(cut(want, ax)))
+
+    def test_invalid_writes_land_on_scratch(self, smoke_arch):
+        """Padding columns and unbacked positions must never touch an
+        allocated page: they are routed to the scratch page."""
+        mcfg = smoke_arch.model
+        kv = PagedKVCache(mcfg, page_size=4, num_pages=8, max_seq=16,
+                          chunk=4)
+        kv.ensure(1, 4)
+        pools = kv.init_pools()
+        tables = kv.tables_for([1])
+        ones = jax.tree.map(
+            lambda leaf: jnp.ones(leaf.shape, leaf.dtype),
+            jax.eval_shape(lambda: M.init_cache(mcfg, 1, kv.view_tokens)))
+        # n_new = 0: the whole chunk is padding.
+        pools = kv.scatter(pools, tables, ones, jnp.zeros((1,), jnp.int32),
+                           jnp.zeros((1,), jnp.int32), 4)
+        page = kv.table_row(1)[0]
+        for leaf, ax in zip(jax.tree.leaves(pools),
+                            jax.tree.leaves(kv._axes)):
+            tok_ax = ax.seq - 1
+            sl = [slice(None)] * leaf.ndim
+            sl[tok_ax] = slice(page * 4, page * 4 + 4)
+            assert not np.asarray(leaf[tuple(sl)]).any(), \
+                "padding write leaked onto an allocated page"
+
+
+# ---------------------------------------------------------------------------
+# Scheduler properties (no model: fake deterministic sampling).
+# ---------------------------------------------------------------------------
+
+def _drive(sched: Scheduler, max_steps: int = 2000):
+    """Run the scheduler with sampling that is a pure function of
+    (rid, #generated), so eviction replays reproduce tokens exactly."""
+    steps = 0
+    while sched.has_work():
+        assert steps < max_steps, "scheduler failed to drain (starvation?)"
+        plan = sched.plan(now=float(steps))
+        if plan is not None:
+            sampled = np.zeros((sched.cfg.max_lanes,), np.int32)
+            for lane, state in enumerate(sched.lanes):
+                if state is not None and plan.emit[lane]:
+                    sampled[lane] = (state.rid * 31
+                                     + len(state.generated)) % 97
+            sched.commit(plan, sampled, now=float(steps))
+        sched.check_invariants()
+        steps += 1
+    return steps
+
+
+def _mk_sched(*, lanes=2, chunk=4, page_size=4, num_pages=8,
+              max_seq=32, policy="fcfs", token_budget=None):
+    arch = configs.get_smoke_config("olmo-1b")
+    kv = PagedKVCache(arch.model, page_size=page_size,
+                      num_pages=num_pages, max_seq=max_seq, chunk=chunk)
+    cfg = ScheduleConfig(max_lanes=lanes, chunk=chunk,
+                         token_budget=token_budget, policy=policy)
+    return Scheduler(cfg, kv)
+
+
+@settings(max_examples=15)
+@given(st.data())
+def test_bounded_trace_drains_without_leaks(data):
+    """Property: any bounded trace completes — every page freed, every
+    fitting request served, no starvation under either queue policy."""
+    sched = _mk_sched(policy=data.draw(st.sampled_from(["fcfs", "spf"])))
+    n = data.draw(st.integers(min_value=1, max_value=8))
+    reqs = []
+    for i in range(n):
+        plen = data.draw(st.integers(min_value=1, max_value=24))
+        gen = data.draw(st.integers(min_value=1, max_value=6))
+        arr = float(data.draw(st.integers(min_value=0, max_value=20)))
+        reqs.append(sched.queue.submit(
+            Request(prompt=list(range(1, plen + 1)),
+                    max_new_tokens=gen, arrival=arr)))
+    _drive(sched)
+    assert sched.kv.allocator.used_pages == 0              # no page leaked
+    for s in reqs:
+        assert s.status in ("done", "failed")
+        if s.status == "done":
+            assert len(s.generated) == s.request.max_new_tokens
+        else:         # only over-capacity requests may fail
+            assert not sched._fits_forever(s)
+
+
+class TestSchedulerProperties:
+    def _mk(self, **kw):
+        return _mk_sched(**kw)
+
+    def test_eviction_replay_reproduces_tokens(self):
+        """Starved pools force evictions; re-prefilled requests must
+        finish with the same tokens the no-pressure run produces."""
+        tight = self._mk(lanes=3, num_pages=8)
+        roomy = self._mk(lanes=3, num_pages=64)
+        traces = []
+        for sched in (tight, roomy):
+            reqs = [sched.queue.submit(
+                Request(prompt=list(range(1, 15)), max_new_tokens=5,
+                        arrival=0.0, rid=1000 + i)) for i in range(5)]
+            _drive(sched)
+            traces.append({s.rid: list(s.generated) for s in reqs})
+        assert tight.evictions > 0, "test needs page pressure"
+        assert traces[0] == traces[1]
+
+    def test_token_budget_caps_concurrency(self):
+        sched = self._mk(lanes=4, num_pages=64, token_budget=30)
+        for i in range(6):
+            sched.queue.submit(Request(prompt=list(range(1, 11)),
+                                       max_new_tokens=5, arrival=0.0))
+        steps = 0
+        while sched.has_work():
+            assert steps < 2000
+            load = sum(s.request.total_tokens for s in sched.running())
+            assert load <= 30, f"token budget breached: {load}"
+            plan = sched.plan(now=float(steps))
+            if plan is not None:
+                sampled = np.zeros((4,), np.int32)
+                sched.commit(plan, sampled, now=float(steps))
+            steps += 1
+
+    def test_oversize_request_fails_not_deadlocks(self):
+        sched = self._mk(num_pages=4, max_seq=32)   # 3 usable pages = 12 tok
+        s = sched.queue.submit(Request(prompt=list(range(1, 30)),
+                                       max_new_tokens=4, arrival=0.0))
+        _drive(sched, max_steps=50)
+        assert s.status == "failed"
+        assert sched.kv.allocator.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end engine (real model, smoke config).
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_mesh():
+    return make_host_mesh()
+
+
+def _trace(arch, n, seed=3, max_new=(3, 6)):
+    r = np.random.default_rng(seed)
+    return [Request(prompt=r.integers(1, arch.model.vocab,
+                                      r.integers(4, 20)).tolist(),
+                    max_new_tokens=int(r.integers(*max_new)), arrival=0.0)
+            for _ in range(n)]
+
+
+def _run(arch, mesh, reqs, **kw):
+    with mesh:
+        eng = ContinuousEngine(arch, mesh, max_seq=48, seed=0, **kw)
+        res = eng.run([Request(prompt=q.prompt,
+                               max_new_tokens=q.max_new_tokens,
+                               arrival=q.arrival, rid=q.rid)
+                       for q in reqs], max_steps=4000)
+        eng.sched.check_invariants()
+    return eng, res
+
+
+class TestContinuousEngine:
+    def test_matches_lockstep_reference_bitwise(self, smoke_arch,
+                                                serve_mesh):
+        """The acceptance property: mixed prefill+decode continuous steps
+        are bit-identical per request to the lockstep (wave) schedule."""
+        reqs = _trace(smoke_arch, 5)
+        _, cont = _run(smoke_arch, serve_mesh, reqs, max_lanes=2, chunk=8,
+                       page_size=8)
+        _, wave = _run(smoke_arch, serve_mesh, reqs, max_lanes=2, chunk=8,
+                       page_size=8, wave_admission=True)
+        for q in reqs:
+            assert cont[q.rid].status == "done"
+            assert cont[q.rid].tokens == wave[q.rid].tokens
+
+    def test_chunk_size_does_not_change_tokens(self, smoke_arch,
+                                               serve_mesh):
+        reqs = _trace(smoke_arch, 3, seed=4)
+        _, a = _run(smoke_arch, serve_mesh, reqs, max_lanes=2, chunk=4,
+                    page_size=8)
+        _, b = _run(smoke_arch, serve_mesh, reqs, max_lanes=2, chunk=16,
+                    page_size=8)
+        for q in reqs:
+            assert a[q.rid].tokens == b[q.rid].tokens
+
+    def test_eviction_and_restart_identity(self, smoke_arch, serve_mesh):
+        reqs = _trace(smoke_arch, 5, seed=5)
+        tight, rt = _run(smoke_arch, serve_mesh, reqs, max_lanes=3,
+                         chunk=8, page_size=4, num_pages=10)
+        _, ref = _run(smoke_arch, serve_mesh, reqs, max_lanes=3, chunk=8,
+                      page_size=4, wave_admission=True)
+        assert tight.sched.evictions > 0, "test needs page pressure"
+        for q in reqs:
+            assert rt[q.rid].tokens == ref[q.rid].tokens
+        evicted = [rt[q.rid].evictions for q in reqs]
+        assert sum(evicted) == tight.sched.evictions  # attributed per req
+
+    def test_isolation_replay_reproduces_fast_path(self, smoke_arch,
+                                                   serve_mesh):
+        """Force the guard-retry path on every step: the eager per-lane
+        replay must produce the same tokens as the jitted fast path."""
+        reqs = _trace(smoke_arch, 3, seed=6)
+        _, ref = _run(smoke_arch, serve_mesh, reqs, max_lanes=2, chunk=8,
+                      page_size=8)
+        with serve_mesh:
+            eng = ContinuousEngine(smoke_arch, serve_mesh, max_seq=48,
+                                   seed=0, max_lanes=2, chunk=8,
+                                   page_size=8)
+
+            def tripping(*a, **k):
+                raise EmulationAccuracyError("synthetic trip")
+
+            eng._jit_fns = {c: tripping for c in eng._jit_fns}
+            res = eng.run([Request(prompt=q.prompt,
+                                   max_new_tokens=q.max_new_tokens,
+                                   arrival=0.0, rid=q.rid)
+                           for q in reqs], max_steps=4000)
+        for q in reqs:
+            assert res[q.rid].status == "done"
+            assert res[q.rid].tokens == ref[q.rid].tokens
+
+    def test_guard_failure_scoped_to_offending_request(self, smoke_arch,
+                                                       serve_mesh):
+        """A request whose eager replay keeps raising strict must fail
+        alone: cohort members complete, untouched and untripped."""
+        reqs = _trace(smoke_arch, 3, seed=7)
+        victim_rid = reqs[1].rid
+        with serve_mesh:
+            eng = ContinuousEngine(smoke_arch, serve_mesh, max_seq=48,
+                                   seed=0, max_lanes=2, chunk=8,
+                                   page_size=8, guard_retries=1)
+            jit_orig = dict(eng._jit_fns)
+            eager_orig = dict(eng._step_fns)
+
+            def make_tripping_jit(c):
+                def f(params, pools, tables, tokens, start, n_new):
+                    lanes = [s for s in eng.sched.lanes if s is not None]
+                    if any(s.rid == victim_rid for s in lanes):
+                        raise EmulationAccuracyError("synthetic trip")
+                    return jit_orig[c](params, pools, tables, tokens,
+                                       start, n_new)
+                return f
+
+            def make_failing_eager(c):
+                def f(params, pools, tables, tokens, start, n_new):
+                    nn = np.asarray(n_new)
+                    for lane, s in enumerate(eng.sched.lanes):
+                        if (s is not None and s.rid == victim_rid
+                                and nn[lane] > 0):
+                            raise EmulationAccuracyError("still failing")
+                    return eager_orig[c](params, pools, tables, tokens,
+                                         start, n_new)
+                return f
+
+            eng._jit_fns = {c: make_tripping_jit(c) for c in jit_orig}
+            eng._step_fns = {c: make_failing_eager(c) for c in eager_orig}
+            res = eng.run([Request(prompt=q.prompt,
+                                   max_new_tokens=q.max_new_tokens,
+                                   arrival=0.0, rid=q.rid)
+                           for q in reqs], max_steps=4000)
+        assert res[victim_rid].status == "failed"
+        assert res[victim_rid].guard_trips > 0
+        for q in reqs:
+            if q.rid != victim_rid:
+                assert res[q.rid].status == "done"
+                assert res[q.rid].guard_trips == 0
+
+    def test_serve_telemetry_recorded(self, smoke_arch, serve_mesh):
+        from repro import telemetry
+        telemetry.enable()
+        try:
+            reqs = _trace(smoke_arch, 2, seed=8)
+            _run(smoke_arch, serve_mesh, reqs, max_lanes=2, chunk=8,
+                 page_size=8)
+            text = telemetry.render_prometheus()
+        finally:
+            telemetry.disable()
+        for metric in ("repro_serve_tokens_total",
+                       "repro_serve_requests_total",
+                       "repro_serve_ttft_seconds",
+                       "repro_serve_queue_depth"):
+            assert metric in text, f"missing serve metric {metric}"

@@ -177,3 +177,28 @@ def test_guard_overhead_within_ceiling(scheme, p):
         assert 0.0 < cell["time_ratio"] <= 0.05
         assert 0.0 < cell["bytes_ratio"] <= 0.05
         assert cell["verify_bytes_fused"] < cell["verify_bytes_unfused"]
+
+
+@pytest.mark.parametrize("k,n", [(2048, 2048), (2048, 8192)])
+def test_decode_step_model(k, n):
+    """Decode-step serving traffic (docs/serving.md): the prepared
+    weight stream is batch-invariant, so per-token bytes amortize
+    ~linearly with the decode batch, and the prepared path beats the
+    per-step XLA re-decomposition by (8 + 4p)/p on the weight term."""
+    p = 4
+    for b in (1, 8, 32):
+        step = traffic.scheme1_decode_step_bytes(k, n, b, p, "prepared")
+        assert step == p * k * n + 8 * b * k + 4 * b * n
+        # Exactly the weight term above the batch-scaled act/out terms.
+        assert (traffic.scheme1_decode_step_bytes(k, n, b, p, "xla")
+                - step) == (8 + 3 * p) * k * n
+    amort = traffic.decode_batch_amortization(k, n, p, 32)
+    assert 24.0 <= amort < 32.0    # near-linear, never super-linear
+    per_tok = [traffic.scheme1_decode_per_token_bytes(k, n, b, p)
+               for b in (1, 8, 32)]
+    assert per_tok[0] > per_tok[1] > per_tok[2]
+    ratio = (traffic.scheme1_decode_per_token_bytes(k, n, 1, p, "xla")
+             / per_tok[0])
+    assert 4.0 <= ratio <= (8 + 4 * p) / p
+    with pytest.raises(ValueError):
+        traffic.scheme1_decode_step_bytes(k, n, 1, p, "cached")
