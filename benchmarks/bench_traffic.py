@@ -95,6 +95,17 @@ SHARDED_SHAPES = [(256, 256, 512), (512, 384, 1024), (256, 512, 2048)]
 MESH_LAYOUTS = [(("data", 1), ("model", 8)), (("data", 2), ("model", 4))]
 SHARDED_P = 4
 
+# Strided-batched cells: one (B, bM, bN)-grid fused launch vs the vmap
+# fallback's B per-element launches (traffic.scheme{1,2}_batched_bytes;
+# dispatch.emulated_matmul_batched).  Gated: every cell must show a
+# >= B-fold launch reduction and a >= 2x modeled decomposition-byte
+# reduction over the vmap route; the verify cell checks the batched
+# fused kernels bitwise against the vmapped 2-D reference (interpret
+# mode), both schemes.
+BATCHED_BS = (4, 16)
+BATCHED_SCHEMES = (("ozaki1", 4), ("ozaki2", 6))  # (scheme, p-or-moduli)
+BATCHED_DECOMP_FLOOR = 2.0
+
 
 def _count_ops(hlo_text: str) -> int:
     return sum(1 for line in hlo_text.splitlines()
@@ -347,6 +358,44 @@ def run_sharded_cell(m: int, k: int, n: int, p: int, layout) -> dict:
     return cell
 
 
+def _bit_identity_batched(scheme: str, p: int) -> bool:
+    """The strided-batched fused lowering must match the vmapped 2-D
+    fused reference bitwise (same scales, same kernel body per tile)."""
+    from repro.kernels import dispatch
+    rng = np.random.default_rng(7237 * p + (1 if scheme == "ozaki2" else 0))
+    batch, m, k, n = 4, 64, 96, 128
+
+    def cond(shape):
+        return jnp.asarray(((rng.random(shape) - 0.5)
+                            * np.exp(2.0 * rng.standard_normal(shape)))
+                           .astype(np.float32))
+
+    a, b = cond((batch, m, k)), cond((batch, k, n))
+    cfg = EmulationConfig(scheme=scheme, p=p, backend="gpu")
+    fused = dispatch.emulated_matmul_batched(a, b, cfg=cfg)
+    ref = jax.vmap(lambda x, y: dispatch.emulated_matmul(x, y, cfg=cfg))(a, b)
+    return bool(jnp.array_equal(fused, ref))
+
+
+def run_batched_cell(m: int, k: int, n: int, scheme: str, p: int,
+                     batch: int) -> dict:
+    """Modeled launch counts + HBM bytes of one B-stack, fused vs vmap,
+    with the roofline projection columns for both routes."""
+    s = traffic.GemmShape(m, n, k)
+    model = (traffic.scheme1_batched_bytes if scheme == "ozaki1"
+             else traffic.scheme2_batched_bytes)(s, p, batch)
+    return {
+        "m": m, "k": k, "n": n, "p": p, "scheme": scheme, "batch": batch,
+        "paths": model,
+        "launch_reduction":
+            model["vmap"]["launches"] / model["fused"]["launches"],
+        "decomp_reduction":
+            model["vmap"]["decomp_bytes"] / model["fused"]["decomp_bytes"],
+        "projection": roofline.batched_projected_throughput(
+            m, k, n, batch, p, scheme=scheme, backend="gpu"),
+    }
+
+
 def check_baseline(report: dict, baseline: dict) -> list[str]:
     errors = []
     base = {(c["m"], c["k"], c["n"], c["p"]): c for c in baseline["cells"]}
@@ -433,6 +482,29 @@ def check_baseline(report: dict, baseline: dict) -> list[str]:
                         f"telemetry {key} {scheme}: telemetry_bytes "
                         f"{cur['telemetry_bytes']} > baseline "
                         f"{old['telemetry_bytes']}")
+    base_b = {(c["m"], c["k"], c["n"], c["p"], c["scheme"], c["batch"]): c
+              for c in baseline.get("batched_cells", ())}
+    for c in report.get("batched_cells", ()):
+        key = (c["m"], c["k"], c["n"], c["p"], c["scheme"], c["batch"])
+        if c["launch_reduction"] < c["batch"]:
+            errors.append(
+                f"batched {key}: launch reduction "
+                f"{c['launch_reduction']:.1f} < B={c['batch']}")
+        if c["decomp_reduction"] < BATCHED_DECOMP_FLOOR:
+            errors.append(
+                f"batched {key}: decomp reduction "
+                f"{c['decomp_reduction']:.2f} < {BATCHED_DECOMP_FLOOR}")
+        if c.get("bit_identical") is False:
+            errors.append(f"batched {key}: fused batched lowering not "
+                          "bit-identical to the vmapped 2-D reference")
+        ref = base_b.get(key)
+        if ref is not None:
+            for path in ("fused", "vmap"):
+                cur = c["paths"][path]["total_bytes"]
+                old = ref["paths"][path]["total_bytes"]
+                if cur > old:
+                    errors.append(f"batched {key} {path}: {cur} > "
+                                  f"baseline {old}")
     base_d = {(c["k"], c["n"], c["p"]): c
               for c in baseline.get("decode_cells", ())}
     for c in report.get("decode_cells", ()):
@@ -559,6 +631,27 @@ def main(argv=None) -> int:
               f"({cell['amortization'][str(max(DECODE_BATCHES))]:.1f}x), "
               f"vs xla {cell['prepared_vs_xla']['1']:.1f}x", flush=True)
 
+    cells_b = []
+    batched_bits = {}
+    if not args.no_verify:
+        for scheme, p in BATCHED_SCHEMES:
+            batched_bits[scheme] = _bit_identity_batched(scheme, p)
+        print(f"batched bit-identity (fused vs vmapped 2-D): "
+              f"{batched_bits}", flush=True)
+    for m, k, n in SHAPES:
+        for bsz in BATCHED_BS:
+            for scheme, p in BATCHED_SCHEMES:
+                cell = run_batched_cell(m, k, n, scheme, p, bsz)
+                if batched_bits:
+                    cell["bit_identical"] = batched_bits[scheme]
+                cells_b.append(cell)
+                hw = cell["projection"]["hardware"]
+                print(f"batched ({m},{k},{n}) {scheme} p={p} B={bsz}: "
+                      f"launches {cell['paths']['vmap']['launches']} -> 1, "
+                      f"decomp {cell['decomp_reduction']:.2f}x, proj "
+                      f"speedup H100 "
+                      f"{hw['h100']['projected_speedup']:.2f}x", flush=True)
+
     cells_sh = []
     for m, k, n in SHARDED_SHAPES:
         for layout in MESH_LAYOUTS:
@@ -578,10 +671,11 @@ def main(argv=None) -> int:
     p4 = [c for c in cells if c["p"] == 4]
     m6 = [c for c in cells2 if c["p"] == 6]
     report = {
-        "schema": "bench_traffic/v6",
+        "schema": "bench_traffic/v7",
         "uses_per_step": USES,
         "cells": cells,
         "scheme2_cells": cells2,
+        "batched_cells": cells_b,
         "sharded_cells": cells_sh,
         "guard_cells": cells_g,
         "telemetry_cells": cells_t,
@@ -618,6 +712,12 @@ def main(argv=None) -> int:
                 for c in cells_d),
             "decode_prepared_vs_xla": min(
                 r for c in cells_d for r in c["prepared_vs_xla"].values()),
+            "batched_launch_reduction_ok": all(
+                c["launch_reduction"] >= c["batch"] for c in cells_b),
+            "batched_decomp_reduction_min":
+                min(c["decomp_reduction"] for c in cells_b),
+            "batched_bit_identical":
+                all(c.get("bit_identical", True) for c in cells_b),
         },
     }
     with open(args.out, "w") as f:

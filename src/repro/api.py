@@ -376,7 +376,18 @@ def dot_general(a: jax.Array, b, dimension_numbers, *,
         nb = len(lb)
         a3 = a2.reshape((-1,) + a2.shape[nb:])
         b3 = b2.reshape((-1,) + b2.shape[nb:])
-        out = jax.vmap(lambda x, y: emulated_dot(x, y, cfg2))(a3, b3)
+        from repro.kernels import dispatch as _dispatch  # lazy: pallas
+        if (cfg2.impl in ("auto", "pallas")
+                and _dispatch.batched_fused_eligible(a3, b3, cfg2)):
+            # The canonicalized batched core: free lhs axes fold into M
+            # and the whole (B, M, K) @ (B, K, N) stack runs as ONE
+            # strided-batched fused launch (bit-identical to the vmap
+            # lowering below; see emulated_dot_batched).
+            from repro.core.emulated import emulated_dot_batched
+            a4 = a3.reshape(a3.shape[0], -1, a3.shape[-1])
+            out = emulated_dot_batched(a4, b3, cfg2)
+        else:
+            out = jax.vmap(lambda x, y: emulated_dot(x, y, cfg2))(a3, b3)
     return out.reshape(batch_shape + a_free_shape + b_free_shape)
 
 

@@ -27,6 +27,14 @@ ARCH_IDS = (
 _MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
             for a in ARCH_IDS}
 
+# Emulation-policy variants: the same published architectures with the
+# paper's per-site GEMM emulation specs baked into ``gemm_sites`` (no CLI
+# flags needed). Registered for ``--arch`` lookup but kept out of
+# ARCH_IDS so the full-zoo test/benchmark matrices don't run each dense
+# architecture twice.
+_MODULES["olmo-1b-emu"] = "repro.configs.olmo_1b_emu"
+_MODULES["qwen2-moe-a2.7b-emu"] = "repro.configs.qwen2_moe_a2_7b_emu"
+
 
 def get_config(arch: str) -> ArchConfig:
     if arch not in _MODULES:

@@ -136,6 +136,35 @@ class ArchConfig:
     train: TrainPolicy = TrainPolicy()
     shape_skips: tuple[str, ...] = ()
     skip_reason: str = ""
+    # Per-call-site GEMM emulation specs, e.g.
+    #     (("ffn", "ozaki1-p4+cached"), ("attn_qk", "ozaki2-m6"))
+    # Spec strings use the ``repro.precision`` grammar; the pseudo-site
+    # 'default' sets the policy default. Ships emulation choices with the
+    # config zoo instead of CLI flags — see :meth:`gemm_policy`.
+    gemm_sites: tuple[tuple[str, str], ...] = ()
+
+    def gemm_policy(self):
+        """The :class:`repro.models.common.GemmPolicy` of ``gemm_sites``.
+
+        Each ``(site, spec)`` entry is parsed with :func:`repro.precision`
+        ('ozaki1-p4+cached', 'ozaki2-m6', 'native', ...). 'default' sets
+        the policy default; every other key becomes a per-site override
+        ('attn', 'ffn', 'logits', 'attn_qk', 'attn_av', 'moe_gate',
+        'moe_expert', 'mla_latent', 'ssd_state', ...). An empty table
+        returns the bare ambient-deferring ``GemmPolicy()`` — exactly the
+        policy launchers historically built when no ``--gemm`` was given.
+        """
+        from repro import api
+        from repro.models.common import GemmPolicy
+        default = None
+        overrides = []
+        for site, spec in self.gemm_sites:
+            cfg = api.precision(spec)
+            if site == "default":
+                default = cfg
+            else:
+                overrides.append((site, cfg))
+        return GemmPolicy(default=default, overrides=tuple(overrides))
 
     def shapes(self) -> list[ShapeSpec]:
         out = []

@@ -189,6 +189,53 @@ def emulated_dot(a: jax.Array, b: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Strided-batched contractions: one fused launch over the whole stack.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _emulated_dot_batched(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                          site: str) -> jax.Array:
+    from repro.kernels import dispatch  # lazy: pallas import
+    with telemetry.site_scope(site):
+        return dispatch.emulated_matmul_batched(a, b, cfg=cfg)
+
+
+def _fwd_batched(a, b, cfg, site):
+    return _emulated_dot_batched(a, b, cfg, site), (a, b)
+
+
+def _bwd_batched(cfg, site, res, g):
+    # dA = dC @ B^T and dB = A^T @ dC per batch element, each again ONE
+    # strided-batched emulated launch (swapaxes is a strided view, not a
+    # re-decomposition), optionally at the reduced backward slice count.
+    from repro.kernels import dispatch  # lazy: pallas import
+    a, b = res
+    if cfg.bwd_p and cfg.bwd_p != cfg.p:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, p=cfg.bwd_p)
+    with telemetry.site_scope(site):
+        da = dispatch.emulated_matmul_batched(
+            g, jnp.swapaxes(b, -1, -2), cfg=cfg).astype(a.dtype)
+        db = dispatch.emulated_matmul_batched(
+            jnp.swapaxes(a, -1, -2), g, cfg=cfg).astype(b.dtype)
+    return da, db
+
+
+_emulated_dot_batched.defvjp(_fwd_batched, _bwd_batched)
+
+
+def emulated_dot_batched(a: jax.Array, b: jax.Array,
+                         cfg: EmulationConfig = NATIVE) -> jax.Array:
+    """a: (..., B, M, K) @ b: (..., B, K, N), matching leading axes ->
+    (..., B, M, N) as ONE strided-batched fused launch where the selected
+    backend advertises ``BackendCapabilities.batched`` (the dispatcher
+    vmaps the 2-D kernel elsewhere).  Differentiable: both backward
+    GEMMs re-enter the batched emulated path.
+    """
+    return _emulated_dot_batched(a, b, cfg, telemetry.current_site())
+
+
+# ---------------------------------------------------------------------------
 # Pre-prepared weights: the once-per-step hoist under gradient accumulation.
 # ---------------------------------------------------------------------------
 

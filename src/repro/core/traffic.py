@@ -269,6 +269,80 @@ def decode_batch_amortization(k: int, n: int, p: int, batch: int,
 
 
 # ---------------------------------------------------------------------------
+# Strided-batched contractions (dispatch.emulated_matmul_batched).
+#
+# A stack of B same-shape GEMMs can run two ways:
+#
+#   fused  — ONE pallas_call over a (B, bM, bN) grid with strided operand
+#            indexing (gpu backend, BackendCapabilities.batched): every
+#            batch element decomposes in the kernel prologue, so the
+#            decomposition side is B x the prologue model (raw fp32
+#            stream + scale read; slice intermediates never touch HBM),
+#   vmap   — the fallback lifts a batch axis over the 2-D call; on the
+#            route it actually takes (the XLA expansion — the fused 2-D
+#            kernel cannot carry a vmap axis) every element re-pays the
+#            full slice/residue round-trip pipeline, and the stack costs
+#            B kernel launches.
+#
+# The GEMM-side stream (Eq. 10/15 operand + output terms) is identical
+# per element on both routes, so the modeled win is launch count (B -> 1)
+# plus the decomposition-byte ratio — (8+3p)/8 per operand elem for
+# Scheme I (2.1x at p=3, 3.25x at p=6), and for Scheme II the output-side
+# int32/canonical round-trips (16p*MN) on top of (8+p)/8 per operand
+# elem.  benchmarks/bench_traffic.py gates both ratios per batched cell.
+# ---------------------------------------------------------------------------
+
+
+def _batched_paths(gemm_per_elem: int, fused_decomp: int, vmap_decomp: int,
+                   batch: int) -> dict:
+    gemm = batch * gemm_per_elem
+    return {
+        "fused": {"launches": 1,
+                  "decomp_bytes": int(fused_decomp),
+                  "gemm_bytes": int(gemm),
+                  "total_bytes": int(fused_decomp + gemm)},
+        "vmap": {"launches": int(batch),
+                 "decomp_bytes": int(vmap_decomp),
+                 "gemm_bytes": int(gemm),
+                 "total_bytes": int(vmap_decomp + gemm)},
+    }
+
+
+def scheme1_batched_bytes(s: GemmShape, p: int, batch: int,
+                          out_bytes: int = 4) -> dict:
+    """Modeled HBM bytes + launch counts of a B-stack of Scheme-I GEMMs,
+    fused strided-batched vs the vmapped 2-D fallback.  Returns
+    ``{"fused": {launches, decomp_bytes, gemm_bytes, total_bytes},
+    "vmap": {...}}``."""
+    elems = (s.m + s.n) * s.k
+    return _batched_paths(
+        scheme1_fused_bytes(s, p, out_bytes),
+        batch * scheme1_decomp_prologue_bytes(elems, p),
+        batch * scheme1_decomp_xla_bytes(elems, p),
+        batch)
+
+
+def scheme2_batched_bytes(s: GemmShape, p: int, batch: int,
+                          out_bytes: int = 4) -> dict:
+    """Scheme-II analogue of :func:`scheme1_batched_bytes` (``p`` counts
+    moduli); the vmap route re-pays the residue encode AND the int32 /
+    canonical-residue output round-trips per batch element."""
+    return _batched_paths(
+        p * scheme2_fused_bytes_per_modulus(s) + out_bytes * s.m * s.n,
+        batch * scheme2_decomp_prologue_bytes(s, p),
+        batch * scheme2_decomp_xla_bytes(s, p),
+        batch)
+
+
+def batched_decomp_reduction(s: GemmShape, p: int, batch: int,
+                             scheme: str = "ozaki1") -> float:
+    """vmap/fused decomposition-byte ratio of one batched stack."""
+    fn = scheme1_batched_bytes if scheme == "ozaki1" else scheme2_batched_bytes
+    d = fn(s, p, batch)
+    return d["vmap"]["decomp_bytes"] / max(1, d["fused"]["decomp_bytes"])
+
+
+# ---------------------------------------------------------------------------
 # Per-backend hardware peak tables.
 #
 # The paper's headline numbers are fractions of INT8 Tensor Core peak on

@@ -101,7 +101,15 @@ class BackendCapabilities:
                         (``resolve_policy`` keeps fused impls on such
                         meshes only when this is set; the default False
                         keeps out-of-tree backends on the conservative
-                        multi-device clamp until they opt in).
+                        multi-device clamp until they opt in),
+      batched:          whether :meth:`KernelBackend.matmul_batched` is
+                        a real strided-batched lowering — one launch
+                        whose grid carries a third dimension over batch
+                        (or an equivalent single-launch reference).  The
+                        dispatcher routes ``emulated_matmul_batched``'s
+                        matching-leading-axes case through it; backends
+                        without it (the default) keep the per-element
+                        ``jax.vmap`` fallback.
     """
     align: int
     schemes: frozenset
@@ -110,6 +118,7 @@ class BackendCapabilities:
     accumulator_budget: int
     peak_key: str
     shardable: bool = False
+    batched: bool = False
 
 
 class KernelBackend(abc.ABC):
@@ -144,6 +153,22 @@ class KernelBackend(abc.ABC):
         """Fused 2-D real (M, K) @ (K, N) for ``cfg.scheme`` on aligned
         operands.  Complex routing (Scheme-I 4M) happens in dispatch."""
         ...
+
+    def matmul_batched(self, a: jax.Array, b: jax.Array, cfg, out_dtype,
+                       blocks: Blocks | None) -> jax.Array:
+        """Strided-batched real (B, M, K) @ (B, K, N) in ONE launch.
+
+        Only called when :attr:`BackendCapabilities.batched` is set —
+        the grid grows a third dimension over batch, operands are
+        indexed with a batch stride, and scales/plan are computed once
+        for the whole stack.  Must be bit-identical to vmapping
+        :meth:`matmul` over the leading axis.  The default raises so
+        out-of-tree backends that don't advertise the capability fail
+        loudly rather than silently mis-lowering.
+        """
+        raise NotImplementedError(
+            f"backend {self.name!r} has no strided-batched lowering "
+            "(BackendCapabilities.batched is not set)")
 
     def supports(self, cfg, a_dtype=None, b_dtype=None) -> bool:
         """Can this backend lower ``cfg`` on these (real) operand dtypes?

@@ -80,6 +80,7 @@ _CAPS = BackendCapabilities(
     accumulator_budget=ACC_BUDGET,
     peak_key="gpu",
     shardable=True,
+    batched=True,
 )
 
 
@@ -236,6 +237,52 @@ def fused_matmul_scheme1(a: jax.Array, b: jax.Array,
     )(a, b, mu, nu)
 
 
+def fused_matmul_scheme1_batched(a: jax.Array, b: jax.Array,
+                                 mu: jax.Array, nu: jax.Array,
+                                 p: int, beta: int, blocks: Blocks,
+                                 out_dtype=jnp.float32) -> jax.Array:
+    """Strided-batched fused Scheme-I GEMM: (B, M, K) x (B, K, N) fp32
+    with (B, M, 1)/(B, 1, N) power-of-two scales -> (B, M, N) in ONE
+    ``pallas_call``.
+
+    The grid grows a third (leading) dimension over batch and every
+    BlockSpec squeezes it with a ``None`` block dim — each program
+    instance therefore sees exactly the 2-D refs of the non-batched
+    launch and runs the *same* kernel body (``_kernel``), which is what
+    makes the batched lowering bit-identical to vmapping
+    :func:`fused_matmul_scheme1` by construction.  What changes is the
+    launch economics: one kernel launch instead of B, and the operand
+    blocks are addressed with a batch stride (cuBLAS
+    ``gemm_strided_batched`` layout) rather than re-described per
+    element.
+    """
+    batch, m, k = a.shape
+    b2, k2, n = b.shape
+    assert (batch, k) == (b2, k2), (a.shape, b.shape)
+    if not blocks.aligned(m, n, k):
+        raise ValueError(f"blocks {blocks} not aligned for {(m, n, k)}")
+    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    kernel = functools.partial(_kernel, p=p, beta=beta, bk=bk, nk=k // bk,
+                               out_dtype=out_dtype)
+    return build_pallas_call(
+        kernel,
+        interpret_mode=jax.default_backend() != "gpu",
+        grid=(batch, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((None, bm, k), lambda bb, i, j: (bb, i, 0)),
+            pl.BlockSpec((None, k, bn), lambda bb, i, j: (bb, 0, j)),
+            pl.BlockSpec((None, bm, 1), lambda bb, i, j: (bb, i, 0)),
+            pl.BlockSpec((None, 1, bn), lambda bb, i, j: (bb, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bm, bn), lambda bb, i, j: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), out_dtype),
+        compiler_params_fn=compat.gpu_compiler_params,
+        num_warps=8,
+        num_stages=2,
+        name=f"emugemm1_gpu_p{p}_b{batch}",
+    )(a, b, mu, nu)
+
+
 # ---------------------------------------------------------------------------
 # Scheme II: the fused residue pipeline.
 # ---------------------------------------------------------------------------
@@ -356,6 +403,55 @@ def fused_matmul_scheme2(a: jax.Array, b: jax.Array,
         num_warps=8,
         num_stages=2,
         name=f"emugemm2_gpu_p{p}{'_prep' if b_is_res else ''}",
+    )(a, b, mu, nu)
+
+
+def fused_matmul_scheme2_batched(a: jax.Array, b: jax.Array,
+                                 mu: jax.Array, nu: jax.Array,
+                                 moduli, blocks: Blocks,
+                                 out_dtype=jnp.float32) -> jax.Array:
+    """Strided-batched fused Scheme-II GEMM: (B, M, K) x (B, K, N) float
+    with (B, M, 1)/(B, 1, N) power-of-two integerization scales
+    -> (B, M, N) in ONE ``pallas_call``.
+
+    Same construction as :func:`fused_matmul_scheme1_batched`: a leading
+    batch grid dimension whose BlockSpecs squeeze it away, so each
+    program runs the unchanged 2-D residue pipeline (``_kernel2`` —
+    integerize + balanced-residue carve, p modular int8 MMAs per K step,
+    the full Garner/double-double CRT tail in the epilogue) and the
+    result is bit-identical to vmapping :func:`fused_matmul_scheme2`.
+    Pre-encoded (p, K, N) residue operands are per-weight, not
+    per-batch-element — the prepared consumption path stays on the
+    2-D kernel (one shared rhs never needs a batch stride).
+    """
+    moduli = tuple(int(mm) for mm in moduli)
+    p = len(moduli)
+    batch, m, k = a.shape
+    b2, k2, n = b.shape
+    assert (batch, k) == (b2, k2), (a.shape, b.shape)
+    if not blocks.aligned(m, n, k):
+        raise ValueError(
+            f"fused gpu ozaki2 batched kernel: blocks {blocks} not aligned "
+            f"for {(m, n, k)}")
+    bm, bn, bk = blocks.bm, blocks.bn, blocks.bk
+    kernel = functools.partial(_kernel2, moduli=moduli, bk=bk, nk=k // bk,
+                               out_dtype=out_dtype, b_res=False)
+    return build_pallas_call(
+        kernel,
+        interpret_mode=jax.default_backend() != "gpu",
+        grid=(batch, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((None, bm, k), lambda bb, i, j: (bb, i, 0)),
+            pl.BlockSpec((None, k, bn), lambda bb, i, j: (bb, 0, j)),
+            pl.BlockSpec((None, bm, 1), lambda bb, i, j: (bb, i, 0)),
+            pl.BlockSpec((None, 1, bn), lambda bb, i, j: (bb, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bm, bn), lambda bb, i, j: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m, n), out_dtype),
+        compiler_params_fn=compat.gpu_compiler_params,
+        num_warps=8,
+        num_stages=2,
+        name=f"emugemm2_gpu_p{p}_b{batch}",
     )(a, b, mu, nu)
 
 
@@ -531,6 +627,66 @@ class GpuBackend(KernelBackend):
             return self._matmul_scheme2(a, b, cfg, out_dtype, blocks)
         raise ValueError(f"gpu backend has no fused kernel for scheme "
                          f"{cfg.scheme!r}")
+
+    def matmul_batched(self, a, b, cfg, out_dtype, blocks):
+        if cfg.scheme == "ozaki1":
+            return self._matmul_scheme1_batched(a, b, cfg, out_dtype, blocks)
+        if cfg.scheme == "ozaki2":
+            if (jnp.issubdtype(a.dtype, jnp.complexfloating)
+                    or jnp.issubdtype(b.dtype, jnp.complexfloating)):
+                # The 3M kernel's three residue phases would triple the
+                # grid bookkeeping; complex batches stay on the vmap
+                # fallback until there is a workload that needs them.
+                raise NotImplementedError(
+                    "gpu backend: no strided-batched complex-3M lowering")
+            return self._matmul_scheme2_batched(a, b, cfg, out_dtype, blocks)
+        raise ValueError(f"gpu backend has no fused batched kernel for "
+                         f"scheme {cfg.scheme!r}")
+
+    def _matmul_scheme1_batched(self, a, b, cfg, out_dtype, blocks):
+        from repro.core import scheme1
+        batch, m, k = a.shape
+        _, _, n = b.shape
+        beta = cfg.resolved_beta(k)
+        if blocks is None:
+            blocks = self.choose_blocks(
+                m, n, k, cfg.p, out_bytes=jnp.dtype(out_dtype).itemsize)
+        if blocks is None or not blocks.aligned(m, n, k):
+            raise ValueError(
+                f"fused gpu ozaki1 batched kernel: shapes {(m, n, k)} not "
+                "16-aligned (dispatch pads automatically)")
+        a, b = _widen(a), _widen(b)
+        # One scale pass over the whole stack: keepdims reductions give
+        # (B, M, 1) / (B, 1, N), exactly the per-element scales the
+        # vmapped 2-D launch computes B times.
+        mu = scheme1._pow2_row_scale(a, axis=-1)
+        nu = scheme1._pow2_row_scale(b, axis=1)
+        return fused_matmul_scheme1_batched(a, b, mu, nu, cfg.p, beta,
+                                            blocks, out_dtype=out_dtype)
+
+    def _matmul_scheme2_batched(self, a, b, cfg, out_dtype, blocks):
+        from repro.core import scheme2
+        from repro.core.precision import scheme2_budget
+        moduli = cfg.resolved_moduli()
+        self._check_moduli(moduli)
+        batch, m, k = a.shape
+        _, _, n = b.shape
+        scheme2.check_exact_k(k, moduli)
+        if blocks is None or not blocks.aligned(m, n, k):
+            blocks = self.choose_blocks(
+                m, n, k, len(moduli),
+                out_bytes=jnp.dtype(out_dtype).itemsize, scheme="ozaki2")
+        if blocks is None or not blocks.aligned(m, n, k):
+            raise ValueError(
+                f"fused gpu ozaki2 batched kernel: shapes {(m, n, k)} not "
+                "16-aligned (dispatch pads automatically)")
+        a, b = _float_or_f32(a), _float_or_f32(b)
+        budget = scheme2_budget(moduli, k)
+        budget = min(budget, jnp.finfo(a.dtype).nmant + 1)
+        mu = scheme2._pow2_int_scale(a, axis=-1, budget_bits=budget)
+        nu = scheme2._pow2_int_scale(b, axis=1, budget_bits=budget)
+        return fused_matmul_scheme2_batched(a, b, mu, nu, moduli, blocks,
+                                            out_dtype=out_dtype)
 
     def _matmul_scheme1(self, a, b, cfg, out_dtype, blocks):
         from repro.core import scheme1  # lazy: keep import graph acyclic

@@ -27,6 +27,12 @@ _CAPS = BackendCapabilities(
     accumulator_budget=VMEM_BUDGET,
     peak_key="tpu",
     shardable=True,
+    # No strided-batched lowering yet: the Mosaic kernels run a
+    # sequential K grid with VMEM scratch accumulators, and a leading
+    # batch grid dimension would need the scratch re-zeroed per batch
+    # element (dimension_semantics don't express that today).  Batched
+    # contractions on this backend keep the vmap fallback.
+    batched=False,
 )
 
 

@@ -26,6 +26,13 @@ _CAPS = BackendCapabilities(
     accumulator_budget=0,
     peak_key="xla",
     shardable=True,
+    # "Batched" here means the scheme references vectorize over a leading
+    # batch axis inside one XLA program — a single conceptual launch with
+    # fusion left to XLA, not B python-level re-dispatches.  It keeps the
+    # reference backend route-compatible with the fused GPU path so
+    # parity tests and REPRO_BACKEND=xla runs exercise the same
+    # dispatcher branch.
+    batched=True,
 )
 
 
@@ -61,3 +68,14 @@ class XlaBackend(KernelBackend):
                 return complex3m.matmul(a, b, cfg, out_dtype=out_dtype)
             return scheme2.matmul(a, b, cfg, out_dtype=out_dtype)
         raise ValueError(f"xla backend: unknown scheme {cfg.scheme!r}")
+
+    def matmul_batched(self, a, b, cfg, out_dtype, blocks):
+        # One traced program over the stack: vmap of the 2-D scheme
+        # reference.  Bit-identical to the per-element fallback by
+        # definition (it IS the per-element computation, batched), but
+        # staged as a single launch so the dispatcher's batched route —
+        # plan reuse, telemetry, traffic accounting — is exercised
+        # end to end on hosts without a fused backend.
+        import jax
+        return jax.vmap(
+            lambda x, y: self.matmul(x, y, cfg, out_dtype, blocks))(a, b)

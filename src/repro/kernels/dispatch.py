@@ -30,7 +30,10 @@ since the backend-registry subsystem landed is expressed per
   :class:`repro.kernels.prepared.PreparedOperand` rhs skips
   decomposition entirely and streams its finished int8 slices.
 * :func:`emulated_matmul_batched` — leading batch dims on the activation
-  flatten into M; a shared leading axis maps the fused kernel with vmap.
+  flatten into M; a shared leading axis runs ONE strided-batched fused
+  launch on backends advertising ``BackendCapabilities.batched`` (the
+  grid grows a third dimension over batch, scales/plan computed once for
+  the stack), falling back to vmapping the 2-D dispatcher elsewhere.
 * :func:`resolve_policy` — clamps a model ``GemmPolicy`` to what the
   launch target supports: (scheme, backend) pairs the selected backend
   cannot lower pin ``impl='xla'``, and fused impls survive only on a
@@ -102,7 +105,8 @@ def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
                   prologue_b: bool = False,
                   fixed_bk: int | None = None,
                   scheme: str = "ozaki1",
-                  mesh_shape: tuple | None = None) -> Blocks | None:
+                  mesh_shape: tuple | None = None,
+                  batch: int = 1) -> Blocks | None:
     """Cached block selection through the backend registry.
 
     ``backend`` may be any string — platform-qualified names bucket their
@@ -114,11 +118,15 @@ def select_blocks(m: int, n: int, k: int, p: int, out_bytes: int = 4,
     *shard-local* dims of a shard_map'ed GEMM: the same local shape on
     two different meshes keys distinct entries, so per-shard selections
     never collide across mesh layouts (single-device callers pass None).
+    ``batch`` is the strided-batched launch's leading extent: it keys the
+    cache (one selection per (B, M, K, N, scheme, p) problem) without
+    entering the tile search — a batch grid dimension multiplies program
+    count, not the per-program working set.
     """
     bucket = backend or backends.resolve_backend_name()
     cache = _BLOCK_CACHES.setdefault(bucket, _BlockCache())
     key = (m, n, k, p, out_bytes, prologue_a, prologue_b, fixed_bk, scheme,
-           mesh_shape)
+           mesh_shape, batch)
     try:
         blocks = cache.data[key]
         cache.hits += 1
@@ -277,6 +285,8 @@ class GemmPlan:
     # mask special values and flag wide-dynamic-range operands without
     # touching the fused kernels.
     probe: object | None = None
+    # Leading extent of a strided-batched launch (1 = plain 2-D GEMM).
+    batch: int = 1
 
     @property
     def aligned(self) -> bool:
@@ -350,6 +360,38 @@ def plan_emulated(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
                     mesh_shape, sentinel_probe)
 
 
+def plan_emulated_batched(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                          out_dtype=None,
+                          backend: str | None = None) -> GemmPlan:
+    """Resolve backend, dtype and blocks for one strided-batched
+    (B, M, K) @ (B, K, N) GEMM.
+
+    The tile search is the 2-D one — the batch grid dimension multiplies
+    program count, not the per-program working set — but the selection
+    is keyed per (B, M, K, N, scheme, p), so batched and per-element
+    call-sites on the same 2-D problem keep distinct cache entries and
+    ``block_cache_info`` attributes them separately.
+    """
+    batch, m, k = a.shape
+    _, _, n = b.shape
+    if out_dtype is None:
+        out_dtype = cfg.out_dtype
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(jnp.real(a).dtype, jnp.real(b).dtype)
+    p_eff = cfg.p
+    scheme = cfg.scheme
+    if scheme == "ozaki2":
+        p_eff = len(cfg.resolved_moduli())
+    name = _plan_backend(cfg, a, b, backend)
+    pro = _prologue(cfg)
+    blocks = select_blocks(m, n, k, p_eff,
+                           out_bytes=jnp.dtype(out_dtype).itemsize,
+                           backend=name, prologue_a=pro, prologue_b=pro,
+                           scheme=scheme, batch=batch)
+    return GemmPlan(cfg, m, n, k, p_eff, out_dtype, blocks, name, scheme,
+                    batch=batch)
+
+
 def _replan_padded(plan: GemmPlan) -> GemmPlan:
     mp, kp, np_ = padded_mkn(plan.m, plan.k, plan.n, plan.align)
     pro = _prologue(plan.cfg)
@@ -370,7 +412,8 @@ def _record_plan_call(plan: GemmPlan) -> None:
         scheme=plan.scheme, count=plan.p_eff, backend=plan.backend,
         impl=impl, m=plan.m, k=plan.k, n=plan.n,
         mesh_shape=plan.mesh_shape,
-        out_bytes=jnp.dtype(plan.out_dtype).itemsize)
+        out_bytes=jnp.dtype(plan.out_dtype).itemsize,
+        batch=plan.batch if plan.batch != 1 else None)
 
 
 def _scope_scheme(cfg: EmulationConfig, cplx: bool) -> tuple[str, int]:
@@ -409,6 +452,93 @@ def _fused_2d(a: jax.Array, b: jax.Array, cfg: EmulationConfig, out_dtype,
         if cfg.scheme == "ozaki2":
             return bk.matmul(a, b, cfg, out_dtype, blocks)
     raise ValueError(f"no fused kernel for scheme {cfg.scheme!r}")
+
+
+def _fused_batched(a: jax.Array, b: jax.Array, cfg: EmulationConfig,
+                   plan: GemmPlan) -> jax.Array:
+    """One strided-batched fused launch for an eligible (B, M, K) @
+    (B, K, N) problem — padding the trailing two axes when needed
+    (exact: zero rows/cols carve to zero slices/residues)."""
+    bk = backends.get_backend(plan.backend)
+    scheme_tag, count = _scope_scheme(cfg, False)
+    impl = "pallas" if bk.name != "xla" else "xla"
+    telemetry.record_event(_tele.BATCHED_LAUNCHES, {
+        "backend": plan.backend, "scheme": scheme_tag,
+        "shape_class": _tele.shape_class(plan.m, plan.k, plan.n,
+                                         batch=plan.batch)})
+    with telemetry.gemm_scope(scheme_tag, count, bk.name, impl):
+        if plan.aligned:
+            return bk.matmul_batched(a, b, cfg, plan.out_dtype, plan.blocks)
+        telemetry.record_event(_tele.PAD_EVENTS, {
+            "backend": plan.backend, "scheme": plan.scheme,
+            "shape_class": _tele.shape_class(plan.m, plan.k, plan.n,
+                                             batch=plan.batch)})
+        mp, kp, np_ = padded_mkn(plan.m, plan.k, plan.n, plan.align)
+        a_p = jnp.pad(a, ((0, 0), (0, mp - plan.m), (0, kp - plan.k)))
+        b_p = jnp.pad(b, ((0, 0), (0, kp - plan.k), (0, np_ - plan.n)))
+        pro = _prologue(cfg)
+        blocks = select_blocks(mp, np_, kp, plan.p_eff,
+                               out_bytes=jnp.dtype(plan.out_dtype).itemsize,
+                               backend=plan.backend, prologue_a=pro,
+                               prologue_b=pro, scheme=plan.scheme,
+                               batch=plan.batch)
+        out = bk.matmul_batched(a_p, b_p, cfg, plan.out_dtype, blocks)
+        return out[:, :plan.m, :plan.n]
+
+
+def batched_fused_eligible(a, b, cfg: EmulationConfig,
+                           backend: str | None = None) -> bool:
+    """Would :func:`emulated_matmul_batched` take the strided-batched
+    fused path for these operands under ``cfg``?
+
+    Telemetry-free twin of the route check inside the dispatcher, for
+    front doors (``repro.dot_general``) deciding between the batched
+    core and their historical vmap-of-2-D lowering.
+    """
+    if cfg.scheme not in ("ozaki1", "ozaki2") or cfg.guard is not None:
+        return False
+    if _is_complex(a) or _is_complex(b):
+        return False
+    name = backends.resolve_backend_name(backend, cfg)
+    bk = backends.get_backend(name)
+    if not bk.supports(cfg, getattr(a, "dtype", None),
+                       getattr(b, "dtype", None)):
+        bk = backends.get_backend("xla")
+    return bk.capabilities.batched
+
+
+def _fused_batched_or_none(a: jax.Array, b: jax.Array, kw: dict):
+    """The strided-batched fast path of :func:`emulated_matmul_batched`,
+    or None when this (config, operands, backend) combination keeps the
+    per-element vmap fallback.
+
+    Eligible: real operands under a guard-free ozaki1/ozaki2 config on a
+    backend whose :class:`BackendCapabilities` advertise ``batched``.
+    Leading axes collapse into one batch dimension; scales and the block
+    plan are computed once for the whole stack; the result is
+    bit-identical to the vmapped 2-D dispatch (the batched kernels run
+    the unchanged 2-D kernel body per batch grid step).
+    """
+    if kw.get("scheme") is not None or kw.get("precision") is not None:
+        return None          # deprecated-shim callers keep the legacy path
+    if kw.get("mesh_shape") is not None:
+        return None          # shard-local tiles dispatch per element (2-D)
+    if _is_complex(a) or _is_complex(b):
+        return None          # no batched 4M/3M lowering yet
+    from repro import api
+    cfg = api.resolve_config(kw.get("cfg"), default=_LEGACY_DEFAULT)
+    if cfg.scheme not in ("ozaki1", "ozaki2") or cfg.guard is not None:
+        return None
+    name = _plan_backend(cfg, a, b, kw.get("backend"))
+    if not backends.get_backend(name).capabilities.batched:
+        return None
+    lead = a.shape[:-2]
+    a3 = a.reshape((-1,) + a.shape[-2:])
+    b3 = b.reshape((-1,) + b.shape[-2:])
+    plan = plan_emulated_batched(a3, b3, cfg, kw.get("out_dtype"), name)
+    _record_plan_call(plan)
+    out = _fused_batched(a3, b3, cfg, plan)
+    return out.reshape(lead + out.shape[-2:])
 
 
 def _is_prepared(b) -> bool:
@@ -518,11 +648,15 @@ def emulated_matmul(a: jax.Array, b, *,
 
 
 def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
-    """vmap-compatible batched wrapper around :func:`emulated_matmul`.
+    """Batched wrapper around :func:`emulated_matmul`.
 
     * ``b`` 2-D (or a PreparedOperand): leading dims of ``a`` flatten into
       M (activations @ weights) — one fused launch.
-    * matching leading axes: the 2-D dispatcher is vmapped over them.
+    * matching leading axes: ONE strided-batched fused launch when the
+      selected backend's capabilities advertise ``batched`` (the grid
+      grows a third dimension over batch; bit-identical to the vmapped
+      2-D dispatch); otherwise the 2-D dispatcher is vmapped over the
+      leading axes.
     """
     if _is_prepared(b):
         if a.ndim == 2:
@@ -542,14 +676,22 @@ def emulated_matmul_batched(a: jax.Array, b, **kw) -> jax.Array:
             f"got lhs {a.shape} (leading {a.shape[:-2]}) @ rhs {b.shape} "
             f"(leading {b.shape[:-2]}) — repro.dot_general handles "
             "asymmetric batch/contraction layouts")
+    out = _fused_batched_or_none(a, b, kw)
+    if out is not None:
+        return out
     fn = functools.partial(emulated_matmul_batched, **kw)
     return jax.vmap(fn)(a, b)
 
 
 # Fallback RuntimeWarnings are deduped by (reason, shape-class): the
 # requested backend/scheme/dtype pair that fell back plus the operand
-# shape class. Scanned training steps re-trace the same call-site once
-# per microbatch/layer combination; without the dedupe every re-trace
+# shape class — the (K, N) contraction geometry only, NOT the full
+# operand shapes.  Batched call-sites flatten their leading axes into M
+# (emulated_matmul_batched), so a full-shape key minted a fresh entry
+# per batch size and the "once" warning fired once per ragged batch;
+# K x N identifies the weight/call-site independent of batching.
+# Scanned training steps re-trace the same call-site once per
+# microbatch/layer combination; without the dedupe every re-trace
 # re-warned and multi-device logs drowned in the repeat.  The one-shot
 # bookkeeping lives on the telemetry registry (the process's single
 # counter store; always active, independent of REPRO_TELEMETRY) under
@@ -598,7 +740,7 @@ def auto_fused_matmul(a: jax.Array, b, cfg: EmulationConfig):
         a_name, b_name = jnp.dtype(a.dtype).name, jnp.dtype(b.dtype).name
         _warn_fallback_once(
             (requested, cfg.scheme, a_name, b_name),
-            (a.shape, b.shape),
+            (a.shape[-1], b.shape[-1]),
             f"backend {requested!r} has no fused {cfg.scheme} lowering "
             f"for operands {a_name} @ {b_name}{detail}; this call-site "
             "expands in XLA instead")

@@ -106,8 +106,10 @@ def main(argv=None):
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
     mesh = make_host_mesh()
     rng = np.random.default_rng(args.seed)
-    gemm = api.precision(args.gemm) if args.gemm else None
-    policy = GemmPolicy(default=gemm)
+    # --gemm overrides; otherwise None defers to the arch config's
+    # gemm_sites policy inside the engines (then the ambient resolver).
+    policy = (GemmPolicy(default=api.precision(args.gemm))
+              if args.gemm else None)
     max_seq = args.prompt_len + args.gen
 
     with mesh:

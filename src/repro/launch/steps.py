@@ -123,7 +123,12 @@ def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
     # training still decomposes each projection weight once per step /
     # shard instead of 3x per layer (forward, remat re-forward,
     # backward B^T re-split).
-    policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
+    # No explicit policy: the arch config's gemm_sites table decides
+    # (arch.gemm_policy() is the bare ambient-deferring GemmPolicy()
+    # when the config ships no site specs — the historical default).
+    if policy is None:
+        policy = arch.gemm_policy()
+    policy = dispatch.resolve_policy(policy, mesh)
     loss_fn = make_loss_fn(arch, policy)
     _, opt_update = make_optimizer(arch.train.optimizer)
     n_micro = arch.train.microbatches
@@ -202,7 +207,8 @@ def make_train_step(arch: ArchConfig, mesh, shape: ShapeSpec | None = None,
 
 def make_prefill_step(arch: ArchConfig, shape: ShapeSpec, mesh,
                       policy: GemmPolicy | None = None):
-    policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
+    policy = dispatch.resolve_policy(
+        policy if policy is not None else arch.gemm_policy(), mesh)
     mcfg = arch.model
 
     if not mcfg.causal:   # encoder: 'prefill' is a plain forward pass
@@ -233,7 +239,8 @@ def make_prefill_step(arch: ArchConfig, shape: ShapeSpec, mesh,
 def make_decode_step(arch: ArchConfig, shape: ShapeSpec, mesh,
                      policy: GemmPolicy | None = None,
                      donate: bool = True):
-    policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
+    policy = dispatch.resolve_policy(
+        policy if policy is not None else arch.gemm_policy(), mesh)
     mcfg = arch.model
 
     def decode(params, cache, tokens, pos):

@@ -66,8 +66,11 @@ def main(argv=None):
             else configs.get_config(args.arch))
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
     mesh = make_host_mesh(args.model_parallel)
-    policy = GemmPolicy(
-        default=api.precision(args.gemm) if args.gemm else None)
+    # --gemm overrides everything; otherwise None lets make_train_step
+    # pick up the arch config's own gemm_sites policy (the -emu zoo
+    # variants), which still defers to the ambient resolver when empty.
+    policy = (GemmPolicy(default=api.precision(args.gemm))
+              if args.gemm else None)
 
     opt_init, _ = make_optimizer(arch.train.optimizer)
 

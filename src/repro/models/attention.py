@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common
-from repro.models.common import GemmPolicy, dense, he_init
+from repro.models.common import (NATIVE_POLICY, GemmPolicy, dense, he_init,
+                                 policy_einsum)
 
 NEG_INF = -1e30
 
@@ -119,12 +120,15 @@ def _chunk_mask(cfg: AttnConfig, q_pos, k_pos):
 
 
 def flash_attention(cfg: AttnConfig, q, k, v, q_positions, k_positions,
-                    kv_valid_len=None):
+                    kv_valid_len=None, policy: GemmPolicy = NATIVE_POLICY):
     """Exact chunked attention.
 
     q: (B, Sq, H, D); k/v: (B, Sk, KVH, D); *_positions: (Sq,)/(Sk,) int32.
     kv_valid_len: optional scalar — keys at index >= len are masked (decode
     against a partially-filled cache).
+    ``policy`` selects the emulation config of the two inner contractions
+    (sites 'attn_qk' / 'attn_av'); the default pins them native, exactly
+    the historical ``jnp.einsum`` path.
     Returns (B, Sq, H, D).
     """
     b, sq0, h, d = q.shape
@@ -171,8 +175,8 @@ def flash_attention(cfg: AttnConfig, q, k, v, q_positions, k_positions,
         kj = jax.lax.dynamic_index_in_dim(kc, idx, 1, keepdims=False)
         vj = jax.lax.dynamic_index_in_dim(vc, idx, 1, keepdims=False)
         k_pos = jax.lax.dynamic_slice_in_dim(k_positions, idx * bk, bk)
-        s_ij = jnp.einsum("bqkgd,bjkd->bkgqj", qi, kj,
-                          preferred_element_type=jnp.float32) * scale
+        s_ij = policy_einsum("bqkgd,bjkd->bkgqj", qi, kj, policy, "attn_qk",
+                             pet=jnp.float32) * scale
         if cfg.sp:  # pin scores so the scan *backward* also stays sharded
             from jax.sharding import PartitionSpec as P
             s_ij = _constrain(
@@ -186,9 +190,9 @@ def flash_attention(cfg: AttnConfig, q, k, v, q_positions, k_positions,
         p = jnp.exp(s_ij - m_new[..., None])
         alpha = jnp.exp(m - m_new)
         l = l * alpha + p.sum(-1)
-        acc = acc * alpha[..., None] + jnp.einsum(
-            "bkgqj,bjkd->bkgqd", p.astype(vj.dtype), vj,
-            preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + policy_einsum(
+            "bkgqj,bjkd->bkgqd", p.astype(vj.dtype), vj, policy, "attn_av",
+            pet=jnp.float32)
         return (acc, m_new, l, qi, q_pos), None
 
     if cfg.sp:
@@ -242,7 +246,7 @@ def attention_train(params, cfg: AttnConfig, x, positions,
     b, s, _ = x.shape
     q, k, v = _project_qkv(params, cfg, x, positions, policy)
     pos1d = positions[0]
-    out = flash_attention(cfg, q, k, v, pos1d, pos1d)
+    out = flash_attention(cfg, q, k, v, pos1d, pos1d, policy=policy)
     return dense(out.reshape(b, s, -1), params["wo"], policy, "attn")
 
 
@@ -294,7 +298,7 @@ def attention_prefill(params, cfg: AttnConfig, x, positions,
     b, s, _ = x.shape
     q, k, v = _project_qkv(params, cfg, x, positions, policy)
     pos1d = positions[0]
-    out = flash_attention(cfg, q, k, v, pos1d, pos1d)
+    out = flash_attention(cfg, q, k, v, pos1d, pos1d, policy=policy)
     cache = init_cache(cfg, b, max_seq, k.dtype)
     clen = cache["k"].shape[1]
     if clen >= s:
@@ -361,8 +365,8 @@ def attention_step(params, cfg: AttnConfig, x, start, n_new, cache,
     clen = ck.shape[1]
     kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     qh = q.reshape(b, c, kvh, g, cfg.head_dim)
-    s = jnp.einsum("bqkgd,bjkd->bkgqj", qh, ck,
-                   preferred_element_type=jnp.float32) * cfg.scale
+    s = policy_einsum("bqkgd,bjkd->bkgqj", qh, ck, policy, "attn_qk",
+                      pet=jnp.float32) * cfg.scale
     # Causal against this lane's own timeline: key rows beyond the lane's
     # freshly written frontier (start + n_new) exceed every valid q_pos,
     # so one mask covers history, intra-chunk causality, and padding.
@@ -370,8 +374,8 @@ def attention_step(params, cfg: AttnConfig, x, start, n_new, cache,
     mask = k_pos[None, None, :] <= positions[:, :, None]          # (B, C, L)
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgqj,bjkd->bkgqd", w.astype(cv.dtype), cv,
-                     preferred_element_type=jnp.float32)
+    out = policy_einsum("bkgqj,bjkd->bkgqd", w.astype(cv.dtype), cv,
+                        policy, "attn_av", pet=jnp.float32)
     out = out.transpose(0, 3, 1, 2, 4).reshape(b, c, cfg.n_heads
                                                * cfg.head_dim).astype(x.dtype)
     return dense(out, params["wo"], policy, "attn"), cache
@@ -409,13 +413,13 @@ def attention_decode(params, cfg: AttnConfig, x, pos, cache,
 
     kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     qh = q.reshape(b, kvh, g, cfg.head_dim)
-    s = jnp.einsum("bkgd,bjkd->bkgj", qh, ck,
-                   preferred_element_type=jnp.float32) * cfg.scale
+    s = policy_einsum("bkgd,bjkd->bkgj", qh, ck, policy, "attn_qk",
+                      pet=jnp.float32) * cfg.scale
     mask = _chunk_mask(cfg, positions[0], k_positions)[0]      # (clen,)
     mask &= jnp.arange(clen) < valid if not cfg.window else mask
     s = jnp.where(mask[None, None, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgj,bjkd->bkgd", w.astype(cv.dtype), cv,
-                     preferred_element_type=jnp.float32)
+    out = policy_einsum("bkgj,bjkd->bkgd", w.astype(cv.dtype), cv,
+                        policy, "attn_av", pet=jnp.float32)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x.dtype)
     return dense(out, params["wo"], policy, "attn"), cache

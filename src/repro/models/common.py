@@ -149,6 +149,43 @@ def _dense(x: jax.Array, w, policy: GemmPolicy, site: str,
     return out
 
 
+def policy_einsum(eq: str, x: jax.Array, y: jax.Array, policy: GemmPolicy,
+                  site: str, pet=None) -> jax.Array:
+    """Two-operand einsum under the policy's per-site emulation config.
+
+    The native path is *exactly* ``jnp.einsum(eq, x, y,
+    preferred_element_type=pet)`` — bit-identical to the unwrapped call —
+    so wiring a model contraction through here changes nothing until a
+    policy override (or the ambient resolver, for a bare ``GemmPolicy()``)
+    selects an emulation scheme for ``site``.  Emulated calls route
+    through :func:`repro.api.einsum`, whose canonicalized batched core
+    takes the strided-batched fused lowering when the resolved backend
+    advertises ``BackendCapabilities.batched``; the whole call is labeled
+    with ``site`` for telemetry, same as :func:`dense`.
+
+    Sites wired through this helper (docs/observability.md): 'attn_qk',
+    'attn_av' (score / weighted-value contractions), 'moe_gate',
+    'moe_expert', 'mla_latent' (KV decompression), 'ssd_state'.
+    """
+    cfg = policy.for_site(site)
+    if cfg.scheme == "native":
+        return jnp.einsum(eq, x, y, preferred_element_type=pet)
+    if cfg.cache_weights:
+        # '+cached' means once-per-step rhs preparation, which only the
+        # dense-projection hoist in launch/steps.py provides; these
+        # einsum sites sit inside the microbatch scan, where honoring
+        # the flag would re-prepare every microbatch instead.
+        import dataclasses
+        cfg = dataclasses.replace(cfg, cache_weights=False)
+    from repro import api, telemetry
+    if telemetry.enabled():
+        with telemetry.call_site(site):
+            out = api.einsum(eq, x, y, precision=cfg)
+    else:
+        out = api.einsum(eq, x, y, precision=cfg)
+    return out if pet is None else out.astype(pet)
+
+
 # ---------------------------------------------------------------------------
 # Initializers (numpy-free: jax.random so init can itself be jitted/sharded).
 # ---------------------------------------------------------------------------

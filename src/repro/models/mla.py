@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig
-from repro.models.common import GemmPolicy, apply_norm, dense, he_init, init_norm
+from repro.models.common import (GemmPolicy, apply_norm, dense, he_init,
+                                 init_norm, policy_einsum)
 
 NEG_INF = -1e30
 
@@ -140,8 +141,9 @@ def _mla_full(params, cfg: MLAConfig, n_heads, x, positions, policy,
         pj = jax.lax.dynamic_slice_in_dim(k_pe, idx * bk, bk, 1)  # (B,bk,R)
         kpos = jax.lax.dynamic_slice_in_dim(pos1d, idx * bk, bk)
         # Decompress just this chunk: (B, bk, H, nope) and (B, bk, H, v).
-        k_nope = jnp.einsum("blc,chd->blhd", cj, w_uk)
-        vj = jnp.einsum("blc,chd->blhd", cj, w_uv)
+        k_nope = policy_einsum("blc,chd->blhd", cj, w_uk, policy,
+                               "mla_latent")
+        vj = policy_einsum("blc,chd->blhd", cj, w_uv, policy, "mla_latent")
         s_ij = (jnp.einsum("bqhd,bjhd->bhqj", qn, k_nope,
                            preferred_element_type=jnp.float32)
                 + jnp.einsum("bqhr,bjr->bhqj", qp, pj,

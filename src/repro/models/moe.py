@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
-from repro.models.common import GemmPolicy, he_init, init_ffn, apply_ffn
+from repro.models.common import (NATIVE_POLICY, GemmPolicy, he_init,
+                                 init_ffn, apply_ffn, policy_einsum)
 
 
 def padded_experts(cfg: MoEConfig) -> int:
@@ -43,9 +44,11 @@ def init_moe(key, d_model: int, cfg: MoEConfig, act: str, dtype=jnp.float32):
     return params
 
 
-def _route(params, cfg: MoEConfig, x_f32: jax.Array):
+def _route(params, cfg: MoEConfig, x_f32: jax.Array,
+           policy: GemmPolicy = NATIVE_POLICY):
     """x: (G, T, D) -> (weights (G,T,K), idx (G,T,K), scores (G,T,E))."""
-    logits = jnp.einsum("gtd,de->gte", x_f32, params["router"])
+    logits = policy_einsum("gtd,de->gte", x_f32, params["router"],
+                           policy, "moe_gate")
     e_pad = padded_experts(cfg)
     if e_pad != cfg.n_experts:             # mask padding experts out
         dead = jnp.arange(e_pad) >= cfg.n_experts
@@ -109,14 +112,17 @@ def apply_moe(params, x: jax.Array, cfg: MoEConfig, act: str,
         g -= 1
     t = tokens // g
     xg = x.reshape(g, t, d)
-    w, idx, scores = _route(params, cfg, xg.astype(jnp.float32))
+    w, idx, scores = _route(params, cfg, xg.astype(jnp.float32), policy)
     dispatch, combine, cap = _dispatch_combine(cfg, w, idx, t, x.dtype)
 
     xs = jnp.einsum("gtec,gtd->egcd", dispatch, xg)   # a2a: groups->experts
-    gate = jnp.einsum("egcd,edf->egcf", xs, params["wi_gate"])
-    up = jnp.einsum("egcd,edf->egcf", xs, params["wi_up"])
+    gate = policy_einsum("egcd,edf->egcf", xs, params["wi_gate"],
+                         policy, "moe_expert")
+    up = policy_einsum("egcd,edf->egcf", xs, params["wi_up"],
+                       policy, "moe_expert")
     h = (jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)) * up
-    ys = jnp.einsum("egcf,efd->egcd", h, params["wo"])
+    ys = policy_einsum("egcf,efd->egcd", h, params["wo"],
+                       policy, "moe_expert")
     out = jnp.einsum("egcd,gtec->gtd", ys, combine)   # a2a: experts->groups
     out = out.reshape(b, s, d)
 

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SSDConfig
-from repro.models.common import GemmPolicy, apply_norm, dense, he_init, init_norm
+from repro.models.common import (GemmPolicy, apply_norm, dense, he_init,
+                                 init_norm, policy_einsum)
 
 
 def d_inner(d_model: int, cfg: SSDConfig) -> int:
@@ -175,7 +176,8 @@ def ssd_block_decode(params, d_model: int, cfg: SSDConfig, x, cache,
     xf = xh.astype(jnp.float32)
     upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xf, bmat.astype(jnp.float32))
     ssm = cache["ssm"] * decay[..., None, None] + upd
-    y = jnp.einsum("bhpn,bn->bhp", ssm, cmat.astype(jnp.float32))
+    y = policy_einsum("bhpn,bn->bhp", ssm, cmat.astype(jnp.float32),
+                      policy, "ssd_state")
     y = y + params["d_skip"][None, :, None] * xf
     y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
     y = apply_norm("rms", params["out_norm"], y * jax.nn.silu(z))

@@ -86,7 +86,8 @@ class ContinuousEngine:
         self.arch = arch
         self.mcfg = arch.model
         self.mesh = mesh
-        self.policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
+        self.policy = dispatch.resolve_policy(
+            policy if policy is not None else arch.gemm_policy(), mesh)
         self.params = params if params is not None else M.init_params(
             jax.random.PRNGKey(seed), self.mcfg)
         from repro.kernels import prepared
@@ -368,10 +369,12 @@ class LockstepEngine:
         self.mesh = mesh
         self.max_seq = max_seq
         # The one resolver decides the engine's emulation: an explicit
-        # policy wins, else the ambient repro.emulation scope /
-        # REPRO_EMULATION env configures the whole serving session;
-        # resolve_policy then clamps impls to what this mesh executes.
-        self.policy = dispatch.resolve_policy(policy or GemmPolicy(), mesh)
+        # policy wins, else the arch config's gemm_sites table, else the
+        # ambient repro.emulation scope / REPRO_EMULATION env configures
+        # the whole serving session; resolve_policy then clamps impls to
+        # what this mesh executes.
+        self.policy = dispatch.resolve_policy(
+            policy if policy is not None else arch.gemm_policy(), mesh)
         self.params = params if params is not None else M.init_params(
             jax.random.PRNGKey(seed), self.mcfg)
         if prepare:

@@ -7,7 +7,8 @@ The label schema is fixed (docs/observability.md):
     backend     kernel backend that ran ('tpu', 'gpu', 'xla')
     impl        lowering route ('pallas', 'xla', 'prepared-pallas',
                 'prepared-xla')
-    shape_class 'MxKxN' of the logical 2-D contraction
+    shape_class 'MxKxN' of the logical 2-D contraction, or 'BxMxKxN'
+                when the call ran as one strided-batched launch
     mesh_shape  'axis=size,...' of the launch mesh, or '-'
 
 Two recording moments, matching how the stack executes:
@@ -43,6 +44,7 @@ MODELED_BYTES_TRACED = "repro_modeled_bytes_traced_total"  # per trace, by tag
 BLOCK_CACHE = "repro_block_cache_total"                # hit/miss, per lookup
 PAD_EVENTS = "repro_pad_total"                         # per padded trace
 FALLBACK_EVENTS = "repro_fallback_total"               # per fallback, w/ reason
+BATCHED_LAUNCHES = "repro_emulated_batched_launches_total"  # per batched trace
 PREPARED_CONSUME = "repro_prepared_consume_total"      # fused vs xla routes
 PREPARED_BUILD = "repro_prepared_build_total"          # prepare/rebuild calls
 PREPARED_REFUSALS = "repro_prepared_refusal_total"     # layout refusals
@@ -103,8 +105,11 @@ def site_scope(name: str) -> Iterator[None]:
         yield
 
 
-def shape_class(m: int, k: int, n: int) -> str:
-    return f"{int(m)}x{int(k)}x{int(n)}"
+def shape_class(m: int, k: int, n: int, batch: int | None = None) -> str:
+    """'MxKxN' of the 2-D contraction; 'BxMxKxN' for a strided-batched
+    launch (``batch`` is the leading grid extent, not a vmap axis)."""
+    core = f"{int(m)}x{int(k)}x{int(n)}"
+    return core if batch is None else f"{int(batch)}x{core}"
 
 
 def mesh_label(mesh_shape: Any = None) -> str:
@@ -134,13 +139,14 @@ def gemm_labels(
     k: int,
     n: int,
     mesh_shape: Any = None,
+    batch: int | None = None,
 ) -> dict[str, str]:
     return {
         "site": current_site(),
         "scheme": scheme,
         "backend": backend,
         "impl": impl,
-        "shape_class": shape_class(m, k, n),
+        "shape_class": shape_class(m, k, n, batch),
         "mesh_shape": mesh_label(mesh_shape),
     }
 
@@ -183,6 +189,7 @@ def record_gemm(
     n: int,
     mesh_shape: Any = None,
     out_bytes: int = 4,
+    batch: int | None = None,
 ) -> None:
     """Record one emulated GEMM call site.
 
@@ -190,18 +197,23 @@ def record_gemm(
     right now) and stages a per-execution callback for the call/byte
     counters.  All values — labels, modeled bytes — are static per call,
     so the callback closure carries them and the device sends nothing.
+    ``batch`` marks a strided-batched launch: it enters the shape class
+    ('BxMxKxN') and multiplies the modeled bytes (one launch moving the
+    whole stack).
     """
     if not _reg.enabled():
         return
-    labels = gemm_labels(scheme, backend, impl, m, k, n, mesh_shape)
+    labels = gemm_labels(scheme, backend, impl, m, k, n, mesh_shape, batch)
     tag = gemm_tag(scheme, count, backend, impl)
     try:
         nbytes = modeled_gemm_bytes(scheme, count, m, k, n, out_bytes)
+        nbytes *= batch or 1
     except Exception:
         nbytes = 0
     REGISTRY.inc(EMULATED_TRACES, 1, labels)
     if nbytes:
-        REGISTRY.inc(MODELED_BYTES_TRACED, nbytes, {"tag": tag})
+        REGISTRY.inc(MODELED_BYTES_TRACED, nbytes,
+                     {"tag": tag, "site": labels["site"]})
     import jax
 
     jax.debug.callback(functools.partial(_bump_gemm, labels, nbytes))

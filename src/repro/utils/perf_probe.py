@@ -23,11 +23,15 @@ from repro.models.common import GemmPolicy
 from repro.utils import roofline
 
 
-def compile_cell(arch_id, shape_name, gemm="native", multi=False):
+def compile_cell(arch_id, shape_name, gemm=None, multi=False):
     arch = configs.get_config(arch_id)
     shape = [s for s in arch.shapes() if s.name == shape_name][0]
     mesh = make_production_mesh(multi_pod=multi)
-    policy = GemmPolicy(default=api.precision(gemm))
+    # An explicit --gemm wins; otherwise the arch's own gemm_sites table
+    # (the -emu zoo variants) decides, which for plain archs is an empty
+    # policy that defers to the ambient resolver (native by default).
+    policy = (GemmPolicy(default=api.precision(gemm)) if gemm
+              else arch.gemm_policy())
     with mesh:
         if shape.kind == "train":
             step = S.make_train_step(arch, mesh, shape, policy, donate=False)
@@ -47,7 +51,7 @@ def compile_cell(arch_id, shape_name, gemm="native", multi=False):
 # Telemetry scope tags carry load-bearing digits (emugemm/ozaki1-p4/...):
 # the generic digit-stripping normalization below must not turn them into
 # the ambiguous "emugemm/ozaki-p/...".
-_EMUTAG_RE = re.compile(r"emugemm/[^/\s\"]+/[^/\s\"]+/[^/\s\"]+")
+_EMUTAG_RE = re.compile(r"emugemm/[^/\s\"(),]+/[^/\s\"(),]+/[^/\s\"(),]+")
 _HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
 
 
@@ -165,7 +169,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
-    ap.add_argument("--gemm", default="native")
+    ap.add_argument("--gemm", default=None,
+                    help="precision spec override; omitted, the arch "
+                         "config's gemm_sites table decides (native for "
+                         "plain archs)")
     ap.add_argument("--top", type=int, default=20)
     ap.add_argument("--by-emulation-site", action="store_true",
                     help="group attributed HLO bytes on emugemm scope "
@@ -180,35 +187,45 @@ def main():
         telemetry.enable()
         for labels, v in telemetry.REGISTRY.series(
                 _tele.MODELED_BYTES_TRACED):
-            tag = labels.get("tag", "?")
-            before[tag] = before.get(tag, 0.0) + v
+            key = (labels.get("tag", "?"), labels.get("site", "-"))
+            before[key] = before.get(key, 0.0) + v
     compiled = compile_cell(args.arch, args.shape, args.gemm)
     txt = compiled.as_text()
     total = roofline.analyze_hlo(txt)
     print(f"flops/dev {total['flops']:.3e}  mem {total['mem_bytes']/1e9:.1f}GB"
           f"  coll {total['coll_bytes']/1e9:.1f}GB")
     if args.by_emulation_site:
-        # Modeled bytes: the per-tag analytic fused-traffic counters the
-        # trace just recorded (delta against any pre-existing state).
+        # Modeled bytes: the per-(tag, site) analytic fused-traffic
+        # counters the trace just recorded (delta against pre-existing
+        # state).  The site comes from telemetry.call_site scopes — the
+        # model-zoo einsum sites (attn_qk, attn_av, moe_gate,
+        # moe_expert, mla_latent, ssd_state) plus the launcher's dense
+        # projections — so one emugemm tag fans out into per-site rows.
         modeled = {}
         for labels, v in telemetry.REGISTRY.series(
                 _tele.MODELED_BYTES_TRACED):
-            tag = labels.get("tag", "?")
-            modeled[tag] = modeled.get(tag, 0.0) + v
-        modeled = {t: v - before.get(t, 0.0) for t, v in modeled.items()
-                   if v - before.get(t, 0.0) > 0}
+            key = (labels.get("tag", "?"), labels.get("site", "-"))
+            modeled[key] = modeled.get(key, 0.0) + v
+        modeled = {k: v - before.get(k, 0.0) for k, v in modeled.items()
+                   if v - before.get(k, 0.0) > 0}
         attributed = attribute_emulation(txt)
-        tags = sorted(set(modeled) | set(attributed))
+        tags = sorted({t for t, _ in modeled} | set(attributed))
         if not tags:
             print("no emugemm scopes in this cell (gemm=native?)")
         else:
+            # HLO op_name scope tags carry no site segment, so the hlo
+            # columns are per-tag totals printed on the tag's first row.
             print(f"{'modeled GB':>12} {'hlo mem GB':>12} "
-                  f"{'hlo coll GB':>12}  tag")
+                  f"{'hlo coll GB':>12}  {'site':<12} tag")
             for tag in tags:
                 a = attributed.get(tag, {})
-                print(f"{modeled.get(tag, 0.0)/1e9:12.3f} "
-                      f"{a.get('mem_bytes', 0.0)/1e9:12.3f} "
-                      f"{a.get('coll_bytes', 0.0)/1e9:12.3f}  {tag}")
+                sites = sorted(s for t, s in modeled if t == tag) or ["-"]
+                for i, site in enumerate(sites):
+                    hlo_mem = a.get("mem_bytes", 0.0) if i == 0 else 0.0
+                    hlo_coll = a.get("coll_bytes", 0.0) if i == 0 else 0.0
+                    print(f"{modeled.get((tag, site), 0.0)/1e9:12.3f} "
+                          f"{hlo_mem/1e9:12.3f} "
+                          f"{hlo_coll/1e9:12.3f}  {site:<12} {tag}")
         return
     for (opcode, tag), b in attribute(txt, args.top):
         print(f"{b/1e9:10.1f} GB  {opcode:20s} {tag}")

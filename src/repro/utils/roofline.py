@@ -316,6 +316,46 @@ def projected_throughput(m: int, k: int, n: int, p: int,
     return out
 
 
+def batched_projected_throughput(m: int, k: int, n: int, batch: int, p: int,
+                                 scheme: str = "ozaki1",
+                                 backend: str = "gpu",
+                                 out_bytes: int = 4) -> dict:
+    """Roofline projection of one strided-batched emulated GEMM stack,
+    fused single-launch vs the vmapped 2-D fallback.
+
+    Uses the batched traffic models (``repro.core.traffic
+    .scheme{1,2}_batched_bytes``): the compute side is identical on both
+    routes (B x the per-element int8 flops), so the projected columns
+    differ only by the decomposition-byte term — which is exactly what
+    the batched bench cells gate.  Per hardware entry the cell carries
+    ``fused_projected_tops`` / ``vmap_projected_tops`` and their ratio
+    ``projected_speedup``.
+    """
+    from repro.core import traffic as T
+    s = T.GemmShape(m, n, k)
+    if scheme == "ozaki1":
+        model = T.scheme1_batched_bytes(s, p, batch, out_bytes)
+        flops = batch * T.scheme1_flops(s, p)
+    elif scheme == "ozaki2":
+        model = T.scheme2_batched_bytes(s, p, batch, out_bytes)
+        flops = batch * T.scheme2_flops(s, p)
+    else:
+        raise ValueError(f"no batched projection for scheme {scheme!r}")
+    out = {"backend": backend, "scheme": scheme, "batch": int(batch),
+           "int8_flops": float(flops), "paths": model, "hardware": {}}
+    for key, peak in T.backend_peaks(backend).items():
+        cell = {"name": peak.name}
+        for path in ("fused", "vmap"):
+            t = max(flops / peak.int8_ops,
+                    model[path]["total_bytes"] / peak.hbm_bw)
+            cell[f"{path}_projected_tops"] = flops / t / 1e12 if t else 0.0
+        vm = cell["vmap_projected_tops"]
+        cell["projected_speedup"] = (
+            cell["fused_projected_tops"] / vm if vm else 0.0)
+        out["hardware"][key] = cell
+    return out
+
+
 def sharded_projected_throughput(m: int, k: int, n: int, p: int,
                                  mesh_shape,
                                  partition: str = "column",

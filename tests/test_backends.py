@@ -365,6 +365,153 @@ def test_prepared_residues_cross_jit_and_refuse_mismatched_scheme(
 
 
 # ---------------------------------------------------------------------------
+# Strided-batched fused launches: one pallas_call over (batch, bM, bN),
+# bit-identical to the vmapped 2-D dispatch (the batched kernels run the
+# unchanged 2-D kernel body per batch grid step).
+# ---------------------------------------------------------------------------
+
+def _vmap_ref(a, b, cfg):
+    return jax.vmap(
+        lambda x, y: dispatch.emulated_matmul(x, y, cfg=cfg))(a, b)
+
+
+def test_backend_batched_capabilities():
+    assert backends.get_backend("gpu").capabilities.batched
+    assert backends.get_backend("xla").capabilities.batched
+    # Mosaic's sequential-K VMEM scratch accumulator cannot re-zero per
+    # batch element; the TPU backend keeps the vmap route.
+    assert not backends.get_backend("tpu").capabilities.batched
+
+
+@pytest.mark.parametrize("p", [3, 4, 6])
+def test_batched_scheme1_bit_parity_aligned(make_matrix, p):
+    a = jnp.asarray(make_matrix((4, 64, 96)))
+    b = jnp.asarray(make_matrix((4, 96, 80)))
+    cfg = EmulationConfig(scheme="ozaki1", p=p, backend="gpu")
+    assert dispatch.batched_fused_eligible(a, b, cfg)
+    plan = dispatch.plan_emulated_batched(a, b, cfg)
+    assert plan.batch == 4 and plan.backend == "gpu"
+    out = dispatch.emulated_matmul_batched(a, b, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(_vmap_ref(a, b, cfg)))
+
+
+@pytest.mark.parametrize("p", [4, 6])
+def test_batched_scheme2_bit_parity_aligned(make_matrix, p):
+    a = jnp.asarray(make_matrix((3, 64, 96)))
+    b = jnp.asarray(make_matrix((3, 96, 80)))
+    cfg = EmulationConfig(scheme="ozaki2", p=p, backend="gpu")
+    assert dispatch.batched_fused_eligible(a, b, cfg)
+    out = dispatch.emulated_matmul_batched(a, b, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(_vmap_ref(a, b, cfg)))
+
+
+@pytest.mark.parametrize("scheme,p", [("ozaki1", 4), ("ozaki2", 6)])
+def test_batched_bit_parity_unaligned_padded(make_matrix, scheme, p):
+    """Non-16-aligned trailing axes pad once for the whole stack, run one
+    strided-batched launch, slice back — still bit-identical to vmapping
+    the (also padding) 2-D dispatch per element."""
+    a = jnp.asarray(make_matrix((3, 50, 70)))
+    b = jnp.asarray(make_matrix((3, 70, 30)))
+    cfg = EmulationConfig(scheme=scheme, p=p, backend="gpu")
+    out = dispatch.emulated_matmul_batched(a, b, cfg=cfg)
+    assert out.shape == (3, 50, 30)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(_vmap_ref(a, b, cfg)))
+
+
+def test_batched_collapses_higher_leading_axes(make_matrix):
+    """(2, 3, M, K) @ (2, 3, K, N): leading axes collapse into one batch
+    dimension for a single launch, and the result folds back."""
+    a = jnp.asarray(make_matrix((2, 3, 32, 64)))
+    b = jnp.asarray(make_matrix((2, 3, 64, 48)))
+    cfg = EmulationConfig(scheme="ozaki1", p=4, backend="gpu")
+    out = dispatch.emulated_matmul_batched(a, b, cfg=cfg)
+    assert out.shape == (2, 3, 32, 48)
+    ref = _vmap_ref(a.reshape(6, 32, 64), b.reshape(6, 64, 48), cfg)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.reshape(2, 3, 32, 48)))
+
+
+def test_batched_grad_matches_vmapped_2d(make_matrix):
+    """The batched custom VJP re-enters the batched emulated path for
+    both backward GEMMs — gradients bit-identical to differentiating the
+    vmapped 2-D emulated_dot."""
+    from repro.core import emulated
+    a = jnp.asarray(make_matrix((2, 32, 48)))
+    b = jnp.asarray(make_matrix((2, 48, 32)))
+    cfg = EmulationConfig(scheme="ozaki1", p=4, backend="gpu")
+
+    def loss_batched(a, b):
+        return emulated.emulated_dot_batched(a, b, cfg).sum()
+
+    def loss_vmap(a, b):
+        return jax.vmap(
+            lambda x, y: emulated.emulated_dot(x, y, cfg))(a, b).sum()
+
+    ga, gb = jax.grad(loss_batched, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(loss_vmap, argnums=(0, 1))(a, b)
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(ra))
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(rb))
+
+
+def test_batched_prepared_rhs_flattens_to_one_launch(make_matrix):
+    """A prepared (2-D) rhs under a batched lhs: leading axes flatten
+    into M (activations @ weights) — bit-identical to the 2-D prepared
+    dispatch on the flattened stack."""
+    from repro.kernels import prepared
+    a = jnp.asarray(make_matrix((3, 32, 64)))
+    b = jnp.asarray(make_matrix((64, 48)))
+    cfg = EmulationConfig(scheme="ozaki2", p=4, backend="gpu")
+    prep = prepared.prepare_rhs(b, cfg)
+    out = dispatch.emulated_matmul_batched(a, prep, cfg=cfg)
+    assert out.shape == (3, 32, 48)
+    ref = dispatch.emulated_matmul(a.reshape(-1, 64), prep, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.reshape(3, 32, 48)))
+
+
+def test_batched_ineligible_configs_keep_vmap_route(make_matrix):
+    """Guarded configs and complex operands stay on the per-element vmap
+    fallback (no strided-batched lowering), and still agree with it."""
+    a = _complex(make_matrix, (2, 32, 64))
+    b = _complex(make_matrix, (2, 64, 48))
+    cfg = EmulationConfig(scheme="ozaki2", p=4, backend="gpu")
+    assert not dispatch.batched_fused_eligible(a, b, cfg)
+    out = dispatch.emulated_matmul_batched(a, b, cfg=cfg,
+                                           out_dtype=jnp.complex64)
+    assert out.shape == (2, 32, 48) and out.dtype == jnp.complex64
+
+
+def test_fallback_warning_dedupes_across_batch_sizes(make_matrix):
+    """The fused-fallback warning keys on the 2-D problem (K, N), not the
+    full operand shape: sweeping batch/M through the same falling-back
+    call-site fires exactly one warning, not one per shape."""
+    import warnings as _warnings
+    b = jnp.asarray(make_matrix((64, 48)))
+    cfg = EmulationConfig(scheme="ozaki2", p=4, moduli=_WIDE_MODULI,
+                          backend="gpu")
+    dispatch.fallback_warnings_clear()
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
+        for m in (32, 128, 256):
+            a = jnp.asarray(make_matrix((m, 64)))
+            assert dispatch.auto_fused_matmul(a, b, cfg) is None
+    runtime = [w for w in caught if issubclass(w.category, RuntimeWarning)]
+    assert len(runtime) == 1
+    # a different 2-D problem (new N) is a new site: it warns again
+    with _warnings.catch_warnings(record=True) as caught2:
+        _warnings.simplefilter("always")
+        b2 = jnp.asarray(make_matrix((64, 96)))
+        a = jnp.asarray(make_matrix((32, 64)))
+        assert dispatch.auto_fused_matmul(a, b2, cfg) is None
+    runtime2 = [w for w in caught2
+                if issubclass(w.category, RuntimeWarning)]
+    assert len(runtime2) == 1
+
+
+# ---------------------------------------------------------------------------
 # resolve_policy: (scheme, backend) clamping.
 # ---------------------------------------------------------------------------
 

@@ -123,6 +123,79 @@ def test_vision_stub_prefix_influences_output(rng):
     assert np.abs(np.asarray(l1 - l2)).max() > 1e-6
 
 
+def test_emu_configs_resolve_per_site_policies():
+    """The -emu zoo variants ship their emulation choices as ArchConfig
+    gemm_sites tables: 'default' sets the policy default, other rows
+    become per-site overrides (the repro.precision spec grammar)."""
+    for arch_id in ("olmo-1b-emu", "qwen2-moe-a2.7b-emu"):
+        for cfg in (configs.get_config(arch_id),
+                    configs.get_smoke_config(arch_id)):
+            pol = cfg.gemm_policy()
+            assert pol.default is not None
+            assert pol.default.scheme == "ozaki1"
+            assert pol.default.p == 4 and pol.default.cache_weights
+            overrides = dict(pol.overrides)
+            assert overrides["attn_qk"].scheme == "ozaki2"
+            assert overrides["attn_qk"].p == 6
+            assert overrides["attn_av"].scheme == "ozaki1"
+    moe = dict(configs.get_config("qwen2-moe-a2.7b-emu")
+               .gemm_policy().overrides)
+    assert moe["moe_expert"].scheme == "ozaki1"
+    assert moe["moe_gate"].scheme == "ozaki2"
+    # plain archs carry an empty table -> the bare ambient-deferring
+    # policy (native unless a repro.emulation scope / env says otherwise)
+    plain = configs.get_config("olmo-1b").gemm_policy()
+    assert plain.default is None and plain.overrides == ()
+
+
+def test_policy_einsum_native_is_bitwise_jnp_einsum(rng):
+    """The native path of the model-zoo einsum shim is EXACTLY
+    jnp.einsum — no emulation machinery touches reference runs."""
+    from repro.models.common import NATIVE_POLICY, policy_einsum
+    q = jnp.asarray(rng.standard_normal((2, 4, 2, 3, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 5, 2, 8)), jnp.float32)
+    got = policy_einsum("bqkgd,bjkd->bkgqj", q, k, NATIVE_POLICY,
+                        "attn_qk", pet=jnp.float32)
+    want = jnp.einsum("bqkgd,bjkd->bkgqj", q, k,
+                      preferred_element_type=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_forward_bit_identical_under_native_site_resolution(rng):
+    """A bare GemmPolicy() (empty gemm_sites table) resolving in a
+    native ambient must produce bit-identical model outputs to the
+    explicit NATIVE_POLICY — wiring the attention/MoE/MLA/SSD einsums
+    through policy_einsum changed nothing for native runs."""
+    import os
+    from repro.models.common import GemmPolicy
+    assert not os.environ.get("REPRO_EMULATION")
+    for arch in ("olmo-1b", "qwen2-moe-a2.7b", "mamba2-780m"):
+        m = configs.get_smoke_config(arch).model
+        params = M.init_params(jax.random.PRNGKey(0), m)
+        inputs = _inputs(m, rng)
+        ref, _, _ = M.forward_train(params, m, inputs)
+        got, _, _ = M.forward_train(params, m, inputs,
+                                    policy=GemmPolicy())
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_emu_smoke_forward_runs_emulated_sites(rng):
+    """The emu smoke config's own policy drives every wired site through
+    the emulated path: finite logits, close to (not bitwise) native."""
+    cfg = configs.get_smoke_config("qwen2-moe-a2.7b-emu")
+    m = cfg.model
+    params = M.init_params(jax.random.PRNGKey(0), m)
+    inputs = _inputs(m, rng)
+    ref, _, _ = M.forward_train(params, m, inputs)
+    got, _, _ = M.forward_train(params, m, inputs,
+                                policy=cfg.gemm_policy())
+    got_np, ref_np = np.asarray(got), np.asarray(ref)
+    assert np.isfinite(got_np).all()
+    # near-native accuracy (abs: near-zero logits have wild rel error)
+    np.testing.assert_allclose(got_np, ref_np, rtol=0, atol=1e-3)
+    assert not np.array_equal(got_np, ref_np)  # emulation actually ran
+
+
 def test_local_window_attention_limits_context(rng):
     """recurrentgemma attention layers: tokens beyond the window cannot
     influence the current logit through the attention path. (They still
